@@ -1,0 +1,63 @@
+"""Paper Fig. 3: reduction time vs node count and vs density, per algorithm.
+
+Two views:
+  (a) alpha-beta model on TPU v5e constants (the deployable prediction),
+  (b) measured wall time of the real shard_map collectives on 8 host
+      devices (relative ordering check; absolute CPU numbers are not TPU).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost_model as cm
+from repro.core.allreduce import make_sparse_allreduce
+
+
+def _modeled() -> list[tuple[str, float, str]]:
+    rows = []
+    n = 1 << 24  # 16M (paper Fig. 3 uses N=16M)
+    for p in (8, 64, 256, 1024):
+        k = int(0.00781 * n)  # d=0.781% per node (paper Fig. 3 left)
+        t_rd = cm.t_ssar_recursive_double(p, k, n)[1]
+        t_sa = cm.t_ssar_split_allgather(p, k, n)[1]
+        t_ds = sum(cm.t_dsar_split_allgather(p, k, n, value_bits=4)) / 2
+        t_dn = cm.t_dense_allreduce(p, n)
+        best = cm.select_algorithm(p, k, n, value_bits=4)
+        rows.append((
+            f"fig3_model_P{p}", t_dn * 1e6,
+            f"rec_dbl={t_rd*1e3:.2f}ms,split_ag={t_sa*1e3:.2f}ms,"
+            f"dsar4bit={t_ds*1e3:.2f}ms,dense={t_dn*1e3:.2f}ms,auto={best}",
+        ))
+    return rows
+
+
+def _measured() -> list[tuple[str, float, str]]:
+    from jax.sharding import AxisType
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    n, b = 1 << 18, 512
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8, n))
+    rows = []
+    for algo in ("ssar_recursive_double", "ssar_split_allgather",
+                 "dsar_split_allgather", "dense"):
+        for k in (1, 8):
+            f = make_sparse_allreduce(mesh, "data", n, k, b, algorithm=algo)
+            out = f(x.reshape(-1), None)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            reps = 5
+            for _ in range(reps):
+                out = f(x.reshape(-1), None)
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / reps * 1e6
+            rows.append((f"fig3_measured_{algo}_k{k}", us,
+                         f"N={n},P=8,density={k/b:.3%}"))
+    return rows
+
+
+def run() -> list[tuple[str, float, str]]:
+    return _modeled() + _measured()

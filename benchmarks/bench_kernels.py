@@ -1,0 +1,45 @@
+"""Kernel microbenchmarks: bucket_topk / qsgd / bucket_scatter wall time
+(jnp reference path on CPU — interpret-mode Pallas timing is not
+meaningful; TPU timing comes from the roofline model in §Roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.bucket_topk.ops import bucket_topk
+from repro.kernels.bucket_scatter.ops import bucket_scatter
+from repro.kernels.qsgd_pack.ops import qsgd_pack
+from repro.kernels.qsgd_unpack.ops import qsgd_unpack
+
+
+def _time(fn, *args, reps=10):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list[tuple[str, float, str]]:
+    key = jax.random.PRNGKey(0)
+    nb, b = 2048, 512  # 1M elements
+    x = jax.random.normal(key, (nb, b))
+    rand = jax.random.bits(key, (nb, 1024), dtype=jnp.uint32)
+    xq = jax.random.normal(key, (nb, 1024))
+    rows = []
+    us = _time(lambda a: bucket_topk(a, 4, impl="ref"), x)
+    rows.append(("kernel_bucket_topk_1M_k4", us, f"{nb*b/us:.0f} elem/us"))
+    us = _time(lambda a, r: qsgd_pack(a, r, 4, impl="ref"), xq, rand)
+    rows.append(("kernel_qsgd_pack_2M_4bit", us, f"{nb*1024/us:.0f} elem/us"))
+    p, s = qsgd_pack(xq, rand, 4, impl="ref")
+    us = _time(lambda a, c: qsgd_unpack(a, c, 4, impl="ref"), p, s)
+    rows.append(("kernel_qsgd_unpack_2M_4bit", us, f"{nb*1024/us:.0f} elem/us"))
+    _, lidx, _ = bucket_topk(x, 4, impl="ref")
+    val = jax.random.normal(key, (nb, 4))
+    us = _time(lambda i, v: bucket_scatter(i, v, b, impl="ref"), lidx, val)
+    rows.append(("kernel_bucket_scatter_1M", us, f"{nb*b/us:.0f} elem/us"))
+    return rows

@@ -1,0 +1,89 @@
+"""Dry-run profiler: multiplier-weighted HBM/collective attribution per
+computation + top ops — the 'profile' used by the §Perf hypothesis loop.
+
+  PYTHONPATH=src python -m benchmarks.profile_cell --arch moonshot-v1-16b-a3b \
+      --shape train_4k [--multi-pod] [--sync dense]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+from collections import defaultdict
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.dryrun import lower_cell
+from repro.utils import hlo_cost as hc
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--sync", default=None)
+    ap.add_argument("--top", type=int, default=10)
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    with mesh:
+        lowered, meta = lower_cell(args.arch, args.shape, mesh, args.sync)
+        compiled = lowered.compile()
+    hlo = compiled.as_text()
+    comps, entry = hc.parse_module(hlo)
+    mc = hc.total_cost(hlo)
+    print(f"totals/chip: flops={mc.flops:.3e} hbm={mc.hbm_bytes:.3e} "
+          f"coll={mc.coll_bytes:.3e}")
+    print("coll by kind:", {k: f"{v:.2e}" for k, v in mc.coll_by_kind.items()})
+
+    eff_h, eff_c = defaultdict(float), defaultdict(float)
+
+    def walk(name, mult):
+        c = comps.get(name)
+        if c is None:
+            return
+        eff_h[name] += (c.hbm_bytes + sum(
+            comps.get(ch, hc.CompCost()).boundary_bytes()
+            for k, ch, _ in c.children if k == "fusion")) * mult
+        eff_c[name] += sum(c.coll_by_kind.values()) * mult
+        for kind, child, cond in c.children:
+            m = mult * ((comps.get(cond, hc.CompCost()).max_const or 1)
+                        if kind == "while" else 1)
+            if kind in ("fusion", "call"):
+                continue
+            walk(child, m)
+
+    walk(entry, 1.0)
+
+    for label, eff in (("HBM", eff_h), ("COLLECTIVE", eff_c)):
+        rows = sorted(eff.items(), key=lambda kv: -kv[1])[:4]
+        print(f"--- weighted {label} by computation")
+        for n, b in rows:
+            if b:
+                print(f"  {b:.3e}  {n[:70]}")
+        if not rows or not rows[0][1]:
+            continue
+        heavy = rows[0][0]
+        idx = hlo.find(heavy)
+        cl = []
+        for ln in hlo[idx:].splitlines()[1:]:
+            if ln.strip() == "}":
+                break
+            m = hc._RESULT_RE.match(ln)
+            km = hc._OP_KIND_RE.search(ln)
+            kind = km.group(1) if km else "?"
+            if m and not m.group(2) and kind not in hc._SKIP_HBM:
+                want = (kind in hc._COLLECTIVES if label == "COLLECTIVE"
+                        else True)
+                if want:
+                    cl.append((hc._nbytes(m.group(3), hc._dims(m.group(4))),
+                               kind, ln.strip()[:95]))
+        print(f"    top ops of {heavy[:45]}:")
+        for b, kind, ln in sorted(cl, reverse=True)[: args.top]:
+            print(f"    {b:.2e} [{kind}] {ln}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Heavy modules can be filtered:
+  PYTHONPATH=src python -m benchmarks.run [--only density,allreduce,...]
+"""
+from __future__ import annotations
+
+import os
+
+# The collective benchmarks (Fig. 3 / Table 2 / Fig. 4) need real
+# multi-device shard_map execution: 8 host devices (NOT the 512-device
+# dry-run flag, which stays local to launch/dryrun.py).
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+import sys
+import traceback
+
+MODULES = {
+    "density": "benchmarks.bench_density",          # Fig. 1 / Fig. 7
+    "allreduce": "benchmarks.bench_allreduce",      # Fig. 3
+    "classification": "benchmarks.bench_classification",  # Table 2
+    "convergence": "benchmarks.bench_convergence",  # Figs. 4/5
+    "volume": "benchmarks.bench_volume",            # §8.3/8.4 bandwidth
+    "kernels": "benchmarks.bench_kernels",          # kernel microbench
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=str, default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(MODULES)
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        modname = MODULES[name]
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for row_name, us, derived in mod.run():
+                print(f"{row_name},{us:.1f},{derived}")
+            sys.stdout.flush()
+        except Exception as e:  # pragma: no cover
+            failed.append(name)
+            print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmark modules failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Batched serving demo: prefill a batch of prompts, decode greedily with
+the sharded KV cache (TP over heads, DP over request slots).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import numpy as np
+
+from repro.launch.mesh import make_host_mesh
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.serve.engine import ServeEngine
+
+import jax.numpy as jnp
+
+
+def main():
+    mesh = make_host_mesh(data=4, model=2)
+    cfg = ModelConfig(name="serve-demo", family="dense", num_layers=4,
+                      d_model=256, num_heads=8, num_kv_heads=4, d_ff=512,
+                      vocab_size=2048, dtype=jnp.float32,
+                      param_dtype=jnp.float32, max_seq_len=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, mesh, params, cache_len=128, batch_size=8)
+
+    prompts = np.random.default_rng(0).integers(0, 2048, (8, 16)).astype(np.int32)
+    t0 = time.perf_counter()
+    out = engine.generate(prompts, max_new_tokens=24)
+    dt = time.perf_counter() - t0
+    print(f"generated {out.shape} tokens for 8 requests in {dt:.2f}s "
+          f"({out.size/dt:.0f} tok/s on emulated CPU devices)")
+    print("first request:", out[0].tolist())
+    # deterministic greedy decode
+    out2 = engine.generate(prompts, max_new_tokens=24)
+    assert np.array_equal(out, out2)
+    print("greedy decode is deterministic: OK")
+
+
+if __name__ == "__main__":
+    main()

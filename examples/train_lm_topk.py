@@ -1,0 +1,80 @@
+"""End-to-end training driver: a ~100M-parameter LM with the full
+production stack — SparCML Quantized-TopK gradient sync, WSD schedule,
+ZeRO-1 optimizer sharding, checkpointing + automatic resume, straggler
+watchdog, deterministic data pipeline.
+
+    PYTHONPATH=src python examples/train_lm_topk.py --steps 300
+    PYTHONPATH=src python examples/train_lm_topk.py --fast   # ~12M params
+
+A crash / Ctrl-C mid-run resumes from the latest checkpoint on restart
+(same command). ~100M x 300 steps is a few hours on this 1-core CPU
+container; --fast demonstrates the identical code path in ~2 minutes.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse
+
+import jax.numpy as jnp
+
+from repro.core.compressor import SyncConfig
+from repro.data.pipeline import DataConfig
+from repro.launch.mesh import make_host_mesh
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.optim.optimizers import OptimizerConfig
+from repro.optim.schedule import ScheduleConfig
+from repro.train.state import TrainConfig
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--ckpt-dir", type=str, default="/tmp/sparcml_lm_ckpt")
+    args = ap.parse_args()
+
+    if args.fast:
+        cfg = ModelConfig(name="lm-12m", family="dense", num_layers=4,
+                          d_model=256, num_heads=8, num_kv_heads=4, d_ff=512,
+                          vocab_size=2048, dtype=jnp.float32,
+                          param_dtype=jnp.float32, max_seq_len=256)
+        data = DataConfig(global_batch=16, seq_len=128, vocab_size=2048)
+        steps = min(args.steps, 60)
+    else:
+        # ~100M: 12 layers x d=768 (GPT-2-small-like with GQA + SwiGLU)
+        cfg = ModelConfig(name="lm-100m", family="dense", num_layers=12,
+                          d_model=768, num_heads=12, num_kv_heads=4,
+                          d_ff=2048, vocab_size=32768, dtype=jnp.float32,
+                          param_dtype=jnp.float32, max_seq_len=1024)
+        data = DataConfig(global_batch=32, seq_len=512, vocab_size=32768)
+        steps = args.steps
+
+    model = build_model(cfg)
+    print(f"model: {cfg.name}, {cfg.param_count()/1e6:.1f}M params")
+
+    tcfg = TrainConfig(
+        sync=SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=512,
+                        algorithm="dsar_split_allgather", qsgd_bits=4,
+                        min_sparse_size=65536, impl="ref"),
+        optimizer=OptimizerConfig(kind="adamw"),
+        schedule=ScheduleConfig(kind="wsd", peak_lr=6e-4, warmup_steps=20,
+                                total_steps=steps),
+        microbatches=2,
+        zero1=True,
+    )
+    mesh = make_host_mesh(data=4, model=2)
+    trainer = Trainer(model, tcfg, mesh, data, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=25)
+    start = trainer.init_or_resume()
+    print(f"starting at step {start} (resume={'yes' if start else 'no'})")
+    log = trainer.run(steps)
+    print(f"done: step {steps}, loss {log.losses[0]:.3f} -> {log.losses[-1]:.3f}, "
+          f"median step {sorted(log.step_times)[len(log.step_times)//2]*1e3:.0f} ms, "
+          f"restarts={log.restarts}, stragglers={len(log.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

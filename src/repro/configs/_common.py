@@ -1,0 +1,35 @@
+"""Shared helpers for arch config modules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.compressor import SyncConfig
+from repro.optim.optimizers import OptimizerConfig
+from repro.optim.schedule import ScheduleConfig
+from repro.train.state import TrainConfig
+
+
+def default_sync(mode: str = "sparcml", k: int = 4, qsgd_bits=4) -> SyncConfig:
+    """The paper-faithful Quantized TopK setting: k/512 per bucket (the ASR
+    experiment uses 4/512), DSAR with a 4-bit QSGD second phase."""
+    return SyncConfig(
+        mode=mode, k_per_bucket=k, bucket_size=512,
+        algorithm="dsar_split_allgather" if mode == "sparcml" else "dense",
+        qsgd_bits=qsgd_bits if mode == "sparcml" else None,
+        min_sparse_size=65536, impl="ref",
+    )
+
+
+def make_train_config(*, sync_mode: str, schedule_kind: str = "cosine",
+                      peak_lr: float = 3e-4, opt_dtype=jnp.float32,
+                      microbatches: int = 1, fsdp: bool = False,
+                      k: int = 4, qsgd_bits=4) -> TrainConfig:
+    return TrainConfig(
+        sync=default_sync(sync_mode, k=k, qsgd_bits=qsgd_bits),
+        optimizer=OptimizerConfig(kind="adamw", state_dtype=opt_dtype),
+        schedule=ScheduleConfig(kind=schedule_kind, peak_lr=peak_lr,
+                                warmup_steps=200, total_steps=20000),
+        microbatches=microbatches,
+        fsdp=fsdp,
+        zero1=(sync_mode == "sparcml"),
+    )

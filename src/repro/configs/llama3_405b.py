@@ -1,0 +1,36 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256 [arXiv:2407.21783].
+
+Arch-applicability note (DESIGN.md §3/§4): at 405B the per-rank
+error-feedback residual of TopK SGD is O(model size) per data rank, which
+is incompatible with the ZeRO-3 placement this model needs to fit a 256-chip
+pod — so the full-scale train cell uses dense sync (FSDP) with bf16
+optimizer state; sparcml is exercised on the reduced smoke config.
+"""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+from repro.configs._common import make_train_config
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="llama3-405b", family="dense",
+        num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8,
+        head_dim=128, d_ff=53248, vocab_size=128256,
+        rope_theta=500000.0, dtype=jnp.bfloat16, param_dtype=jnp.bfloat16,
+        max_seq_len=131072,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config() -> ModelConfig:
+    return config(num_layers=6, d_model=128, num_heads=8, num_kv_heads=2,
+                  head_dim=16, d_ff=256, vocab_size=512, dtype=jnp.float32,
+                  param_dtype=jnp.float32, max_seq_len=128)
+
+
+def train_config(mesh=None, **kw):
+    kw.setdefault("opt_dtype", jnp.bfloat16)   # fits 16 GB HBM (DESIGN §2.3)
+    kw.setdefault("microbatches", 16)
+    return make_train_config(sync_mode="dense", fsdp=True, peak_lr=8e-5, **kw)

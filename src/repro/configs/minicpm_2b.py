@@ -1,0 +1,30 @@
+"""minicpm-2b [dense]: 40L d_model=2304 36H (GQA kv=36) d_ff=5760
+vocab=122753 — WSD schedule, tied embeddings (llama-like) [arXiv:2404.06395]."""
+import jax.numpy as jnp
+from repro.models.config import ModelConfig
+from repro.configs._common import make_train_config
+
+
+def config(**overrides) -> ModelConfig:
+    kw = dict(
+        name="minicpm-2b", family="dense",
+        num_layers=40, d_model=2304, num_heads=36, num_kv_heads=36,
+        head_dim=64, d_ff=5760, vocab_size=122753,
+        tie_embeddings=True, dtype=jnp.bfloat16, param_dtype=jnp.bfloat16,
+        max_seq_len=65536,
+    )
+    kw.update(overrides)
+    return ModelConfig(**kw)
+
+
+def smoke_config() -> ModelConfig:
+    return config(num_layers=4, d_model=72, num_heads=6, num_kv_heads=6,
+                  head_dim=12, d_ff=144, vocab_size=512, dtype=jnp.float32,
+                  param_dtype=jnp.float32, max_seq_len=128)
+
+
+def train_config(mesh=None, **kw):
+    # the arch's signature WSD schedule
+    kw.setdefault("microbatches", 16)
+    return make_train_config(sync_mode="sparcml", schedule_kind="wsd",
+                             peak_lr=1e-3, **kw)

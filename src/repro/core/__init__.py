@@ -1,0 +1,37 @@
+"""SparCML core: sparse streams, TopK+EF, QSGD, sparse collectives.
+
+The paper's primary contribution implemented as composable JAX modules:
+
+- sparse_stream: the data representation (§5.1)
+- topk:          bucketed TopK sparsification + error feedback (Alg. 2)
+- qsgd:          bucketed stochastic quantization (§6)
+- allreduce:     SSAR_Recursive_double / SSAR_Split_allgather /
+                 DSAR_Split_allgather as shard_map collectives (§5.3)
+- density:       expected fill-in analysis (App. B)
+- cost_model:    alpha-beta bounds + algorithm auto-selection (§5.3)
+- compressor:    gradient-sync layer integrating the above into training
+"""
+
+from repro.core.sparse_stream import (  # noqa: F401
+    SENTINEL,
+    SparseStream,
+    delta_threshold,
+    densify,
+    from_dense_topk,
+    from_mask,
+    merge,
+)
+from repro.core.topk import UniformStream, compress  # noqa: F401
+from repro.core.qsgd import QSGDConfig, dequantize, quantize  # noqa: F401
+from repro.core.allreduce import (  # noqa: F401
+    ReduceOut,
+    dense_allreduce_inside,
+    dsar_split_allgather_inside,
+    make_sparse_allreduce,
+    sparse_allreduce_inside,
+    ssar_recursive_double_inside,
+    ssar_split_allgather_inside,
+)
+from repro.core.compressor import SyncConfig, sync_grads_inside  # noqa: F401
+from repro.core.cost_model import NetworkParams, select_algorithm  # noqa: F401
+from repro.core.density import expected_nnz, reduced_density  # noqa: F401

@@ -1,0 +1,377 @@
+"""SparCML sparse allreduce algorithms (paper §5.3) as JAX collectives.
+
+All ``*_inside`` functions run INSIDE ``jax.shard_map`` over a named mesh
+axis (the data-parallel axis). Standalone jit-level wrappers at the bottom
+build the shard_map for tests/benchmarks.
+
+Algorithms (see DESIGN.md §2.1 for the MPI->ICI mapping):
+
+  ssar_recursive_double   log2(P) rounds of XOR-partner ppermute + sparse
+                          merge; capacity doubles per round following the
+                          paper's |H1|+|H2| bound; switches to a dense
+                          tail when the bound crosses the delta threshold.
+  ssar_split_allgather    all_to_all split by index range (sparse
+                          reduce-scatter), local merge, sparse allgather
+                          (concatenation — ranges are disjoint).
+  dsar_split_allgather    split phase as above, then DENSIFY the owned
+                          range (bucket_scatter kernel) and run a dense
+                          allgather, optionally QSGD-quantized (paper §6).
+  dense_allreduce         psum (the Cray-MPI/NCCL baseline).
+
+The bucket-uniform fast path (k entries per 512-bucket, paper §8.3) routes
+the split phase with pure reshapes — zero sorting, exact slot sizes.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import sparse_stream as ss
+from repro.core.sparse_stream import SENTINEL, SparseStream
+from repro.core.topk import UniformStream
+from repro.core.qsgd import QSGDConfig, quantize, dequantize
+from repro.core.cost_model import select_algorithm
+from repro.kernels.bucket_scatter.ops import bucket_scatter
+
+
+@dataclass(frozen=True)
+class ReduceOut:
+    """Static union: exactly one of (stream, dense) is set (trace-time)."""
+
+    stream: Optional[SparseStream] = None
+    dense: Optional[jax.Array] = None
+
+    def to_dense(self, n: int) -> jax.Array:
+        if self.dense is not None:
+            return self.dense
+        return ss.densify(self.stream, n)
+
+
+def _xor_perm(p: int, dist: int) -> list[tuple[int, int]]:
+    return [(i, i ^ dist) for i in range(p)]
+
+
+def _exchange(stream: SparseStream, axis_name: str, perm) -> SparseStream:
+    idx, val, nnz = jax.lax.ppermute(
+        (stream.idx, stream.val, stream.nnz), axis_name, perm
+    )
+    return SparseStream(idx, val, nnz)
+
+
+# --------------------------------------------------------------------------
+# SSAR_Recursive_double (paper §5.3.1)
+# --------------------------------------------------------------------------
+
+def ssar_recursive_double_inside(
+    stream: SparseStream,
+    *,
+    axis_name: str,
+    p: int,
+    n: int,
+    delta: int | None = None,
+    cap_max: int | None = None,
+) -> ReduceOut:
+    """Recursive doubling over an axis of size p (power of two).
+
+    Capacity schedule: after round t the fill-in bound is k*2^(t+1)
+    (paper §5.1 uses the same |H1|+|H2| bound at runtime). When the bound
+    crosses ``delta`` the representation switches to dense for the remaining
+    rounds (pairwise dense exchange+add keeps partial-group sums correct).
+    """
+    assert p & (p - 1) == 0, "P must be a power of two (paper assumption 2)"
+    if delta is None:
+        delta = ss.delta_threshold(n, jnp.dtype(stream.val.dtype).itemsize)
+    if cap_max is None:
+        cap_max = min(n, delta)
+    rounds = int(math.log2(p))
+    dense: jax.Array | None = None
+    for t in range(rounds):
+        perm = _xor_perm(p, 1 << t)
+        if dense is not None:
+            other = jax.lax.ppermute(dense, axis_name, perm)
+            dense = dense + other
+            continue
+        cap_next = min(2 * stream.capacity, cap_max)
+        if 2 * stream.capacity > delta:
+            # Dynamic fill-in: switch to dense (paper §5.3.3) for the tail.
+            dense = ss.densify(stream, n)
+            other = jax.lax.ppermute(dense, axis_name, perm)
+            dense = dense + other
+            stream = None
+            continue
+        other = _exchange(stream, axis_name, perm)
+        stream = ss.merge(stream, other, cap_next)
+    return ReduceOut(stream=stream, dense=dense)
+
+
+# --------------------------------------------------------------------------
+# Split phase (shared by SSAR/DSAR _Split_allgather), uniform fast path
+# --------------------------------------------------------------------------
+
+def _split_uniform(u: UniformStream, axis_name: str, p: int):
+    """Route bucket rows to their owning range via pure reshape + a2a.
+
+    Range r owns bucket rows [r*nb/p, (r+1)*nb/p). Returns (lidx, val) of
+    shape (p, nb/p, k): contribution of every source rank to MY rows.
+    """
+    nb, k = u.lidx.shape
+    assert nb % p == 0, f"buckets ({nb}) must divide by P ({p})"
+    lidx = u.lidx.reshape(p, nb // p, k)
+    val = u.val.reshape(p, nb // p, k)
+    lidx = jax.lax.all_to_all(lidx, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    val = jax.lax.all_to_all(val, axis_name, split_axis=0, concat_axis=0, tiled=True)
+    return lidx.reshape(p, nb // p, k), val.reshape(p, nb // p, k)
+
+
+def _reduce_range_dense(lidx, val, bucket_size: int, impl: str = "auto") -> jax.Array:
+    """Densify the received (p, rows, k) contributions into my range."""
+    p, rows, k = lidx.shape
+    dense = bucket_scatter(
+        lidx.reshape(p * rows, k), val.reshape(p * rows, k), bucket_size, impl=impl
+    )
+    return dense.reshape(p, rows * bucket_size).sum(axis=0)
+
+
+# --------------------------------------------------------------------------
+# SSAR_Split_allgather (paper §5.3.2)
+# --------------------------------------------------------------------------
+
+def ssar_split_allgather_inside(
+    u: UniformStream,
+    *,
+    axis_name: str,
+    p: int,
+    range_cap: int | None = None,
+) -> SparseStream:
+    """Sparse reduce-scatter (split) + sparse allgather (concatenation).
+
+    Returns a global SparseStream of capacity p * range_cap. Merging within
+    the owned range uses the sort+combine path; ranges are disjoint so the
+    allgather is plain concatenation (paper §5.1).
+    """
+    nb, k = u.lidx.shape
+    b = u.bucket_size
+    lidx, val = _split_uniform(u, axis_name, p)
+    rows = nb // p
+    # Global indices within my range, relative to range start.
+    row_off = jax.lax.broadcasted_iota(jnp.int32, (p, rows, k), 1) * b
+    rel = (lidx + row_off).reshape(-1)
+    vals = val.reshape(-1)
+    local = SparseStream(rel, vals, jnp.asarray(rel.shape[0], jnp.int32))
+    if range_cap is None:
+        range_cap = min(p * rows * k, rows * b)
+    merged = ss.merge(local, ss.empty(0, vals.dtype), range_cap)  # sort+combine
+    # Rebase to global index space: my range starts at rank * rows * b.
+    my_rank = jax.lax.axis_index(axis_name)
+    base = (my_rank * rows * b).astype(jnp.int32)
+    gidx = jnp.where(merged.idx == SENTINEL, SENTINEL, merged.idx + base)
+    # Sparse allgather = concatenation of disjoint ranges.
+    all_idx = jax.lax.all_gather(gidx, axis_name, tiled=True)
+    all_val = jax.lax.all_gather(merged.val, axis_name, tiled=True)
+    total_nnz = jax.lax.psum(merged.nnz, axis_name)
+    return SparseStream(all_idx, all_val, total_nnz)
+
+
+# --------------------------------------------------------------------------
+# DSAR_Split_allgather (paper §5.3.3 + §6 low-precision second phase)
+# --------------------------------------------------------------------------
+
+def dsar_split_allgather_inside(
+    u: UniformStream,
+    *,
+    axis_name: str,
+    p: int,
+    qsgd: QSGDConfig | None = None,
+    rand: jax.Array | None = None,
+    out_dtype=jnp.float32,
+    impl: str = "auto",
+) -> jax.Array:
+    """Split phase sparse, owned range densified, dense (optionally
+    QSGD-quantized) allgather. Returns the dense global sum (n,)."""
+    nb, k = u.lidx.shape
+    b = u.bucket_size
+    lidx, val = _split_uniform(u, axis_name, p)
+    shard = _reduce_range_dense(lidx, val, b, impl=impl)  # (nb/p * b,)
+    if qsgd is None:
+        full = jax.lax.all_gather(shard.astype(out_dtype), axis_name, tiled=True)
+        return full
+    if rand is None:
+        raise ValueError("QSGD second phase needs stochastic-rounding bits")
+    packed, scale = quantize(shard, qsgd, rand.reshape(-1)[: shard.shape[0]], impl=impl)
+    packed_all = jax.lax.all_gather(packed, axis_name, tiled=True)
+    scale_all = jax.lax.all_gather(scale, axis_name, tiled=True)
+    return dequantize(packed_all, scale_all, qsgd, nb * b, out_dtype, impl=impl)
+
+
+# --------------------------------------------------------------------------
+# Batched DSAR: leading row axis (e.g. 'model'-sharded canonical rows)
+# rides through the data-axis collectives as a pure batch dim.
+# --------------------------------------------------------------------------
+
+def dsar_split_allgather_batched_inside(
+    u,  # BatchedStream: lidx/val (r, m, k)
+    *,
+    axis_name: str,
+    p: int,
+    qsgd: QSGDConfig | None = None,
+    rand: jax.Array | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    """DSAR over the 'data' axis with a batched row dim. Returns (r, m*B).
+
+    Split phase: a2a on the BUCKET axis (axis 1) — rows untouched.
+    Densify: batched one-hot contraction. Gather phase: all_gather on
+    axis 1 (optionally QSGD-packed per (row, shard)-bucket)."""
+    from repro.core.topk import BatchedStream  # local: avoid cycle
+
+    r, m, k = u.lidx.shape
+    b = u.bucket_size
+    assert m % p == 0, f"buckets-per-row {m} % p {p}"
+    mp = m // p
+    lidx = jax.lax.all_to_all(
+        u.lidx.reshape(r, p, mp, k), axis_name, split_axis=1, concat_axis=1,
+        tiled=True).reshape(r, p, mp, k)
+    val = jax.lax.all_to_all(
+        u.val.reshape(r, p, mp, k), axis_name, split_axis=1, concat_axis=1,
+        tiled=True).reshape(r, p, mp, k)
+    # densify my bucket range and reduce over the p sources
+    iota = jnp.arange(b, dtype=jnp.int32)
+    onehot = (lidx[..., None] == iota).astype(jnp.float32)
+    shard = jnp.einsum("rpmkb,rpmk->rmb", onehot,
+                       val.astype(jnp.float32)).reshape(r, mp * b)
+    if qsgd is None:
+        full = jax.lax.all_gather(shard.astype(out_dtype), axis_name,
+                                  axis=1, tiled=True)
+        return full
+    if rand is None:
+        raise ValueError("QSGD second phase needs stochastic-rounding bits")
+    bq = qsgd.bucket_size
+    nbq = mp * b // bq
+    from repro.kernels.qsgd_pack.ref import qsgd_pack_ref
+    from repro.kernels.qsgd_unpack.ref import qsgd_unpack_ref
+    packed, scale = qsgd_pack_ref(
+        shard.reshape(r * nbq, bq),
+        rand.reshape(-1)[: r * nbq * bq].reshape(r * nbq, bq), qsgd.bits,
+        qsgd.scale_mode)
+    w = packed.shape[-1]
+    packed = jax.lax.all_gather(packed.reshape(r, nbq * w), axis_name,
+                                axis=1, tiled=True)
+    scale = jax.lax.all_gather(scale.reshape(r, nbq), axis_name,
+                               axis=1, tiled=True)
+    xhat = qsgd_unpack_ref(packed.reshape(r * nbq * p, w),
+                           scale.reshape(r * nbq * p, 1), qsgd.bits)
+    return xhat.reshape(r, m * b).astype(out_dtype)
+
+
+# --------------------------------------------------------------------------
+# Dispatcher + dense baseline
+# --------------------------------------------------------------------------
+
+def safe_psum(x: jax.Array, axis_name) -> jax.Array:
+    """psum with an f32 round-trip for 16-bit operands.
+
+    Works around an XLA-CPU partitioner bug in this JAX build: bf16/f16
+    reductions inside a PARTIAL-manual shard_map (auto axes present) build
+    an invalid binary 'copy' HLO and abort. 32-bit reductions are fine;
+    real TPU backends don't hit this path (documented in DESIGN.md §5).
+    """
+    if x.dtype in (jnp.bfloat16, jnp.float16):
+        return jax.lax.psum(x.astype(jnp.float32), axis_name).astype(x.dtype)
+    return jax.lax.psum(x, axis_name)
+
+
+def safe_pmean(x: jax.Array, axis_name) -> jax.Array:
+    if x.dtype in (jnp.bfloat16, jnp.float16):
+        return jax.lax.pmean(x.astype(jnp.float32), axis_name).astype(x.dtype)
+    return jax.lax.pmean(x, axis_name)
+
+
+def dense_allreduce_inside(x: jax.Array, *, axis_name: str) -> jax.Array:
+    return safe_psum(x, axis_name)
+
+
+def sparse_allreduce_inside(
+    u: UniformStream,
+    *,
+    axis_name: str,
+    p: int,
+    algorithm: str = "auto",
+    qsgd: QSGDConfig | None = None,
+    rand: jax.Array | None = None,
+    out_dtype=jnp.float32,
+    impl: str = "auto",
+) -> ReduceOut:
+    """Reduce a bucket-uniform stream over the axis; auto-selects the
+    algorithm from the alpha-beta cost model + expected fill-in (trace time,
+    mirroring the paper's guidance that the user knows K roughly)."""
+    n = u.n
+    if algorithm == "auto":
+        algorithm = select_algorithm(
+            p, u.nnz, n, value_bits=(qsgd.bits if qsgd else 32)
+        )
+    if algorithm == "dense":
+        return ReduceOut(dense=dense_allreduce_inside(u.densify(impl=impl), axis_name=axis_name))
+    if algorithm == "ssar_recursive_double":
+        return ssar_recursive_double_inside(
+            u.to_stream(), axis_name=axis_name, p=p, n=n
+        )
+    if algorithm == "ssar_split_allgather":
+        return ReduceOut(stream=ssar_split_allgather_inside(u, axis_name=axis_name, p=p))
+    if algorithm == "dsar_split_allgather":
+        return ReduceOut(
+            dense=dsar_split_allgather_inside(
+                u, axis_name=axis_name, p=p, qsgd=qsgd, rand=rand,
+                out_dtype=out_dtype, impl=impl,
+            )
+        )
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+# --------------------------------------------------------------------------
+# Standalone jit-level wrappers (tests / benchmarks / examples)
+# --------------------------------------------------------------------------
+
+def make_sparse_allreduce(
+    mesh: jax.sharding.Mesh,
+    axis_name: str,
+    n: int,
+    k_per_bucket: int,
+    bucket_size: int = 512,
+    algorithm: str = "auto",
+    qsgd: QSGDConfig | None = None,
+    impl: str = "auto",
+):
+    """Returns f(x_batched (P, n), rand (P, nbq*bq) u32|None) -> dense (n,)
+    summing per-rank vectors with TopK compression + sparse allreduce.
+
+    x rows live on distinct ranks (sharded over axis_name); the result is
+    replicated. For benchmarks and the MPI-OPT-style examples.
+    """
+    from jax.sharding import PartitionSpec as P  # local import, avoids cycle
+    from repro.core import topk as topk_mod
+
+    p = mesh.shape[axis_name]
+
+    def inner(x, rand):
+        x = x.reshape(-1)  # my row
+        u, _res = topk_mod.compress(x, k_per_bucket, bucket_size, impl=impl)
+        out = sparse_allreduce_inside(
+            u, axis_name=axis_name, p=p, algorithm=algorithm,
+            qsgd=qsgd, rand=rand.reshape(-1) if rand is not None else None,
+            out_dtype=x.dtype, impl=impl,
+        )
+        return out.to_dense(u.n)[:n]
+
+    spec_x = P(axis_name)
+    spec_r = P(axis_name) if qsgd is not None else None
+    in_specs = (spec_x, spec_r)
+    return jax.jit(
+        jax.shard_map(
+            inner, mesh=mesh, in_specs=in_specs, out_specs=P(None),
+            check_vma=False,
+        )
+    )

@@ -1,0 +1,126 @@
+"""Alpha-beta cost model for the SparCML collectives (paper §5.3).
+
+Used for (a) trace-time algorithm auto-selection, (b) the Fig.-3 style
+benchmark, (c) property tests of the paper's bound ordering and of the
+Lemma 5.2 speedup cap.
+
+TPU v5e constants (per chip): ~50 GB/s per ICI link, ~1 us per-hop latency.
+The model is deliberately the paper's: T(L) = alpha + beta * L.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from .density import expected_nnz
+from .sparse_stream import INDEX_BYTES, delta_threshold
+
+
+@dataclass(frozen=True)
+class NetworkParams:
+    alpha: float = 1e-6            # seconds per message/hop
+    link_bytes_per_s: float = 50e9  # ICI per-link bandwidth
+    isize: int = 4                  # bytes per value (fp32)
+
+    @property
+    def beta_d(self) -> float:
+        """Seconds per dense value word."""
+        return self.isize / self.link_bytes_per_s
+
+    @property
+    def beta_s(self) -> float:
+        """Seconds per sparse (index,value) item. beta_s > beta_d (paper §5.2)."""
+        return (self.isize + INDEX_BYTES) / self.link_bytes_per_s
+
+
+DEFAULT_NET = NetworkParams()
+
+
+def t_dense_allreduce(p: int, n: int, net: NetworkParams = DEFAULT_NET) -> float:
+    """Rabenseifner (paper §5.3.2): 2 log2(P) alpha + 2 (P-1)/P N beta_d."""
+    return 2 * math.log2(p) * net.alpha + 2 * (p - 1) / p * n * net.beta_d
+
+
+def t_ssar_recursive_double(
+    p: int, k: int, n: int, net: NetworkParams = DEFAULT_NET, expected: bool = True
+) -> tuple[float, float, float]:
+    """(lower, expected, upper) for SSAR_Recursive_double.
+
+    lower: full index overlap (k items per round);
+    upper: zero overlap (2^t k items in round t, sums to (P-1)k);
+    expected: per-round fill-in from the uniform model (App. B).
+    """
+    lat = math.log2(p) * net.alpha
+    lo = lat + math.log2(p) * k * net.beta_s
+    hi = lat + (p - 1) * k * net.beta_s
+    exp_items = sum(
+        expected_nnz(k, n, 2**t) for t in range(int(math.log2(p)))
+    )
+    exp = lat + exp_items * net.beta_s
+    return lo, exp, hi
+
+
+def t_ssar_split_allgather(
+    p: int, k: int, n: int, net: NetworkParams = DEFAULT_NET
+) -> tuple[float, float, float]:
+    """(lower, expected, upper) for SSAR_Split_allgather (paper §5.3.2).
+
+    Latency L2 = (P-1) alpha + log2(P) alpha (direct split sends + allgather).
+    Bandwidth between 2 (P-1)/P k beta_s and P k beta_s.
+    """
+    lat = (p - 1) * net.alpha + math.log2(p) * net.alpha
+    lo = lat + 2 * (p - 1) / p * k * net.beta_s
+    hi = lat + p * k * net.beta_s
+    kk = expected_nnz(k, n, p)  # expected reduced size
+    exp = lat + ((p - 1) / p * k + (p - 1) / p * kk) * net.beta_s
+    return lo, exp, hi
+
+
+def t_dsar_split_allgather(
+    p: int, k: int, n: int, net: NetworkParams = DEFAULT_NET, value_bits: int = 32
+) -> tuple[float, float]:
+    """(lower, upper) for DSAR_Split_allgather (paper §5.3.3).
+
+    Split phase sparse; second phase dense allgather of N/P-shards, whose
+    word size can shrink by quantization (paper §6) to value_bits.
+    """
+    lat = (p - 1) * net.alpha + math.log2(p) * net.alpha
+    beta_q = net.beta_d * value_bits / (8 * net.isize)
+    lo = lat + (p - 1) / p * n * beta_q
+    hi = lat + k * net.beta_s + (p - 1) / p * n * beta_q
+    return lo, hi
+
+
+def dsar_speedup_cap(n: int, isize: int = 4) -> float:
+    """Lemma 5.2: once the result is dense, sparsity alone buys at most
+    2/kappa versus a bandwidth-optimal dense allreduce, kappa = delta/N."""
+    kappa = delta_threshold(n, isize) / n
+    return 2.0 / kappa
+
+
+def select_algorithm(
+    p: int,
+    k: int,
+    n: int,
+    net: NetworkParams = DEFAULT_NET,
+    value_bits: int = 32,
+) -> str:
+    """Trace-time auto-selection by expected cost (DESIGN.md §2.1).
+
+    Mirrors the paper's guidance: recursive doubling for small data
+    (latency-bound), split_allgather for large sparse results, DSAR once the
+    expected result exceeds the delta threshold.
+    """
+    delta = delta_threshold(n, net.isize)
+    exp_k = expected_nnz(k, n, p)
+    candidates = {
+        "ssar_recursive_double": t_ssar_recursive_double(p, k, n, net)[1],
+        "ssar_split_allgather": t_ssar_split_allgather(p, k, n, net)[1],
+        "dsar_split_allgather": sum(t_dsar_split_allgather(p, k, n, net, value_bits)) / 2,
+    }
+    if exp_k >= delta:
+        # Sparse end-representation no longer pays (paper §5.3.3).
+        candidates.pop("ssar_recursive_double")
+        candidates.pop("ssar_split_allgather")
+        candidates["dense"] = t_dense_allreduce(p, n, net)
+    return min(candidates, key=candidates.get)

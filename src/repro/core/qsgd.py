@@ -1,0 +1,64 @@
+"""QSGD bucketed stochastic quantization (paper §6), flat-vector API.
+
+Applied to the dense second phase of DSAR_Split_allgather: quantize the
+reduced N/P shard before the allgather, cutting its bandwidth term by
+32/bits (paper: "reduce the bandwidth cost of this last step by a constant
+corresponding to the quantization").
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qsgd_pack.ops import qsgd_pack
+from repro.kernels.qsgd_unpack.ops import qsgd_unpack
+
+
+class QSGDConfig(NamedTuple):
+    bits: int = 4
+    bucket_size: int = 1024  # "in the order of 1024 consecutive entries" (§6)
+    scale_mode: str = "l2"   # QSGD uses the bucket L2 norm
+
+    @property
+    def words_per_bucket(self) -> int:
+        return self.bucket_size * self.bits // 32
+
+    def wire_bytes(self, n: int) -> int:
+        """Bytes on the wire for an n-length vector (packed codes + scales)."""
+        nb = -(-n // self.bucket_size)
+        return nb * self.words_per_bucket * 4 + nb * 4
+
+
+def quantize(
+    x: jax.Array, cfg: QSGDConfig, rand: jax.Array, impl: str = "auto"
+) -> tuple[jax.Array, jax.Array]:
+    """x: flat (n,), n a multiple of cfg.bucket_size after padding.
+
+    rand: flat uint32 (n,). Returns (packed (nb, W) u32, scales (nb, 1) f32).
+    """
+    (n,) = x.shape
+    bq = cfg.bucket_size
+    nb = -(-n // bq)
+    pad = nb * bq - n
+    if pad:
+        x = jnp.pad(x, (0, pad))
+        rand = jnp.pad(rand, (0, pad))
+    packed, scale = qsgd_pack(
+        x.reshape(nb, bq), rand.reshape(nb, bq), cfg.bits, cfg.scale_mode, impl=impl
+    )
+    return packed, scale
+
+
+def dequantize(
+    packed: jax.Array, scale: jax.Array, cfg: QSGDConfig, n: int,
+    out_dtype=jnp.float32, impl: str = "auto",
+) -> jax.Array:
+    xhat = qsgd_unpack(packed, scale, cfg.bits, out_dtype, impl=impl)
+    return xhat.reshape(-1)[:n]
+
+
+def random_bits_like(key: jax.Array, n: int) -> jax.Array:
+    """Uniform u32 noise for stochastic rounding (explicit operand)."""
+    return jax.random.bits(key, (n,), dtype=jnp.uint32)

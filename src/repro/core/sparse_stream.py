@@ -1,0 +1,144 @@
+"""Sparse streams (paper §5.1), adapted to XLA's static-shape world.
+
+A stream stores up to ``cap`` (index, value) pairs plus an explicit ``nnz``
+count. Padding slots carry ``idx == SENTINEL`` (sorts after every valid
+index) and ``val == 0`` (the neutral element of SUM, per paper §5.2).
+
+The paper's sparse->dense switch at threshold delta = N*isize/(c+isize)
+is a *trace-time* decision here (see DESIGN.md §2.1): capacities follow the
+same |H1|+|H2| upper bound the paper uses at runtime.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# Largest i32; sorts after any valid index (valid indices < N < 2**31).
+SENTINEL = jnp.iinfo(jnp.int32).max
+
+INDEX_BYTES = 4  # paper §8: "we fix the datatype for storing an index to an unsigned int"
+
+
+class SparseStream(NamedTuple):
+    """Fixed-capacity sparse vector: idx i32[cap], val dtype[cap], nnz i32[]."""
+
+    idx: jax.Array
+    val: jax.Array
+    nnz: jax.Array
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[-1]
+
+
+def empty(cap: int, dtype=jnp.float32) -> SparseStream:
+    return SparseStream(
+        idx=jnp.full((cap,), SENTINEL, jnp.int32),
+        val=jnp.zeros((cap,), dtype),
+        nnz=jnp.zeros((), jnp.int32),
+    )
+
+
+def delta_threshold(n: int, isize: int = 4, index_bytes: int = INDEX_BYTES) -> int:
+    """Paper §5.1: sparse format wins while nnz <= delta = N*isize/(c+isize)."""
+    return (n * isize) // (index_bytes + isize)
+
+
+def from_dense_topk(x: jax.Array, k: int) -> SparseStream:
+    """Global (non-bucketed) top-|k| magnitude selection -> sorted stream."""
+    (n,) = x.shape
+    k = min(k, n)
+    mag = jnp.abs(x)
+    _, top_idx = jax.lax.top_k(mag, k)
+    top_idx = jnp.sort(top_idx)
+    return SparseStream(
+        idx=top_idx.astype(jnp.int32),
+        val=x[top_idx],
+        nnz=jnp.asarray(k, jnp.int32),
+    )
+
+
+def from_mask(x: jax.Array, mask: jax.Array, cap: int) -> SparseStream:
+    """Compact masked entries of ``x`` into a sorted stream of capacity cap.
+
+    Entries where mask is False are dropped. If popcount(mask) > cap the
+    largest-index extras are dropped (callers size cap so this cannot occur).
+    """
+    (n,) = x.shape
+    idx = jnp.where(mask, jnp.arange(n, dtype=jnp.int32), SENTINEL)
+    val = jnp.where(mask, x, 0)
+    # Stable two-operand sort: padding (SENTINEL) moves to the back.
+    idx_s, val_s = jax.lax.sort((idx, val), num_keys=1)
+    return SparseStream(
+        idx=idx_s[:cap],
+        val=val_s[:cap],
+        nnz=jnp.minimum(jnp.sum(mask).astype(jnp.int32), cap),
+    )
+
+
+def densify(s: SparseStream, n: int) -> jax.Array:
+    """Scatter-add the stream into a dense length-n vector.
+
+    Padding (idx == SENTINEL) is out of bounds and dropped by mode='drop'.
+    The Pallas `bucket_scatter` kernel is the TPU-optimized variant for
+    bucket-uniform streams; this is the general path.
+    """
+    out = jnp.zeros((n,), s.val.dtype)
+    return out.at[s.idx].add(s.val, mode="drop")
+
+
+def merge(a: SparseStream, b: SparseStream, cap_out: int) -> SparseStream:
+    """Sum two streams ("efficient summation", paper §5.1).
+
+    concat -> bitonic sort by index -> combine duplicate indices by
+    segment-add -> compact to cap_out. Duplicate combining follows the
+    classic sorted-run trick: head flags + cumsum positions + scatter.
+    """
+    idx = jnp.concatenate([a.idx, b.idx])
+    val = jnp.concatenate([a.val, b.val])
+    idx, val = jax.lax.sort((idx, val), num_keys=1)
+    prev = jnp.concatenate([jnp.full((1,), -1, idx.dtype), idx[:-1]])
+    head = idx != prev
+    pos = jnp.cumsum(head) - 1  # group id for each element
+    out_idx = jnp.full((cap_out,), SENTINEL, jnp.int32)
+    out_val = jnp.zeros((cap_out,), val.dtype)
+    valid = idx != SENTINEL
+    out_idx = out_idx.at[jnp.where(valid, pos, cap_out)].set(idx, mode="drop")
+    out_val = out_val.at[jnp.where(valid, pos, cap_out)].add(
+        jnp.where(valid, val, 0), mode="drop"
+    )
+    nnz = jnp.sum(head & valid).astype(jnp.int32)
+    return SparseStream(out_idx, out_val, jnp.minimum(nnz, cap_out))
+
+
+def concat(streams: list[SparseStream], cap_out: int | None = None) -> SparseStream:
+    """Concatenate streams with *disjoint* index ranges (paper §5.1: the sum
+    of dimension-partitioned vectors is plain concatenation)."""
+    idx = jnp.concatenate([s.idx for s in streams])
+    val = jnp.concatenate([s.val for s in streams])
+    nnz = sum(s.nnz for s in streams)
+    if cap_out is not None and cap_out != idx.shape[0]:
+        idx, val = jax.lax.sort((idx, val), num_keys=1)
+        idx, val = idx[:cap_out], val[:cap_out]
+    return SparseStream(idx, val, jnp.asarray(nnz, jnp.int32))
+
+
+def pad_to(s: SparseStream, cap: int) -> SparseStream:
+    """Grow capacity (padding stays at the back because streams are sorted)."""
+    if cap == s.capacity:
+        return s
+    if cap < s.capacity:
+        raise ValueError(f"cannot shrink stream {s.capacity} -> {cap}")
+    extra = cap - s.capacity
+    return SparseStream(
+        idx=jnp.concatenate([s.idx, jnp.full((extra,), SENTINEL, jnp.int32)]),
+        val=jnp.concatenate([s.val, jnp.zeros((extra,), s.val.dtype)]),
+        nnz=s.nnz,
+    )
+
+
+def round_up_pow2(x: int) -> int:
+    return 1 << max(0, math.ceil(math.log2(max(1, x))))

@@ -1,0 +1,2 @@
+from repro.data.pipeline import DataConfig, make_batch_iterator, synthetic_batch  # noqa: F401
+from repro.data.sparse_datasets import make_url_like_dataset  # noqa: F401

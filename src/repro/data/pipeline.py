@@ -1,0 +1,59 @@
+"""Deterministic, resumable, sharded data pipeline.
+
+Synthetic token streams keyed by (seed, step, host) so that:
+* restarts resume exactly (checkpoint stores the step),
+* elastic resizes re-partition deterministically (each host regenerates
+  its shard from the global key — no data server),
+* straggler mitigation can SKIP a step globally (every host agrees on the
+  skipped step id without communication).
+
+Real deployments would swap `synthetic_batch` for a tokenized shard reader
+with the same (seed, step) contract.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    global_batch: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 1234
+    kind: str = "lm"          # lm | audio | vlm
+    frontend_dim: int = 0     # audio frame-embedding dim
+    num_image_tokens: int = 0
+    vision_dim: int = 0
+
+
+def synthetic_batch(cfg: DataConfig, step: int) -> dict:
+    """Batch for global step `step` (host-independent content; callers doing
+    multi-host would slice their rows). Markov-ish token stream so the LM
+    loss actually decreases during convergence tests."""
+    rng = np.random.default_rng(cfg.seed + step * 1_000_003)
+    b, s = cfg.global_batch, cfg.seq_len
+    # structured stream: a random walk over the vocab with local coherence
+    start = rng.integers(0, cfg.vocab_size, size=(b, 1))
+    steps = rng.integers(-3, 4, size=(b, s - 1))
+    toks = np.concatenate([start, start + np.cumsum(steps, axis=1)], axis=1)
+    toks = np.mod(toks, cfg.vocab_size).astype(np.int32)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.kind == "audio":
+        batch["frames"] = rng.standard_normal((b, s, cfg.frontend_dim)).astype(np.float32)
+    if cfg.kind == "vlm":
+        batch["image_embeds"] = rng.standard_normal(
+            (b, cfg.num_image_tokens, cfg.vision_dim)).astype(np.float32)
+    return batch
+
+
+def make_batch_iterator(cfg: DataConfig, start_step: int = 0) -> Iterator[dict]:
+    step = start_step
+    while True:
+        yield synthetic_batch(cfg, step)
+        step += 1

@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for SparCML's compute hot-spots.
+
+The paper (§8.3): "Top-k selection and quantization are implemented using
+optimized GPU kernels". These are the TPU-native equivalents:
+
+- ``bucket_topk``   — per-bucket top-k selection + compaction + fused
+                      error-feedback residual (Alg. 2 lines 1-3).
+- ``qsgd_pack``     — QSGD bucketed stochastic quantization + bit-packing (§6).
+- ``qsgd_unpack``   — inverse of qsgd_pack.
+- ``bucket_scatter``— stream densification via one-hot contraction (MXU
+                      friendly; TPU adaptation of CPU/GPU scatter-add).
+
+Each kernel directory holds ``kernel.py`` (pl.pallas_call + BlockSpec),
+``ops.py`` (jit'd public wrapper with impl dispatch) and ``ref.py``
+(pure-jnp oracle). Kernels are validated in interpret mode on CPU; on real
+TPU hardware the same code path runs compiled (interpret=False).
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.bucket_scatter.ops import bucket_scatter  # noqa: F401

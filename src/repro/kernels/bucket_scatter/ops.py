@@ -1,0 +1,22 @@
+"""Public jit'd wrapper for bucket_scatter."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.bucket_scatter.kernel import bucket_scatter_pallas
+from repro.kernels.bucket_scatter.ref import bucket_scatter_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("b", "impl"))
+def bucket_scatter(lidx: jax.Array, val: jax.Array, b: int, impl: str = "auto"):
+    """Densify per-bucket streams: (nb,k) idx/val -> (nb,B) dense (adds dups,
+    drops OOB sentinel indices)."""
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return bucket_scatter_ref(lidx, val, b)
+    return bucket_scatter_pallas(lidx, val, b, interpret=not _on_tpu())

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for bucket_scatter (stream densification).
+
+  lidx: (nb, k) int32 local indices in [0, B) — may contain duplicates
+        (duplicates accumulate) or the OOB sentinel (>= B, dropped)
+  val:  (nb, k)
+  -> dense (nb, B) with dense[r, lidx[r, j]] += val[r, j]
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bucket_scatter_ref(lidx: jax.Array, val: jax.Array, b: int):
+    nb, k = lidx.shape
+    out = jnp.zeros((nb, b), val.dtype)
+    rows = jnp.broadcast_to(jnp.arange(nb, dtype=jnp.int32)[:, None], (nb, k))
+    return out.at[rows, lidx].add(val, mode="drop")

@@ -1,0 +1,1 @@
+from repro.kernels.bucket_topk.ops import bucket_topk  # noqa: F401

@@ -1,0 +1,30 @@
+"""Public jit'd wrapper for bucket_topk with implementation dispatch.
+
+impl='auto'   -> Pallas (compiled) on TPU, pure-jnp ref elsewhere (CPU/GPU).
+impl='pallas' -> Pallas kernel; interpret mode is forced off-TPU so the
+                 kernel body runs (slowly but exactly) on CPU for validation.
+impl='ref'    -> pure-jnp oracle.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.bucket_topk.kernel import bucket_topk_pallas
+from repro.kernels.bucket_topk.ref import bucket_topk_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("k", "impl"))
+def bucket_topk(x: jax.Array, k: int, impl: str = "auto"):
+    """Per-bucket top-|k| select/compact. x: (nb, B).
+
+    Returns (val (nb,k), lidx (nb,k) i32 ascending, residual (nb,B)).
+    """
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return tuple(bucket_topk_ref(x, k))
+    return tuple(bucket_topk_pallas(x, k, interpret=not _on_tpu()))

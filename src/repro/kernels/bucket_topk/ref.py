@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for bucket_topk.
+
+Semantics (shared with the kernel):
+  input  x:   (nb, B) values
+  output val: (nb, k) selected values, ordered by ascending local index
+         lidx:(nb, k) int32 local indices (within bucket), ascending
+         res: (nb, B) residual = x with selected entries zeroed
+
+Selection: top-k by |x| per bucket; ties broken toward the LOWER index
+(both jax.lax.top_k and iterative argmax obey this, so kernel and ref
+agree exactly).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bucket_topk_ref(x: jax.Array, k: int):
+    nb, b = x.shape
+    mag = jnp.abs(x)
+    _, lidx = jax.lax.top_k(mag, k)  # (nb, k), ties -> lower index first
+    lidx = jnp.sort(lidx, axis=1).astype(jnp.int32)
+    val = jnp.take_along_axis(x, lidx, axis=1)
+    iota = jnp.arange(b, dtype=jnp.int32)[None, None, :]  # (1, 1, B)
+    sel_mask = jnp.any(lidx[:, :, None] == iota, axis=1)  # (nb, B)
+    res = jnp.where(sel_mask, 0, x)
+    return val, lidx, res

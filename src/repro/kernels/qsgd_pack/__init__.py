@@ -1,0 +1,1 @@
+from repro.kernels.qsgd_pack.ops import qsgd_pack  # noqa: F401

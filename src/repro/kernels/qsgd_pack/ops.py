@@ -1,0 +1,30 @@
+"""Public jit'd wrapper for qsgd_pack (see ref.py for semantics)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.qsgd_pack.kernel import qsgd_pack_pallas
+from repro.kernels.qsgd_pack.ref import qsgd_pack_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "scale_mode", "impl"))
+def qsgd_pack(
+    x: jax.Array,
+    rand: jax.Array,
+    bits: int = 4,
+    scale_mode: str = "l2",
+    impl: str = "auto",
+):
+    """Quantize+pack buckets. x, rand: (nb, Bq) -> (packed u32 (nb, Bq*bits/32),
+    scale f32 (nb, 1))."""
+    assert bits in (2, 4, 8), bits
+    assert x.shape[1] % (32 // bits) == 0
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return tuple(qsgd_pack_ref(x, rand, bits, scale_mode))
+    return tuple(qsgd_pack_pallas(x, rand, bits, scale_mode, interpret=not _on_tpu()))

@@ -1,0 +1,1 @@
+from repro.kernels.qsgd_unpack.ops import qsgd_unpack  # noqa: F401

@@ -1,0 +1,53 @@
+"""Pallas TPU kernel: QSGD unpack + dequantize (lane-wise shift+mask)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.qsgd_pack.ref import levels
+
+
+def _kernel(packed_ref, scale_ref, out_ref, *, bits: int):
+    packed = packed_ref[...]  # (TB, W) uint32
+    tb, w = packed.shape
+    vpw = 32 // bits
+    s = levels(bits)
+    mask = jnp.uint32(2**bits - 1)
+    shifts = (jax.lax.broadcasted_iota(jnp.uint32, (tb, w, vpw), 2)
+              * jnp.uint32(bits))
+    biased = (packed[:, :, None] >> shifts) & mask
+    code = biased.astype(jnp.int32) - s
+    xhat = code.astype(jnp.float32) / s * scale_ref[...][:, :, None]
+    out_ref[...] = xhat.reshape(tb, w * vpw).astype(out_ref.dtype)
+
+
+def qsgd_unpack_pallas(
+    packed: jax.Array,
+    scale: jax.Array,
+    bits: int,
+    out_dtype=jnp.float32,
+    *,
+    interpret: bool = True,
+    tb: int | None = None,
+):
+    nb, w = packed.shape
+    vpw = 32 // bits
+    bq = w * vpw
+    if tb is None:
+        tb = max(1, min(nb, 65536 // bq))
+        while nb % tb:
+            tb -= 1
+    return pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=(nb // tb,),
+        in_specs=[
+            pl.BlockSpec((tb, w), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tb, bq), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, bq), out_dtype),
+        interpret=interpret,
+    )(packed, scale)

@@ -1,0 +1,29 @@
+"""Public jit'd wrapper for qsgd_unpack."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.qsgd_unpack.kernel import qsgd_unpack_pallas
+from repro.kernels.qsgd_unpack.ref import qsgd_unpack_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "out_dtype", "impl"))
+def qsgd_unpack(
+    packed: jax.Array,
+    scale: jax.Array,
+    bits: int = 4,
+    out_dtype=jnp.float32,
+    impl: str = "auto",
+):
+    """packed u32 (nb, W), scale (nb, 1) -> xhat (nb, W*32//bits)."""
+    assert bits in (2, 4, 8), bits
+    if impl == "ref" or (impl == "auto" and not _on_tpu()):
+        return qsgd_unpack_ref(packed, scale, bits, out_dtype)
+    return qsgd_unpack_pallas(packed, scale, bits, out_dtype, interpret=not _on_tpu())

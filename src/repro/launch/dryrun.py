@@ -1,0 +1,296 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+cell on placeholder devices, record memory/cost/collective analysis.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--out experiments/dryrun]
+
+Each cell writes <out>/<arch>__<shape>__<mesh>[__<sync>].json with:
+  memory_analysis (bytes per device), cost_analysis (flops/bytes),
+  per-chip collective wire bytes by kind (parsed from post-SPMD HLO),
+  the three roofline terms, and lower/compile wall times.
+"""
+
+import argparse
+import gc
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as cfgreg
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.train.state import TrainConfig
+from repro.train.train_step import (
+    batch_specs, build_train_step, dp_axes_of, dp_total_of, state_shapes)
+from repro.serve.engine import build_serve_step, build_prefill, decode_state_specs
+from repro.utils.hlo_analysis import parse_collectives, remat_duplication
+from repro.utils.roofline import Roofline, model_flops_infer, model_flops_train
+
+
+def batch_shapes(cfg, shape: cfgreg.ShapeSpec) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    out = {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+           "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    if cfg.family == "vlm":
+        out["image_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, cfg.vision_dim), jnp.float32)
+    if cfg.family == "encoder":
+        out["frames"] = jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), jnp.float32)
+    return out
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell
+    (weak-type-correct, shardable, no device allocation)."""
+    cfg = cfgreg.get_config(arch)
+    shape = cfgreg.SHAPES[shape_name]
+    return batch_shapes(cfg, shape)
+
+
+def _abstract(tree):
+    return jax.tree.map(
+        lambda x: x if x is None else jax.ShapeDtypeStruct(x.shape, x.dtype),
+        tree, is_leaf=lambda x: x is None)
+
+
+def lower_cell(arch: str, shape_name: str, mesh, sync_override: str | None = None):
+    """Returns (lowered, meta) for one cell."""
+    shape = cfgreg.SHAPES[shape_name]
+    long_ctx = shape_name == "long_500k"
+    if arch in ("zamba2-2.7b", "zamba2_2p7b"):
+        cfg = cfgreg.get_config(arch, long_context=long_ctx)
+    else:
+        cfg = cfgreg.get_config(arch)
+    model = build_model(cfg)
+    meta = {"arch": cfg.name, "shape": shape_name,
+            "params": cfg.param_count(), "active_params": cfg.active_param_count()}
+
+    if shape.kind == "train":
+        tcfg = cfgreg.get_train_config(arch, mesh=mesh)
+        if sync_override:
+            from repro.configs._common import make_train_config
+            if sync_override == "dense":
+                tcfg = make_train_config(sync_mode="dense", fsdp=True)
+            elif sync_override == "sparcml":
+                tcfg = cfgreg.get_train_config(arch)
+        # keep per-microbatch rows divisible by the dp rank count, else
+        # pods silently duplicate compute (found via per-chip FLOPs).
+        import dataclasses as _dc
+        mb_cap = max(1, shape.global_batch // dp_total_of(mesh))
+        if tcfg.microbatches > mb_cap:
+            tcfg = _dc.replace(tcfg, microbatches=mb_cap)
+        step_fn, (shapes, specs) = build_train_step(model, tcfg, mesh)
+        bshapes = batch_shapes(cfg, shape)
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        lowered = step_fn.lower(shapes, bshapes, key)
+        meta["sync_mode"] = tcfg.sync.mode
+        meta["kind"] = "train"
+        meta["model_flops"] = model_flops_train(
+            cfg.active_param_count(), shape.global_batch * shape.seq_len)
+        return lowered, meta
+
+    if shape.kind == "prefill":
+        pre_fn, (pspecs, _) = build_prefill(model, mesh, cache_len=shape.seq_len,
+                                            batch_size=shape.global_batch,
+                                            fsdp=not _fits_replicated(cfg))
+        pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        bshapes = batch_shapes(cfg, shape)
+        bshapes.pop("labels", None)
+        if cfg.family == "encoder":
+            # encoder 'prefill' = full forward (no cache)
+            dp = dp_axes_of(mesh)
+            from repro.models.specs import param_specs as pspec_fn
+            sh = lambda t: jax.tree.map(
+                lambda s: NamedSharding(mesh, s if s is not None else P()), t,
+                is_leaf=lambda x: x is None or isinstance(x, P))
+            specs = pspec_fn(pshapes, cfg, None)
+            fwd = jax.jit(
+                lambda p, b: model.forward(p, b),
+                in_shardings=(sh(specs), sh({"frames": P(dp, None, None)})),
+                out_shardings=NamedSharding(mesh, P(dp, None, "model")))
+            bshapes.pop("tokens", None)
+            lowered = fwd.lower(pshapes, bshapes)
+        else:
+            lowered = pre_fn.lower(pshapes, bshapes)
+        meta["kind"] = "prefill"
+        meta["model_flops"] = model_flops_infer(
+            cfg.active_param_count(), shape.global_batch * shape.seq_len)
+        return lowered, meta
+
+    # decode
+    dec_fn, (pspecs, sspecs) = build_serve_step(
+        model, mesh, batch_size=shape.global_batch, cache_len=shape.seq_len,
+        fsdp=not _fits_replicated(cfg))
+    pshapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    state_abs = jax.eval_shape(
+        lambda: model.init_decode_state(shape.global_batch, shape.seq_len,
+                                        prefix_len=shape.seq_len - 1))
+    toks = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    lowered = dec_fn.lower(pshapes, state_abs, toks)
+    meta["kind"] = "decode"
+    meta["model_flops"] = model_flops_infer(
+        cfg.active_param_count(), shape.global_batch)
+    return lowered, meta
+
+
+def _fits_replicated(cfg) -> bool:
+    """Can bf16 params fit DP-replicated after TP=16? (16 GB HBM heuristic)"""
+    return cfg.param_count() * 2 / 16 < 8e9
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str | None = None, sync_override: str | None = None) -> dict:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "status": "ok"}
+    ok, reason = cfgreg.applicable_shapes(arch)[shape_name]
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    try:
+        t0 = time.perf_counter()
+        with mesh:
+            lowered, meta = lower_cell(arch, shape_name, mesh, sync_override)
+            t_lower = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0
+
+            mem = compiled.memory_analysis()
+            try:
+                mem_d = {
+                    "bytes_per_device_total": int(
+                        getattr(mem, "temp_size_in_bytes", 0)
+                        + getattr(mem, "argument_size_in_bytes", 0)
+                        + getattr(mem, "output_size_in_bytes", 0)
+                        - getattr(mem, "alias_size_in_bytes", 0)),
+                    "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+                    "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+                    "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+                    "alias_bytes": int(getattr(mem, "alias_size_in_bytes", 0)),
+                    "generated_code_bytes": int(
+                        getattr(mem, "generated_code_size_in_bytes", 0)),
+                }
+            except Exception:
+                mem_d = {"raw": str(mem)}
+            print(f"[{arch}|{shape_name}|{mesh_name}] memory_analysis:", mem_d)
+
+            cost = compiled.cost_analysis() or {}
+            xla_flops = float(cost.get("flops", 0.0))
+            print(f"[{arch}|{shape_name}|{mesh_name}] cost_analysis: "
+                  f"flops={xla_flops:.3e} (loop bodies counted once)")
+
+            hlo = compiled.as_text()
+            # trip-count-aware walk: XLA's cost_analysis counts while
+            # bodies once; scan-over-layers needs the multiplier.
+            from repro.utils.hlo_cost import total_cost
+            mc = total_cost(hlo)
+            print(f"[{arch}|{shape_name}|{mesh_name}] trip-aware: "
+                  f"flops={mc.flops:.3e}/chip hbm={mc.hbm_bytes:.3e}B "
+                  f"coll={mc.coll_bytes:.3e}B trips={mc.trip_counts[:4]}")
+            roof = Roofline(
+                flops=mc.flops * chips, hbm_bytes=mc.hbm_bytes * chips,
+                coll_bytes_per_chip=mc.coll_bytes, chips=chips,
+                model_flops=meta["model_flops"])
+            rec.update(
+                meta=meta,
+                chips=chips,
+                lower_s=round(t_lower, 2),
+                compile_s=round(t_compile, 2),
+                memory=mem_d,
+                cost={"flops_per_chip": mc.flops,
+                      "hbm_bytes_per_chip": mc.hbm_bytes,
+                      "xla_flops_raw": xla_flops},
+                collectives=mc.as_dict(),
+                remat_dup=remat_duplication(hlo),
+                roofline=roof.as_dict(),
+                hlo_bytes=len(hlo),
+            )
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+    finally:
+        gc.collect()
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = f"{arch}__{shape_name}__{mesh_name}"
+        if sync_override:
+            tag += f"__{sync_override}"
+        with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default=None)
+    ap.add_argument("--shape", type=str, default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--sync", type=str, default=None,
+                    help="override sync mode for train cells (dense|sparcml)")
+    ap.add_argument("--out", type=str, default="experiments/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = ([cfgreg.EXTERNAL_NAMES[a] for a in cfgreg.ARCH_IDS]
+             if (args.all or args.arch is None) else [args.arch])
+    shapes = list(cfgreg.SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multi_pod]
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                cells.append((a, s, m))
+
+    results = []
+    for a, s, m in cells:
+        tag = f"{a}__{s}__{'pod2x16x16' if m else 'pod16x16'}"
+        if args.sync:
+            tag += f"__{args.sync}"
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"== {tag}: cached, skipping")
+            with open(path) as f:
+                results.append(json.load(f))
+            continue
+        print(f"== {tag}: lowering...", flush=True)
+        rec = run_cell(a, s, m, out_dir=args.out, sync_override=args.sync)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" dominant={r['dominant']} bound={r['bound_s']:.4f}s "
+                     f"mfu_bound={r['mfu_bound']:.2%} "
+                     f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+        elif status == "error":
+            extra = " " + rec["error"][:160]
+        else:
+            extra = " " + rec.get("reason", "")
+        print(f"== {tag}: {status}{extra}", flush=True)
+        results.append(rec)
+
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\nDRY-RUN SUMMARY: {n_ok} ok / {n_skip} skipped / {n_err} errors "
+          f"of {len(results)} cells")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

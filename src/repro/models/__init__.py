@@ -1,0 +1,12 @@
+"""Model zoo: the 10 assigned architectures as composable JAX modules.
+
+Families: dense GQA decoders (llama/qwen/minicpm/internlm/405B), MoE
+(dbrx, moonshot), SSM (mamba2), hybrid SSM+shared-attention (zamba2),
+encoder-only audio (hubert), VLM cross-attention decoder (llama-3.2-vision).
+
+All models share: scan-over-layers (compile time O(1) in depth), remat,
+TP/FSDP sharding rules, bf16 compute, train/prefill/decode entry points.
+"""
+
+from repro.models.config import ModelConfig  # noqa: F401
+from repro.models.model import Model, build_model  # noqa: F401

@@ -1,0 +1,431 @@
+"""Shared neural building blocks: RMSNorm, RoPE, GQA attention (train /
+prefill / ring-buffer decode, optional qk-norm and sliding window),
+SwiGLU/GELU MLP, gated cross-attention (VLM).
+
+Parameters are plain nested dicts; every block has ``init_*`` and a pure
+apply function so blocks can be stacked under jax.lax.scan with a leading
+layer axis.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+
+# -- init helpers ----------------------------------------------------------
+
+def _dense_init(key, shape, dtype, scale=None):
+    fan_in = shape[0] if len(shape) >= 1 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# -- rotary ----------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(
+        -math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half
+    )  # (half,)
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    ang = ang[..., :, None, :]  # one head axis: (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- attention -------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, W, nkv, hd) — W = max_seq or sliding window
+    v: jax.Array
+
+
+def attn_init(key, cfg: ModelConfig, d: int | None = None) -> dict:
+    d = d or cfg.d_model
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _dense_init(ks[0], (d, nh * hd), cfg.param_dtype),
+        "wk": _dense_init(ks[1], (d, nkv * hd), cfg.param_dtype),
+        "wv": _dense_init(ks[2], (d, nkv * hd), cfg.param_dtype),
+        "wo": _dense_init(ks[3], (nh * hd, d), cfg.param_dtype,
+                          scale=1.0 / math.sqrt(nh * hd * 2 * cfg.num_layers)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, cfg.param_dtype)
+        p["k_norm"] = rmsnorm_init(hd, cfg.param_dtype)
+    return p
+
+
+def _qkv(p, cfg: ModelConfig, x, positions):
+    b, s, _ = x.shape
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, nh, hd)
+    k = (x @ p["wk"]).reshape(b, s, nkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, nkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, hd: int):
+    """q (B,S,nh,hd), k/v (B,T,nkv,hd); GQA via KV-head repeat; fp32 softmax.
+
+    KV heads are REPEATED to nh instead of reshaping q to (nkv, g, hd):
+    a (nkv, g) reshape makes the head axis unshardable when nkv < TP
+    (GSPMD replicates the full score tensor — found via dry-run HLO:
+    700 GB/layer of replicated f32 scores on the 405B cell). The repeat
+    keeps the head axis divisible by TP; duplicate K/V per device is
+    nkv*hd*T bytes — negligible next to the score tensor it avoids.
+
+    mask may be (B, 1, 1, S, T)-broadcastable; we use (B, 1, S, T).
+    """
+    b, s, nh, _ = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    # f32 ACCUMULATION inside the bf16 dot (a post-cast would make XLA
+    # materialize f32 operands — found via dry-run HLO inspection).
+    scores = jnp.einsum("bsnh,btnh->bnst", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores / math.sqrt(hd)
+    mask = jnp.broadcast_to(mask.reshape(mask.shape[0], -1, mask.shape[-2], mask.shape[-1])[:, :1],
+                            (b, 1, s, t))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bnst,btnh->bsnh", probs, v)
+    return out.reshape(b, s, nh * hd)
+
+
+import functools
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def flash_attention(q, k, v, positions, causal: bool, window: int, kc: int):
+    """Online-softmax attention with a recomputing backward (flash-style,
+    pure JAX). Never materializes (S,T) scores in fwd OR bwd: the naive
+    path's ~6 full-S^2 f32 tensors (fwd) + their saved copies (bwd) were
+    the dominant memory term of every attention train cell (dry-run HLO).
+
+    q: (B,S,nh,hd); k/v: (B,T,nh,hd) — GQA repeat happens in the caller.
+    """
+    out, _ = _flash_fwd(q, k, v, positions, causal, window, kc)
+    return out
+
+
+def _flash_fwd(q, k, v, positions, causal, window, kc):
+    b, s, nh, hd = q.shape
+    t = k.shape[1]
+    nc = t // kc
+    kck = k.reshape(b, nc, kc, nh, hd).transpose(1, 0, 2, 3, 4)
+    vck = v.reshape(b, nc, kc, nh, hd).transpose(1, 0, 2, 3, 4)
+    kpos = positions.reshape(nc, kc)
+    qpos = positions[:, None]
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(carry, chunk):
+        m_prev, l_prev, acc = carry
+        kc_, vc_, kp = chunk
+        scores = jnp.einsum("bsnh,bcnh->bnsc", q, kc_,
+                            preferred_element_type=jnp.float32) * scale
+        mask = (qpos >= kp[None, :]) if causal else jnp.ones((s, kc), bool)
+        if window:
+            mask = mask & (qpos - kp[None, :] < window)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        m_new = jnp.maximum(m_prev, scores.max(-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_new = l_prev * corr + p.sum(-1, keepdims=True)
+        pv = jnp.einsum("bnsc,bcnh->bnsh", p.astype(vc_.dtype), vc_,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr + pv
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, nh, s, 1), -jnp.inf, jnp.float32),
+            jnp.zeros((b, nh, s, 1), jnp.float32),
+            jnp.zeros((b, nh, s, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (kck, vck, kpos))
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    lse = (m + jnp.log(jnp.maximum(l, 1e-30)))[..., 0]  # (B,nh,S)
+    return out.transpose(0, 2, 1, 3), lse
+
+
+def _flash_fwd_vjp(q, k, v, positions, causal, window, kc):
+    out, lse = _flash_fwd(q, k, v, positions, causal, window, kc)
+    return out, (q, k, v, positions, out, lse)
+
+
+def _flash_bwd(causal, window, kc, res, dout):
+    q, k, v, positions, out, lse = res
+    b, s, nh, hd = q.shape
+    t = k.shape[1]
+    nc = t // kc
+    scale = 1.0 / math.sqrt(hd)
+    kck = k.reshape(b, nc, kc, nh, hd).transpose(1, 0, 2, 3, 4)
+    vck = v.reshape(b, nc, kc, nh, hd).transpose(1, 0, 2, 3, 4)
+    kpos = positions.reshape(nc, kc)
+    qpos = positions[:, None]
+    # D = rowsum(dO * O) per query (B,nh,S)
+    d = jnp.einsum("bsnh,bsnh->bns", dout.astype(jnp.float32),
+                   out.astype(jnp.float32))
+
+    def body(dq_acc, chunk):
+        kc_, vc_, kp = chunk
+        scores = jnp.einsum("bsnh,bcnh->bnsc", q, kc_,
+                            preferred_element_type=jnp.float32) * scale
+        mask = (qpos >= kp[None, :]) if causal else jnp.ones((s, kc), bool)
+        if window:
+            mask = mask & (qpos - kp[None, :] < window)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        p = jnp.exp(scores - lse[..., None])               # (B,nh,S,C)
+        dv_c = jnp.einsum("bnsc,bsnh->bcnh", p,
+                          dout.astype(jnp.float32))
+        dp = jnp.einsum("bsnh,bcnh->bnsc", dout, vc_,
+                        preferred_element_type=jnp.float32)
+        ds = p * (dp - d[..., None]) * scale               # (B,nh,S,C)
+        dq_acc = dq_acc + jnp.einsum("bnsc,bcnh->bsnh", ds.astype(kc_.dtype),
+                                     kc_, preferred_element_type=jnp.float32)
+        dk_c = jnp.einsum("bnsc,bsnh->bcnh", ds.astype(q.dtype), q,
+                          preferred_element_type=jnp.float32)
+        return dq_acc, (dk_c, dv_c)
+
+    dq0 = jnp.zeros((b, s, nh, hd), jnp.float32)
+    dq, (dk_c, dv_c) = jax.lax.scan(body, dq0, (kck, vck, kpos))
+    dk = dk_c.transpose(1, 0, 2, 3, 4).reshape(b, t, nh, hd)
+    dv = dv_c.transpose(1, 0, 2, 3, 4).reshape(b, t, nh, hd)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype), None)
+
+
+flash_attention.defvjp(_flash_fwd_vjp, _flash_bwd)
+
+
+def _sdpa_chunked(q, k, v, positions, causal: bool, window: int, hd: int,
+                  kc: int = 1024):
+    """Online-softmax attention over key chunks (flash-style, pure JAX).
+
+    Never materializes the (S,T) score matrix: per scan step only a
+    (B,nh,S,kc) block is live — at S=4096 this cuts the attention HBM
+    term ~6x vs the naive path (each full-S^2 tensor was read/written
+    several times by sub/exp/mul/select). Exact (online max/sum), runs
+    under lax.scan so the trip-aware roofline accounts it.
+    """
+    b, s, nh, _ = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    nc = t // kc
+    kck = k.reshape(b, nc, kc, nh, hd).transpose(1, 0, 2, 3, 4)
+    vck = v.reshape(b, nc, kc, nh, hd).transpose(1, 0, 2, 3, 4)
+    kpos = positions.reshape(nc, kc)
+    qpos = positions[:, None]                       # (S,1)
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(carry, chunk):
+        m_prev, l_prev, acc = carry                 # (B,nh,S,1) x2, (B,nh,S,hd)
+        kc_, vc_, kp = chunk
+        scores = jnp.einsum("bsnh,bcnh->bnsc", q, kc_,
+                            preferred_element_type=jnp.float32) * scale
+        mask = (qpos >= kp[None, :]) if causal else jnp.ones((s, kc), bool)
+        if window:
+            mask = mask & (qpos - kp[None, :] < window)
+        scores = jnp.where(mask[None, None], scores, -1e30)
+        m_new = jnp.maximum(m_prev, scores.max(-1, keepdims=True))
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(scores - m_new)
+        l_new = l_prev * corr + p.sum(-1, keepdims=True)
+        pv = jnp.einsum("bnsc,bcnh->bnsh", p.astype(vc_.dtype), vc_,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr + pv
+        return (m_new, l_new, acc), None
+
+    init = (jnp.full((b, nh, s, 1), -jnp.inf, jnp.float32),
+            jnp.zeros((b, nh, s, 1), jnp.float32),
+            jnp.zeros((b, nh, s, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, (kck, vck, kpos))
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    return out.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+
+
+def attention(p, cfg: ModelConfig, x, positions, *, causal=True) -> jax.Array:
+    """Full-sequence attention (training / encoder / prefill compute).
+
+    Sequences longer than ``_CHUNKED_MIN`` use the online-softmax chunked
+    path; short sequences (smoke tests) take the exact naive path.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if s >= _CHUNKED_MIN and s % 1024 == 0:
+        g = cfg.num_heads // cfg.num_kv_heads
+        if g > 1:  # GQA repeat outside the custom_vjp (clean grads)
+            k = jnp.repeat(k, g, axis=2)
+            v = jnp.repeat(v, g, axis=2)
+        out = flash_attention(q, k, v, positions, causal,
+                              cfg.sliding_window, 1024)
+        return out.reshape(b, s, -1) @ p["wo"]
+    i = positions[..., :, None]  # query pos
+    j = positions[..., None, :]  # key pos
+    mask = (i >= j) if causal else jnp.ones((s, s), bool)
+    if cfg.sliding_window:
+        mask = mask & (i - j < cfg.sliding_window)
+    mask = jnp.broadcast_to(mask, (b, 1, 1, s, s))
+    out = _sdpa(q, k, v, mask, cfg.head_dim)
+    return out @ p["wo"]
+
+
+_CHUNKED_MIN = 2048
+
+
+def attention_prefill(p, cfg: ModelConfig, x, positions, cache_len: int):
+    """Forward over the prompt; returns (out, KVCache padded to cache_len).
+
+    RoPE is applied to K at write time, so decode never re-rotates cache.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    if s >= _CHUNKED_MIN and s % 1024 == 0:
+        g = cfg.num_heads // cfg.num_kv_heads
+        kr = jnp.repeat(k, g, axis=2) if g > 1 else k
+        vr = jnp.repeat(v, g, axis=2) if g > 1 else v
+        out = flash_attention(q, kr, vr, positions, True,
+                              cfg.sliding_window, 1024)
+        out = out.reshape(b, s, -1) @ p["wo"]
+    else:
+        i = positions[..., :, None]
+        j = positions[..., None, :]
+        mask = i >= j
+        if cfg.sliding_window:
+            mask = mask & (i - j < cfg.sliding_window)
+        mask = jnp.broadcast_to(mask, (b, 1, 1, s, s))
+        out = _sdpa(q, k, v, mask, cfg.head_dim) @ p["wo"]
+    w = cache_len
+    if cfg.sliding_window:
+        w = min(w, cfg.sliding_window)
+    if s >= w:  # keep last w entries (ring layout: slot = pos % w)
+        sel = (jnp.arange(w) + (s - w)) if not cfg.sliding_window else None
+        if cfg.sliding_window:
+            # ring buffer: slot = pos % w
+            slots = positions[..., -w:] % w
+            kk = jnp.zeros((b, w) + k.shape[2:], k.dtype).at[:, slots[-w:]].set(k[:, -w:])
+            vv = jnp.zeros((b, w) + v.shape[2:], v.dtype).at[:, slots[-w:]].set(v[:, -w:])
+        else:
+            kk, vv = k[:, sel], v[:, sel]
+    else:
+        pad = w - s
+        kk = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, KVCache(kk, vv)
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache: KVCache, pos):
+    """One-token decode. x: (B, 1, d), pos: scalar current position.
+
+    Full-attention: cache slot = pos (cache width >= seq_len).
+    Sliding-window: ring buffer, slot = pos % window.
+    """
+    b = x.shape[0]
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    w = cache.k.shape[1]
+    q = (x @ p["wq"]).reshape(b, 1, nh, hd)
+    k = (x @ p["wk"]).reshape(b, 1, nkv, hd)
+    v = (x @ p["wv"]).reshape(b, 1, nkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    posv = jnp.full((1,), pos, jnp.int32)
+    q = rope(q, posv, cfg.rope_theta)
+    k = rope(k, posv, cfg.rope_theta)
+    slot = pos % w if cfg.sliding_window else pos
+    kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+    # valid slots: those holding positions <= pos and within window
+    slot_ids = jnp.arange(w)
+    if cfg.sliding_window:
+        age = (slot - slot_ids) % w  # how many steps ago the slot was written
+        valid = (age < jnp.minimum(pos + 1, w))
+    else:
+        valid = slot_ids <= pos
+    mask = jnp.broadcast_to(valid[None, None, None, None, :], (b, 1, 1, 1, w))
+    out = _sdpa(q, kc, vc, mask, hd) @ p["wo"]
+    return out, KVCache(kc, vc)
+
+
+# -- cross-attention (VLM) -------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig) -> dict:
+    d, nh, nkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": _dense_init(ks[0], (d, nh * hd), cfg.param_dtype),
+        "wk": _dense_init(ks[1], (d, nkv * hd), cfg.param_dtype),
+        "wv": _dense_init(ks[2], (d, nkv * hd), cfg.param_dtype),
+        "wo": _dense_init(ks[3], (nh * hd, d), cfg.param_dtype),
+        "gate": jnp.zeros((), cfg.param_dtype),  # tanh gate, init 0 (llama3.2)
+        "q_norm": rmsnorm_init(hd, cfg.param_dtype),
+        "k_norm": rmsnorm_init(hd, cfg.param_dtype),
+    }
+
+
+def cross_attention(p, cfg: ModelConfig, x, kv_feats) -> jax.Array:
+    """x: (B, S, d) text; kv_feats: (B, T_img, d) projected vision tokens."""
+    b, s, _ = x.shape
+    t = kv_feats.shape[1]
+    nh, nkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"]).reshape(b, s, nh, hd)
+    k = (kv_feats @ p["wk"]).reshape(b, t, nkv, hd)
+    v = (kv_feats @ p["wv"]).reshape(b, t, nkv, hd)
+    q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+    k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    mask = jnp.ones((b, 1, 1, s, t), bool)
+    out = _sdpa(q, k, v, mask, hd) @ p["wo"]
+    return jnp.tanh(p["gate"].astype(jnp.float32)).astype(x.dtype) * out
+
+
+# -- MLP ---------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "wi": _dense_init(ks[0], (d, ff), cfg.param_dtype),
+        "wo": _dense_init(ks[1], (ff, d), cfg.param_dtype,
+                          scale=1.0 / math.sqrt(ff * 2 * cfg.num_layers)),
+    }
+    if cfg.act_fn == "silu":
+        p["wg"] = _dense_init(ks[2], (d, ff), cfg.param_dtype)
+    return p
+
+
+def mlp(p, cfg: ModelConfig, x) -> jax.Array:
+    h = x @ p["wi"]
+    if cfg.act_fn == "silu":
+        h = jax.nn.silu(x @ p["wg"]) * h
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["wo"]

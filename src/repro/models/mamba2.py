@@ -1,0 +1,176 @@
+"""Mamba2 block: SSD (state-space duality) chunked forward + recurrent decode.
+
+JAX port of the minimal SSD algorithm (Dao & Gu 2024, arXiv:2405.21060):
+within-chunk quadratic attention-like term + cross-chunk linear recurrence.
+State per layer: (B, H, P, N) with H=ssm heads, P=head dim, N=ssm_state —
+O(1) in sequence length, which is what makes long_500k decodable.
+
+Single group (G=1) for B/C projections, as in mamba2-370m.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init, rmsnorm_init, rmsnorm
+
+
+def mamba_init(key, cfg: ModelConfig) -> dict:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = di + 2 * n
+    ks = jax.random.split(key, 5)
+    return {
+        # order: [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": _dense_init(ks[0], (d, 2 * di + 2 * n + h), cfg.param_dtype),
+        "conv_w": _dense_init(ks[1], (cfg.conv_width, conv_dim), cfg.param_dtype,
+                              scale=1.0 / math.sqrt(cfg.conv_width)),
+        "conv_b": jnp.zeros((conv_dim,), cfg.param_dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": rmsnorm_init(di, cfg.param_dtype),
+        "out_proj": _dense_init(ks[2], (di, d), cfg.param_dtype,
+                                scale=1.0 / math.sqrt(di * 2 * cfg.num_layers)),
+    }
+
+
+def _segsum(x):
+    """x: (..., T) -> (..., T, T) lower-tri cumulative segment sums."""
+    t = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_log, b, c, d_skip, chunk: int):
+    """SSD scan. x: (B,S,H,P), dt: (B,S,H), a_log: (H,), b/c: (B,S,N).
+
+    Returns y: (B,S,H,P) and final state (B,H,P,N).
+    """
+    bs, s, h, p = x.shape
+    n = b.shape[-1]
+    assert s % chunk == 0, f"seq {s} % chunk {chunk}"
+    nc = s // chunk
+    a = -jnp.exp(a_log)                       # (H,)
+    dta = (dt * a).astype(jnp.float32)        # (B,S,H)
+
+    # chunked views
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h)
+    dtac = dta.reshape(bs, nc, chunk, h).transpose(0, 1, 3, 2)  # (B,nc,H,Q)
+    bc = b.reshape(bs, nc, chunk, n)
+    cc = c.reshape(bs, nc, chunk, n)
+
+    dtac_cs = jnp.cumsum(dtac, axis=-1)                         # (B,nc,H,Q)
+
+    # 1. within-chunk (diagonal blocks).
+    # Contraction order is hand-decomposed: a single 4-operand einsum lets
+    # XLA multiply X in BEFORE reducing s, materializing a rank-6
+    # (B,nc,H,Q,Q,P) tensor (537 MB/layer-step on the train_4k dry-run).
+    # Decomposed: mask M = CB . L . dt stays (B,nc,H,Q,Q); the X product
+    # is a batched (Q,Q)x(Q,P) matmul — MXU-shaped, no rank-6 temps.
+    l = jnp.exp(_segsum(dtac))                                  # (B,nc,H,Q,Q)
+    cb = jnp.einsum("bcln,bcsn->bcls", cc, bc,
+                    preferred_element_type=jnp.float32)         # (B,nc,Q,Q)
+    m = cb[:, :, None] * l * dtc.astype(jnp.float32).transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", m.astype(x.dtype), xc,
+                        preferred_element_type=jnp.float32)
+
+    # 2. chunk states (B,nc,H,P,N): decay from position s to end of chunk.
+    # Same decomposition: scale X by (decay*dt) first, then one matmul.
+    decay_out = jnp.exp(dtac_cs[..., -1:] - dtac_cs)            # (B,nc,H,Q)
+    w = (decay_out * dtc.astype(jnp.float32).transpose(0, 1, 3, 2))  # (B,nc,H,Q)
+    x_scaled = xc * w.transpose(0, 1, 3, 2)[..., None].astype(x.dtype)
+    states = jnp.einsum("bcsn,bcshp->bchpn", bc, x_scaled,
+                        preferred_element_type=jnp.float32)
+
+    # 3. inter-chunk recurrence: state_{c+1} = state_c * exp(sum dta_c) + states_c
+    chunk_decay = jnp.exp(dtac_cs[..., -1])                     # (B,nc,H)
+
+    def scan_fn(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state ENTERING the chunk
+
+    init = jnp.zeros((bs, h, p, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn,
+        init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)          # (B,nc,H,P,N)
+
+    # 4. off-diagonal contribution via entering state (decay from chunk
+    # start through position l inclusive). Decomposed: contract n first
+    # ((Q,N)x(N,P) matmul), then the elementwise decay.
+    decay_in = jnp.exp(dtac_cs)                                 # (B,nc,H,Q)
+    y_off = jnp.einsum("bcln,bchpn->bclhp", cc,
+                       prev_states.astype(jnp.float32),
+                       preferred_element_type=jnp.float32)
+    y_off = y_off * decay_in.transpose(0, 1, 3, 2)[..., None]
+
+    y = (y_diag + y_off).astype(x.dtype).reshape(bs, s, h, p)
+    y = y + d_skip[None, None, :, None].astype(x.dtype) * x
+    return y, final
+
+
+def _causal_conv(seq, w, bias):
+    """seq: (B,S,C), w: (W,C) depthwise causal."""
+    width = w.shape[0]
+    pad = jnp.pad(seq, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + seq.shape[1], :] * w[i][None, None, :]
+        for i in range(width)
+    )
+    return out + bias[None, None, :]
+
+
+def mamba_apply(p, cfg: ModelConfig, x: jax.Array):
+    """Full-sequence forward. x: (B,S,d) -> (B,S,d), final ssm state."""
+    bsz, s, _ = x.shape
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xs, b, c, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)
+    conv_out = jax.nn.silu(_causal_conv(conv_in, p["conv_w"], p["conv_b"]))
+    xs, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    y, state = ssd_chunked(
+        xs.reshape(bsz, s, h, hp), dt, p["A_log"], b, c, p["D"], cfg.ssm_chunk
+    )
+    y = y.reshape(bsz, s, di) * jax.nn.silu(z)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return y @ p["out_proj"], state
+
+
+class MambaCache:
+    """Decode-time state: conv tail + ssm state (pytree via NamedTuple-like)."""
+
+
+def mamba_decode(p, cfg: ModelConfig, x, conv_state, ssm_state):
+    """One-token step. x: (B,1,d); conv_state: (B,W-1,conv_dim);
+    ssm_state: (B,H,P,N). Returns (y, conv_state', ssm_state')."""
+    bsz = x.shape[0]
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x[:, 0] @ p["in_proj"]                              # (B, ...)
+    z, xs, b, c, dt = jnp.split(zxbcdt, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xs, b, c], axis=-1)               # (B, conv_dim)
+    window = jnp.concatenate([conv_state, conv_in[:, None]], axis=1)  # (B,W,C)
+    conv_out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xs, b, c = jnp.split(conv_out, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["A_log"])                                     # (H,)
+    da = jnp.exp(dt * a)                                         # (B,H)
+    xh = xs.reshape(bsz, h, hp).astype(jnp.float32)
+    dbx = jnp.einsum("bh,bn,bhp->bhpn", dt, b.astype(jnp.float32), xh)
+    ssm_state = ssm_state * da[..., None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", ssm_state, c.astype(jnp.float32))
+    y = y + p["D"][None, :, None] * xh
+    y = (y.reshape(bsz, di) * jax.nn.silu(z).astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(p["norm"], y, cfg.norm_eps)
+    return (y @ p["out_proj"])[:, None], window[:, 1:], ssm_state

@@ -1,0 +1,110 @@
+"""Mixture-of-Experts layer (dbrx 16e/top-4, moonshot 64e/top-6).
+
+Sort-based dispatch (Megablocks-style, no (T,E,C) one-hot): token->expert
+assignments are sorted by expert id, packed into (E, C) capacity slots via
+cumulative positions, run through a single batched (E,C,d)x(E,d,ff) einsum,
+and combined back with router weights. Overflow beyond the capacity factor
+is dropped (standard). Expert weights carry an 'experts' logical axis ->
+sharded over 'model' (expert parallelism).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _dense_init
+
+
+def moe_init(key, cfg: ModelConfig) -> dict:
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, e), jnp.float32, scale=0.02),
+        "wi": _dense_init(ks[1], (e, d, ff), cfg.param_dtype),
+        "wg": _dense_init(ks[2], (e, d, ff), cfg.param_dtype),
+        "wo": _dense_init(ks[3], (e, ff, d), cfg.param_dtype,
+                          scale=1.0 / math.sqrt(ff * 2 * cfg.num_layers)),
+    }
+    if cfg.moe_shared_ff:
+        from repro.models.layers import mlp_init
+        p["shared"] = mlp_init(ks[4], cfg, d_ff=cfg.moe_shared_ff)
+    return p
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(cfg.capacity_factor * tokens * cfg.experts_per_token / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)  # align to 8
+
+
+def _constrain(x, spec):
+    """Guarded with_sharding_constraint (no-op outside a mesh context)."""
+    from jax.sharding import PartitionSpec as P
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+    except (ValueError, RuntimeError, TypeError):
+        return x
+
+
+def moe_apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """x: (T, d) flattened tokens -> (T, d).
+
+    Sharding note (found via dry-run HLO): without constraints the
+    partitioner reshards the k-times-duplicated (T*k, d) gathered-token
+    buffer between the d-sharded stream and the expert-sharded dispatch
+    (201 MB all-gather + all-reduce per layer on moonshot). Replicating
+    the (T, d) input FIRST moves the reshard to a 6x smaller tensor; the
+    combine-side scatter from expert shards then lowers to a partial
+    scatter + (T, d) all-reduce.
+    """
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = capacity(cfg, t)
+    if cfg.act_dp_axes is None:
+        # shard_map-manual-dp (sparcml) context: replicate the (T,d) input
+        # over 'model' once so dispatch gathers are local (see docstring).
+        x = _constrain(x, (None, None))
+    else:
+        # auto-SPMD: keep batch over dp, free d; the slot gather then only
+        # reshards (T,d), not the k-duplicated buffer.
+        x = _constrain(x, (tuple(cfg.act_dp_axes), None))
+
+    gates = jax.nn.softmax((x @ p["router"].astype(x.dtype)).astype(jnp.float32))
+    w, eidx = jax.lax.top_k(gates, k)                      # (T, k)
+    w = (w / (w.sum(-1, keepdims=True) + 1e-9)).astype(x.dtype)
+
+    flat_e = eidx.reshape(-1).astype(jnp.int32)            # (T*k,)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e, dtype=jnp.int32))
+    pos_in_seg = jnp.arange(t * k, dtype=jnp.int32) - seg_start[sorted_e]
+    keep = pos_in_seg < c
+    slot = jnp.where(keep, sorted_e * c + pos_in_seg, e * c)  # OOB sentinel
+    token_of = (order // k).astype(jnp.int32)
+
+    # Inverted dispatch: a slot->token map lets us GATHER from the
+    # replicated (T,d) x (local, no collective) instead of scattering
+    # (T*k,d) into an expert-sharded buffer (which the partitioner lowers
+    # to full-buffer all-reduces — found via dry-run HLO). The small i32
+    # maps are the only resharded scatters.
+    slot_token = jnp.full((e * c,), t, jnp.int32).at[slot].set(
+        token_of, mode="drop")                                 # T = empty
+    slot_w = jnp.zeros((e * c,), x.dtype).at[slot].set(
+        w.reshape(-1)[order], mode="drop")
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)])   # sentinel row
+    xin = _constrain(x_pad[slot_token].reshape(e, c, d), ("model", None, None))
+    h = jnp.einsum("ecd,edf->ecf", xin, p["wi"].astype(x.dtype))
+    g = jnp.einsum("ecd,edf->ecf", xin, p["wg"].astype(x.dtype))
+    out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, p["wo"].astype(x.dtype))
+
+    # Combine: scatter-add expert outputs back to tokens (partial scatter
+    # per expert shard + one (T,d) all-reduce — the cheap direction).
+    upd = out.reshape(e * c, d) * slot_w[:, None]
+    y = jnp.zeros((t + 1, d), x.dtype).at[slot_token].add(upd, mode="drop")[:t]
+
+    if cfg.moe_shared_ff:
+        from repro.models.layers import mlp
+        y = y + mlp(p["shared"], cfg, x)
+    return y

@@ -1,0 +1,59 @@
+"""Sharding rules: logical param axes -> mesh PartitionSpecs.
+
+Mesh axes (launch/mesh.py): ('pod', 'data', 'model') multi-pod or
+('data', 'model') single pod. Two parameter-placement modes:
+
+* fsdp=True  — params/opt-state sharded over ('pod','data') too (ZeRO-3
+               style); required for llama3-405b / dbrx-132b.
+* fsdp=False — params replicated over data (pure DP+TP); required by the
+               sparcml sync mode (per-rank gradient compression; see
+               DESIGN.md §2.2).
+
+Logical axes used by model code:
+  'embed_vocab'  vocab dim of embedding/unembedding    -> 'model'
+  'tp'           the tensor-parallel dim of a matmul   -> 'model'
+  'fsdp'         the dim FSDP shards                   -> ('pod','data') | None
+  'experts'      MoE expert dim                        -> 'model' (EP)
+  None           replicated
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def rules(fsdp: bool, mesh: Mesh) -> dict:
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp = dp_axes if (fsdp and dp_axes) else None
+    return {
+        "embed_vocab": "model",
+        "tp": "model",
+        "fsdp": dp,
+        "experts": "model",
+        "dp": dp_axes,  # activation batch axes
+        None: None,
+    }
+
+
+def spec(mesh: Mesh, fsdp: bool, *logical_axes) -> P:
+    r = rules(fsdp, mesh)
+    return P(*(r.get(a, None) for a in logical_axes))
+
+
+def batch_spec(mesh: Mesh, *trailing) -> P:
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(dp_axes, *trailing)
+
+
+def sharding(mesh: Mesh, s: Optional[P]) -> NamedSharding:
+    return NamedSharding(mesh, s if s is not None else P())
+
+
+def constrain(x, mesh: Mesh, s: P):
+    """with_sharding_constraint if x is traced under this mesh, else no-op."""
+    try:
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, s))
+    except (ValueError, RuntimeError):
+        return x

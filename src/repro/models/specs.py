@@ -1,0 +1,89 @@
+"""Path-based PartitionSpec rules for model parameters.
+
+Leading stack axes (layer / superblock nesting) are always unsharded; the
+trailing named dims follow MaxText-style TP/FSDP rules. ``fsdp`` is the
+tuple of data axes (('pod','data')) or None for DP-replicated placement
+(required by sparcml sync — DESIGN.md §2.2).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def _leaf_spec(path: tuple, leaf, fsdp, cfg: ModelConfig) -> P:
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1]
+    ndim = len(leaf.shape)
+
+    def with_stack(*trailing) -> P:
+        """Pad leading stack axes with None."""
+        lead = ndim - len(trailing)
+        return P(*([None] * lead + list(trailing)))
+
+    if name == "embed":
+        # d_model over TP, vocab REPLICATED: a token gather over a
+        # vocab-sharded table forces GSPMD to replicate its output (and
+        # with it the whole residual stream) — found via dry-run HLO.
+        return P(None, "model")
+    if name == "unembed":
+        return P(fsdp, "model")
+    if name == "vision_proj" or name == "frontend_proj":
+        return P(fsdp, "model")
+    if name == "pos_embed":
+        return P(None, fsdp)
+
+    in_moe = "moe" in names
+    if in_moe and name in ("wi", "wg"):
+        return with_stack("model", fsdp, None)   # (E,d,ff): EP over experts
+    if in_moe and name == "wo":
+        return with_stack("model", None, fsdp)
+    if name == "router":
+        return with_stack(None, None)
+
+    if name in ("wq", "wk", "wv", "wi", "wg", "in_proj"):
+        return with_stack(fsdp, "model")
+    if name in ("wo", "out_proj"):
+        return with_stack("model", fsdp)
+
+    # norms, gates, conv, A_log, D, dt_bias, scale ... replicated
+    return P()
+
+
+def param_specs(params_or_shapes, cfg: ModelConfig, fsdp_axes: Optional[tuple]):
+    """Pytree of PartitionSpecs matching the params tree.
+
+    fsdp_axes: e.g. ('pod','data') for ZeRO-3 placement, None for
+    DP-replicated (sparcml mode).
+    """
+    fsdp = fsdp_axes if fsdp_axes else None
+
+    def one(path, leaf):
+        spec = _leaf_spec(path, leaf, fsdp, cfg)
+        # Never shard a dim that the axis size doesn't divide; XLA would
+        # error at lower time. Replace such entries with None.
+        return spec
+
+    return jax.tree_util.tree_map_with_path(one, params_or_shapes)
+
+
+def validate_divisibility(shapes, specs, mesh) -> list[str]:
+    """Return a list of leaves whose sharded dims don't divide evenly
+    (informational; XLA pads, but uneven shards waste memory)."""
+    bad = []
+
+    def check(path, sds, spec):
+        for dim, names in zip(sds.shape, tuple(spec) + (None,) * 8):
+            if names is None:
+                continue
+            for nm in (names if isinstance(names, tuple) else (names,)):
+                sz = mesh.shape[nm]
+                if dim % sz:
+                    bad.append(f"{jax.tree_util.keystr(path)}: {dim} % {nm}={sz}")
+
+    jax.tree_util.tree_map_with_path(check, shapes, specs)
+    return bad

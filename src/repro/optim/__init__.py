@@ -1,0 +1,4 @@
+from repro.optim.optimizers import (  # noqa: F401
+    OptimizerConfig, adamw, init_opt_state, opt_update, sgd_momentum,
+)
+from repro.optim.schedule import make_schedule, ScheduleConfig  # noqa: F401

@@ -1,0 +1,89 @@
+"""Optimizers: AdamW and SGD+momentum (the paper's Alg. 2 setting), pure
+pytree transforms. Optimizer-state dtype is configurable (bf16 states for
+llama3-405b keep the 256-chip pod under HBM — DESIGN.md §2.3)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptimizerConfig:
+    kind: str = "adamw"            # adamw | sgdm
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    momentum: float = 0.9          # sgdm
+    state_dtype: Any = jnp.float32 # bf16 for very large models
+    grad_clip: float = 1.0
+
+
+def init_opt_state(params, cfg: OptimizerConfig):
+    z = lambda p: jnp.zeros(p.shape, cfg.state_dtype)
+    if cfg.kind == "adamw":
+        return {"mu": jax.tree.map(z, params), "nu": jax.tree.map(z, params),
+                "count": jnp.zeros((), jnp.int32)}
+    if cfg.kind == "sgdm":
+        return {"mu": jax.tree.map(z, params), "count": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.kind)
+
+
+def _global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * factor).astype(g.dtype), grads), norm
+
+
+def adamw(params, grads, state, lr, cfg: OptimizerConfig):
+    count = state["count"] + 1
+    b1, b2 = cfg.beta1, cfg.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m2 = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v2 = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        step = (m2 / c1) / (jnp.sqrt(v2 / c2) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * step
+        return p2.astype(p.dtype), m2.astype(m.dtype), v2.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"mu": new_m, "nu": new_v, "count": count}
+
+
+def sgd_momentum(params, grads, state, lr, cfg: OptimizerConfig):
+    count = state["count"] + 1
+
+    def upd(p, g, m):
+        m2 = cfg.momentum * m.astype(jnp.float32) + g.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * m2
+        return p2.astype(p.dtype), m2.astype(m.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["mu"])
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"mu": new_m, "count": count}
+
+
+def opt_update(params, grads, state, lr, cfg: OptimizerConfig):
+    if cfg.grad_clip:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    if cfg.kind == "adamw":
+        return adamw(params, grads, state, lr, cfg)
+    if cfg.kind == "sgdm":
+        return sgd_momentum(params, grads, state, lr, cfg)
+    raise ValueError(cfg.kind)

@@ -1,0 +1,43 @@
+"""Learning-rate schedules: cosine, linear, and WSD (warmup-stable-decay,
+the minicpm-2b schedule [arXiv:2404.06395])."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ScheduleConfig:
+    kind: str = "cosine"       # cosine | linear | wsd | constant
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    final_frac: float = 0.1    # final lr as fraction of peak
+    wsd_decay_frac: float = 0.1  # last fraction of steps spent decaying
+
+
+def make_schedule(cfg: ScheduleConfig):
+    def sched(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.minimum(1.0, s / jnp.maximum(1, cfg.warmup_steps))
+        if cfg.kind == "constant":
+            frac = 1.0
+        elif cfg.kind == "linear":
+            t = jnp.clip((s - cfg.warmup_steps)
+                         / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+            frac = 1.0 - (1.0 - cfg.final_frac) * t
+        elif cfg.kind == "cosine":
+            t = jnp.clip((s - cfg.warmup_steps)
+                         / jnp.maximum(1, cfg.total_steps - cfg.warmup_steps), 0, 1)
+            frac = cfg.final_frac + (1 - cfg.final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        elif cfg.kind == "wsd":
+            decay_start = cfg.total_steps * (1.0 - cfg.wsd_decay_frac)
+            t = jnp.clip((s - decay_start)
+                         / jnp.maximum(1, cfg.total_steps - decay_start), 0, 1)
+            frac = 1.0 - (1.0 - cfg.final_frac) * t  # stable then linear decay
+        else:
+            raise ValueError(cfg.kind)
+        return cfg.peak_lr * warm * frac
+
+    return sched

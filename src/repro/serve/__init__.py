@@ -1,0 +1,1 @@
+from repro.serve.engine import ServeEngine, build_serve_step  # noqa: F401

@@ -1,0 +1,166 @@
+"""Serving: batched prefill + synchronous batched greedy decode.
+
+``build_serve_step`` returns the jitted one-token decode function — the
+object the dry-run lowers for decode_32k / long_500k cells. The engine
+wraps it with a minimal batching loop (fixed slots, batch-synchronous;
+continuous batching is a documented extension point, DESIGN.md §2.3).
+
+Cache sharding is divisibility-aware (found via the 40-cell dry-run):
+  * batch over dp only when global_batch divides dp (long_500k has B=1:
+    the cell is TP-only, honestly reported as such in the roofline),
+  * KV W (sequence) axis over 'model' when kv-heads < TP (GQA: 8 kv heads
+    cannot shard 16 ways) — i.e. context-parallel attention decode,
+  * head axis over 'model' when it divides evenly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.model import Model
+from repro.models.specs import param_specs
+from repro.train.train_step import dp_axes_of, dp_total_of
+
+
+def _div(n: int, by: int) -> bool:
+    return by > 0 and n % by == 0
+
+
+def decode_state_specs(model: Model, mesh: Mesh, batch_size: int,
+                       cache_len: int):
+    """Shard caches: batch over dp (if divisible), heads or sequence over
+    'model' (whichever divides)."""
+    cfg = model.cfg
+    tp = mesh.shape["model"]
+    dp_ax = dp_axes_of(mesh)
+    dp = dp_ax if _div(batch_size, dp_total_of(mesh)) else None
+
+    w = cache_len
+    if cfg.sliding_window:
+        w = min(w, cfg.sliding_window)
+
+    def kv_spec(leading: int):
+        # (lead..., B, W, nkv, hd)
+        if _div(cfg.num_kv_heads, tp):
+            return P(*([None] * leading), dp, None, "model", None)
+        if _div(w, tp):
+            return P(*([None] * leading), dp, "model", None, None)
+        return P(*([None] * leading), dp, None, None, None)
+
+    from repro.models.model import DecodeState
+    from repro.models.layers import KVCache
+
+    kv = cross_kv = conv = ssm = None
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    if cfg.family in ("dense", "moe"):
+        kv = KVCache(kv_spec(1), kv_spec(1))
+    elif cfg.family == "hybrid":
+        kv = KVCache(kv_spec(1), kv_spec(1))
+        conv = P(None, dp, None, "model" if _div(conv_dim, tp) else None)
+        ssm = P(None, dp, "model" if _div(cfg.ssm_heads, tp) else None, None, None)
+    elif cfg.family == "ssm":
+        conv = P(None, dp, None, "model" if _div(conv_dim, tp) else None)
+        ssm = P(None, dp, "model" if _div(cfg.ssm_heads, tp) else None, None, None)
+    elif cfg.family == "vlm":
+        # self-attn caches (nsb, every-1, B, W, nkv, hd)
+        kv = KVCache(kv_spec(2), kv_spec(2))
+        # image K/V (nsb, B, T_img, nkv, hd): shard T_img over model
+        t_ok = _div(cfg.num_image_tokens, tp)
+        ckv = P(None, dp, "model" if t_ok else None, None, None)
+        cross_kv = (ckv, ckv)
+    return DecodeState(pos=P(), kv=kv, cross_kv=cross_kv, conv=conv, ssm=ssm)
+
+
+def _sh(mesh: Mesh):
+    return lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()), t,
+        is_leaf=lambda x: x is None or isinstance(x, P))
+
+
+def _logit_spec(cfg, mesh: Mesh, batch_size: int) -> P:
+    dp = dp_axes_of(mesh) if _div(batch_size, dp_total_of(mesh)) else None
+    return P(dp, "model" if _div(cfg.padded_vocab, mesh.shape["model"]) else None)
+
+
+def build_serve_step(model: Model, mesh: Mesh, batch_size: int = 8,
+                     cache_len: int = 4096, fsdp: bool = False):
+    """(jitted decode_step(params, state, tokens) -> (logits, state'),
+    (param_specs, state_specs))."""
+    cfg = model.cfg
+    pspecs = param_specs(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0)), cfg,
+        dp_axes_of(mesh) if fsdp else None)
+    sspecs = decode_state_specs(model, mesh, batch_size, cache_len)
+    dp = dp_axes_of(mesh) if _div(batch_size, dp_total_of(mesh)) else None
+    sh = _sh(mesh)
+
+    def step(params, state, tokens):
+        return model.decode_step(params, state, tokens)
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(sh(pspecs), sh(sspecs),
+                      NamedSharding(mesh, P(dp, None))),
+        out_shardings=(NamedSharding(mesh, _logit_spec(cfg, mesh, batch_size)),
+                       sh(sspecs)),
+        donate_argnums=(1,),
+    )
+    return jitted, (pspecs, sspecs)
+
+
+def build_prefill(model: Model, mesh: Mesh, cache_len: int,
+                  batch_size: int = 8, fsdp: bool = False):
+    cfg = model.cfg
+    pspecs = param_specs(
+        jax.eval_shape(model.init, jax.random.PRNGKey(0)), cfg,
+        dp_axes_of(mesh) if fsdp else None)
+    sspecs = decode_state_specs(model, mesh, batch_size, cache_len)
+    dp = dp_axes_of(mesh) if _div(batch_size, dp_total_of(mesh)) else None
+    sh = _sh(mesh)
+
+    def pre(params, batch):
+        return model.prefill(params, batch, cache_len)
+
+    bspec = {"tokens": P(dp, None)}
+    if cfg.family == "vlm":
+        bspec["image_embeds"] = P(dp, None, None)
+    jitted = jax.jit(
+        pre,
+        in_shardings=(sh(pspecs), sh(bspec)),
+        out_shardings=(NamedSharding(mesh, _logit_spec(cfg, mesh, batch_size)),
+                       sh(sspecs)),
+    )
+    return jitted, (pspecs, sspecs)
+
+
+class ServeEngine:
+    """Minimal batched greedy-decoding engine over fixed slots."""
+
+    def __init__(self, model: Model, mesh: Mesh, params, cache_len: int = 256,
+                 batch_size: int = 8):
+        self.model = model
+        self.mesh = mesh
+        self.params = params
+        self.cache_len = cache_len
+        self.decode_fn, _ = build_serve_step(
+            model, mesh, batch_size=batch_size, cache_len=cache_len)
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 16,
+                 image_embeds: Optional[np.ndarray] = None) -> np.ndarray:
+        """prompts: (B, S) int32 -> (B, max_new_tokens) greedy tokens."""
+        batch = {"tokens": jnp.asarray(prompts)}
+        if image_embeds is not None:
+            batch["image_embeds"] = jnp.asarray(image_embeds)
+        with self.mesh:
+            logits, state = self.model.prefill(self.params, batch, self.cache_len)
+            toks = []
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            for _ in range(max_new_tokens):
+                toks.append(np.asarray(cur))
+                logits, state = self.decode_fn(self.params, state, cur)
+                cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return np.concatenate(toks, axis=1)

@@ -1,0 +1,2 @@
+from repro.train.state import TrainState, TrainConfig  # noqa: F401
+from repro.train.train_step import build_train_step, init_state  # noqa: F401

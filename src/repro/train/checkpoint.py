@@ -1,0 +1,148 @@
+"""Checkpointing: atomic, resumable, mesh-shape-aware.
+
+Layout:  <dir>/step_<N>/
+            arrays.npz     flattened leaves by index
+            meta.json      step, tree structure token, leaf paths, dp_total
+
+* Atomic: written to step_<N>.tmp then os.replace'd — a crash mid-save
+  never corrupts the latest checkpoint.
+* Elastic restarts: leaves whose shapes depend on the replica count
+  (error-feedback residuals, ZeRO-1 chunks) are re-initialized /
+  re-chunked when the mesh changes (`restore(..., remesh=True)`): the EF
+  residual is a lossy accumulator, so resetting it on a resize is safe
+  (one step of slightly stale compression — documented in DESIGN.md §2.3).
+* Multi-host note: this writes the full addressable state from host 0;
+  on a real pod each host would write its addressable shards (same API,
+  path per host) — the layout keeps leaf paths stable for that extension.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.state import TrainState
+
+
+def _flatten_with_paths(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        tree, is_leaf=lambda x: x is None)
+    paths = [jax.tree_util.keystr(p) for p, _ in flat]
+    leaves = [v for _, v in flat]
+    return paths, leaves
+
+
+def save(directory: str, state: TrainState, *, dp_total: int,
+         keep_last: int = 3, async_save: bool = False) -> str:
+    step = int(state.step)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    paths, leaves = _flatten_with_paths(state)
+    host_leaves = [None if l is None else np.asarray(jax.device_get(l)) for l in leaves]
+
+    def _write():
+        arrays = {f"leaf_{i}": a for i, a in enumerate(host_leaves) if a is not None}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        meta = {
+            "step": step,
+            "dp_total": dp_total,
+            "paths": paths,
+            "none_leaves": [i for i, a in enumerate(host_leaves) if a is None],
+        }
+        with open(os.path.join(tmp, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        _gc(directory, keep_last)
+
+    if async_save:
+        t = threading.Thread(target=_write, daemon=True)
+        t.start()
+        return final
+    _write()
+    return final
+
+
+def _gc(directory: str, keep_last: int):
+    ckpts = sorted(
+        d for d in os.listdir(directory)
+        if re.fullmatch(r"step_\d{8}", d)
+    )
+    for d in ckpts[:-keep_last]:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    ckpts = sorted(
+        d for d in os.listdir(directory)
+        if re.fullmatch(r"step_\d{8}", d)
+    )
+    return int(ckpts[-1].split("_")[1]) if ckpts else None
+
+
+def restore(directory: str, like: TrainState, *, dp_total: int,
+            step: Optional[int] = None, shardings=None,
+            remesh: bool = False) -> TrainState:
+    """Restore into the structure/shapes of `like` (abstract or concrete).
+
+    remesh=True allows restoring a checkpoint written under a different
+    dp_total: replica-dependent leaves (leading axis == old dp_total but
+    != new) are reset to zeros of the new shape.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(d, "arrays.npz"))
+    none_set = set(meta["none_leaves"])
+
+    paths, like_leaves = _flatten_with_paths(like)
+    assert paths == meta["paths"], "checkpoint/state structure mismatch"
+    out = []
+    for i, ll in enumerate(like_leaves):
+        if ll is None or i in none_set:
+            out.append(None)
+            continue
+        arr = data[f"leaf_{i}"]
+        want = tuple(ll.shape)
+        if arr.shape != want:
+            if remesh and meta["dp_total"] != dp_total:
+                arr = _rechunk(arr, want, meta["dp_total"], dp_total)
+            else:
+                raise ValueError(
+                    f"shape mismatch at {paths[i]}: ckpt {arr.shape} vs {want} "
+                    f"(use remesh=True for elastic restarts)")
+        out.append(jnp.asarray(arr.astype(ll.dtype)))
+    treedef = jax.tree_util.tree_structure(like, is_leaf=lambda x: x is None)
+    state = jax.tree_util.tree_unflatten(treedef, out)
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return state
+
+
+def _rechunk(arr: np.ndarray, want: tuple, old_dp: int, new_dp: int) -> np.ndarray:
+    """Re-partition replica-dependent leaves across a different dp size.
+
+    ZeRO-1 chunks (old_dp, rows, w_old): gather cols -> re-split.
+    EF residuals (old_dp, rows, cols): lossy accumulator -> reset.
+    """
+    if arr.ndim == 3 and arr.shape[0] == old_dp and want[0] == new_dp:
+        if arr.shape[1] == want[1] and arr.shape[2] * old_dp == want[2] * new_dp:
+            full = np.concatenate([arr[i] for i in range(old_dp)], axis=1)
+            return np.stack(np.split(full, new_dp, axis=1))
+        return np.zeros(want, arr.dtype)  # residual: reset (documented lossy)
+    raise ValueError(f"cannot rechunk {arr.shape} -> {want}")

@@ -1,0 +1,38 @@
+"""Train state + top-level training configuration."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, NamedTuple, Optional
+
+import jax
+
+from repro.core.compressor import SyncConfig
+from repro.optim.optimizers import OptimizerConfig
+from repro.optim.schedule import ScheduleConfig
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    residuals: Any       # error-feedback state (sparcml) or None
+    step: jax.Array      # i32 scalar
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    sync: SyncConfig = field(default_factory=SyncConfig)
+    optimizer: OptimizerConfig = field(default_factory=OptimizerConfig)
+    schedule: ScheduleConfig = field(default_factory=ScheduleConfig)
+    microbatches: int = 1            # gradient-accumulation steps
+    fsdp: bool = False               # ZeRO-3 param placement (dense mode only)
+    zero1: bool = True               # shard opt state over dp in sparcml mode
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.fsdp and self.sync.mode == "sparcml":
+            raise ValueError(
+                "sparcml sync requires DP-replicated params (fsdp=False): "
+                "per-rank error-feedback residuals are O(model) per rank and "
+                "cannot compose with ZeRO-3 sharding — see DESIGN.md "
+                "§Arch-applicability and the paper's §8.4 ResNet50 discussion."
+            )

@@ -1,0 +1,366 @@
+"""train_step builder: dense (XLA-auto collectives) and sparcml (paper
+Alg. 2) gradient synchronization, microbatch accumulation, ZeRO-1 sharded
+optimizer state, all under one jitted function per configuration.
+
+sparcml mode structure (DESIGN.md §2.2):
+
+  shard_map over dp axes ('pod','data'), AUTO over 'model':
+    local grads (jax.grad on the rank's batch shard; TP collectives are
+    inserted by XLA under the auto axis)
+    -> accumulate over microbatches locally (ONE sync per step — the
+       paper's non-blocking/fusion insight, free here by construction)
+    -> sync_grads_inside: bucket-TopK + error feedback + sparse allreduce
+       (+ optional QSGD on the dense phase) over 'data', psum over 'pod'
+    -> ZeRO-1 update: each rank updates a 1/dp slice of the canonical
+       param layout from its optimizer-state chunk, then all-gathers
+       updated slices (composes with DSAR exactly like the paper's dense
+       allgather second phase).
+
+dense mode: plain jit; params/opt-state optionally FSDP-sharded (ZeRO-3);
+XLA inserts reduce-scatter/all-gather from shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import compressor as comp
+from repro.models.config import ModelConfig
+from repro.models.model import Model
+from repro.models.specs import param_specs
+from repro.optim.optimizers import clip_by_global_norm, init_opt_state, opt_update
+from repro.optim.schedule import make_schedule
+from repro.train.state import TrainConfig, TrainState
+
+
+def dp_axes_of(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def dp_total_of(mesh: Mesh) -> int:
+    return int(np.prod([mesh.shape[a] for a in dp_axes_of(mesh)]))
+
+
+# --------------------------------------------------------------------------
+# ZeRO-1 canonical chunking (sparcml mode)
+# --------------------------------------------------------------------------
+
+def _chunk_cols(shape, spec, cfg_sync, dp_total: int) -> tuple[int, int]:
+    rows, cols = comp.canonical_shape(shape, spec, cfg_sync.bucket_size)
+    assert cols % dp_total == 0, (shape, cols, dp_total)
+    return rows, cols // dp_total
+
+
+def zero1_state_shapes(param_shapes, specs, tcfg: TrainConfig, dp_total: int):
+    """Opt-state leaves stored as (dp_total, rows, cols/dp) canonical chunks."""
+    n_slots = 2 if tcfg.optimizer.kind == "adamw" else 1
+
+    def one(sd, spec):
+        rows, w = _chunk_cols(sd.shape, spec, tcfg.sync, dp_total)
+        return jax.ShapeDtypeStruct((dp_total, rows, w), tcfg.optimizer.state_dtype)
+
+    mu = jax.tree.map(one, param_shapes, specs)
+    out = {"mu": mu, "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    if n_slots == 2:
+        out["nu"] = jax.tree.map(one, param_shapes, specs)
+    return out
+
+
+def zero1_state_specs(param_shapes, specs, tcfg: TrainConfig, dp_axes):
+    def one(sd, spec):
+        ax = comp._model_axis(spec)
+        return P(dp_axes, "model" if ax is not None else None, None)
+
+    mu = jax.tree.map(one, param_shapes, specs)
+    out = {"mu": mu, "count": P()}
+    if tcfg.optimizer.kind == "adamw":
+        out["nu"] = mu
+    return out
+
+
+# --------------------------------------------------------------------------
+# State construction
+# --------------------------------------------------------------------------
+
+def state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh, key=None):
+    """(abstract TrainState, TrainState of PartitionSpecs) without allocating."""
+    if key is None:
+        key = jax.random.PRNGKey(tcfg.seed)
+    pshapes = jax.eval_shape(model.init, key)
+    fsdp_axes = dp_axes_of(mesh) if tcfg.fsdp else None
+    pspecs = param_specs(pshapes, model.cfg, fsdp_axes)
+    dp_total = dp_total_of(mesh)
+    dp_ax = dp_axes_of(mesh)
+
+    if tcfg.sync.mode == "sparcml" and tcfg.zero1:
+        oshapes = zero1_state_shapes(pshapes, pspecs, tcfg, dp_total)
+        ospecs = zero1_state_specs(pshapes, pspecs, tcfg, dp_ax)
+    else:
+        oshapes = jax.eval_shape(
+            lambda p: init_opt_state(p, tcfg.optimizer), pshapes)
+        n_opt = {"adamw": 2, "sgdm": 1}[tcfg.optimizer.kind]
+        ospecs = {"mu": pspecs, "count": P()}
+        if n_opt == 2:
+            ospecs["nu"] = pspecs
+
+    if tcfg.sync.mode == "sparcml":
+        rshapes = comp.residual_shapes(pshapes, pspecs, tcfg.sync, dp_total)
+        rspecs = comp.residual_specs(pshapes, pspecs, tcfg.sync, dp_total, dp_ax)
+    else:
+        rshapes = rspecs = None
+
+    shapes = TrainState(params=pshapes, opt=oshapes, residuals=rshapes,
+                        step=jax.ShapeDtypeStruct((), jnp.int32))
+    specs = TrainState(params=pspecs, opt=ospecs, residuals=rspecs, step=P())
+    return shapes, specs
+
+
+def init_state(model: Model, tcfg: TrainConfig, mesh: Mesh, key=None) -> tuple:
+    """Materialize a sharded TrainState (for smoke tests / examples)."""
+    if key is None:
+        key = jax.random.PRNGKey(tcfg.seed)
+    shapes, specs = state_shapes(model, tcfg, mesh, key)
+
+    def make():
+        params = model.init(key)
+        if tcfg.sync.mode == "sparcml" and tcfg.zero1:
+            opt = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), shapes.opt,
+                is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        else:
+            opt = init_opt_state(params, tcfg.optimizer)
+        res = None
+        if shapes.residuals is not None:
+            res = jax.tree.map(
+                lambda s: None if s is None else jnp.zeros(s.shape, s.dtype),
+                shapes.residuals, is_leaf=lambda x: x is None or isinstance(x, jax.ShapeDtypeStruct))
+        return TrainState(params, opt, res, jnp.zeros((), jnp.int32))
+
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()),
+        specs, is_leaf=lambda x: x is None or isinstance(x, P))
+    with mesh:
+        state = jax.jit(make, out_shardings=shardings)()
+    return state, specs
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
+    dp = dp_axes_of(mesh)
+    out = {"tokens": P(dp, None), "labels": P(dp, None)}
+    if cfg.family == "vlm":
+        out["image_embeds"] = P(dp, None, None)
+    if cfg.family == "encoder":
+        out["frames"] = P(dp, None, None)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Gradient computation with microbatch accumulation
+# --------------------------------------------------------------------------
+
+def _accumulated_grads(model: Model, params, batch, n_micro: int,
+                       mesh: Mesh | None = None):
+    """Mean loss + mean grads over n_micro microbatches (lax.scan).
+
+    The (B,...) -> (n_micro, B/n_micro, ...) reshape must KEEP the dp
+    sharding on the batch dim (axis 1 after reshape) — otherwise XLA puts
+    'data' on the microbatch axis and every device materializes the whole
+    microbatch (16x activation blowup, found via dry-run memory_analysis).
+    """
+    if n_micro == 1:
+        loss, grads = jax.value_and_grad(lambda p: model.loss(p, batch))(params)
+        return loss, grads
+
+    def micro(batch_i):
+        return jax.value_and_grad(lambda p: model.loss(p, batch_i))(params)
+
+    def reshape_keep_dp(x):
+        out = x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+        if mesh is not None:
+            dp = list(dp_axes_of(mesh))
+            # drop leading dp axes until the microbatch rows divide evenly
+            while dp and out.shape[1] % int(np.prod([mesh.shape[a] for a in dp])):
+                dp.pop(0)
+            if dp:
+                spec = P(None, tuple(dp), *([None] * (out.ndim - 2)))
+                out = jax.lax.with_sharding_constraint(
+                    out, NamedSharding(mesh, spec))
+        return out
+
+    mb = jax.tree.map(reshape_keep_dp, batch)
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, batch_i):
+        acc_loss, acc_g = carry
+        loss, g = micro(batch_i)
+        acc_g = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc_g, g)
+        return (acc_loss + loss, acc_g), None
+
+    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero), mb)
+    inv = 1.0 / n_micro
+    grads = jax.tree.map(lambda g: (g * inv), grads)
+    return loss * inv, grads
+
+
+# --------------------------------------------------------------------------
+# sparcml-mode inner step (manual over dp, auto over 'model')
+# --------------------------------------------------------------------------
+
+def _zero1_update(params, grads, opt, lr, tcfg: TrainConfig, pspecs,
+                  dp_axes, dp_index, dp_total):
+    """Each rank updates its canonical column slice, then all-gathers."""
+    sync = tcfg.sync
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_s = treedef.flatten_up_to(pspecs)
+    leaves_mu = treedef.flatten_up_to(opt["mu"])
+    leaves_nu = treedef.flatten_up_to(opt["nu"]) if "nu" in opt else [None] * len(leaves_p)
+
+    count = opt["count"] + 1
+    ocfg = tcfg.optimizer
+    b1, b2 = ocfg.beta1, ocfg.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    new_p, new_mu, new_nu = [], [], []
+    for pl, gl, sl, mul, nul in zip(leaves_p, leaves_g, leaves_s, leaves_mu, leaves_nu):
+        pc = comp.to_canonical(pl, sl, sync.bucket_size)        # (c, mB)
+        gc = comp.to_canonical(gl, sl, sync.bucket_size)
+        w = pc.shape[1] // dp_total
+        my_p = jax.lax.dynamic_slice_in_dim(pc, dp_index * w, w, axis=1)
+        my_g = jax.lax.dynamic_slice_in_dim(gc, dp_index * w, w, axis=1).astype(jnp.float32)
+        m = mul[0].astype(jnp.float32)                          # strip replica axis
+        if ocfg.kind == "adamw":
+            v = nul[0].astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * my_g
+            v2 = b2 * v + (1 - b2) * my_g * my_g
+            step = (m2 / c1) / (jnp.sqrt(v2 / c2) + ocfg.eps)
+            step = step + ocfg.weight_decay * my_p.astype(jnp.float32)
+            new_nu.append(v2.astype(nul.dtype)[None])
+        else:
+            m2 = ocfg.momentum * m + my_g
+            step = m2
+            new_nu.append(None)
+        upd = (my_p.astype(jnp.float32) - lr * step).astype(pl.dtype)
+        new_mu.append(m2.astype(mul.dtype)[None])
+        # all-gather updated slices back to the full canonical layout
+        full = upd
+        for ax in reversed(dp_axes):
+            full = jax.lax.all_gather(full, ax, axis=1, tiled=True)
+        new_p.append(comp.from_canonical(full, pl.shape, sl))
+    out_opt = {"mu": treedef.unflatten(new_mu), "count": count}
+    if "nu" in opt:
+        out_opt["nu"] = treedef.unflatten(new_nu)
+    return treedef.unflatten(new_p), out_opt
+
+
+def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
+    """Returns (jitted step fn(state, batch, key) -> (state, metrics),
+    (state_shapes, state_specs))."""
+    cfg = model.cfg
+    sched = make_schedule(tcfg.schedule)
+    shapes, specs = state_shapes(model, tcfg, mesh)
+    bspecs = batch_specs(cfg, mesh)
+    dp_ax = dp_axes_of(mesh)
+    dp_total = dp_total_of(mesh)
+    n_micro = tcfg.microbatches
+
+    if tcfg.sync.mode != "sparcml":
+        # ---------------- dense mode: plain auto-SPMD jit ----------------
+        import dataclasses
+        from repro.models.model import Model as _M
+        model = _M(dataclasses.replace(cfg, act_dp_axes=dp_ax))
+        cfg_local = model.cfg  # noqa: F841
+
+        def step_fn(state: TrainState, batch, key):
+            lr = sched(state.step)
+            loss, grads = _accumulated_grads(model, state.params, batch, n_micro,
+                                             mesh=mesh)
+            grads, gnorm = clip_by_global_norm(grads, tcfg.optimizer.grad_clip)
+            new_p, new_opt = opt_update(
+                state.params, grads, state.opt, lr, tcfg.optimizer)
+            new_state = TrainState(new_p, new_opt, None, state.step + 1)
+            return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+        sh = lambda t: jax.tree.map(
+            lambda s: NamedSharding(mesh, s if s is not None else P()), t,
+            is_leaf=lambda x: x is None or isinstance(x, P))
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(sh(specs), sh(bspecs), NamedSharding(mesh, P())),
+            out_shardings=(sh(specs), NamedSharding(mesh, P())),
+            donate_argnums=(0,),
+        )
+        return jitted, (shapes, specs)
+
+    # ---------------- sparcml mode: manual dp, auto model ----------------
+    pspecs = specs.params
+
+    def inner(state: TrainState, batch, key):
+        # batch arrives as this rank's rows (split over dp by in_specs)
+        lr = sched(state.step)
+        loss, grads = _accumulated_grads(model, state.params, batch, n_micro)
+        loss = jax.lax.pmean(loss, dp_ax[-1])
+        if len(dp_ax) > 1:
+            loss = jax.lax.pmean(loss, dp_ax[0])
+        pod_axis = dp_ax[0] if len(dp_ax) > 1 else None
+        synced, new_res = comp.sync_grads_inside(
+            grads, state.residuals, key, tcfg.sync, pspecs,
+            data_axis=dp_ax[-1], p_data=mesh.shape[dp_ax[-1]],
+            pod_axis=pod_axis,
+            p_pod=mesh.shape[pod_axis] if pod_axis else 1,
+        )
+        synced, gnorm = clip_by_global_norm(synced, tcfg.optimizer.grad_clip)
+        # rank id within the flattened dp axes
+        dp_index = jax.lax.axis_index(dp_ax[-1])
+        if pod_axis:
+            dp_index = dp_index + mesh.shape[dp_ax[-1]] * jax.lax.axis_index(pod_axis)
+        if tcfg.zero1:
+            new_p, new_opt = _zero1_update(
+                state.params, synced, state.opt, lr, tcfg, pspecs,
+                dp_ax, dp_index, dp_total)
+        else:
+            new_p, new_opt = opt_update(
+                state.params, synced, state.opt, lr, tcfg.optimizer)
+        new_state = TrainState(new_p, new_opt, new_res, state.step + 1)
+        return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    # shard_map in_specs may reference only MANUAL (dp) axes; the 'model'
+    # sharding of params/opt rides along under auto.
+    def manual_only(spec):
+        if spec is None:
+            return None
+        return P(*[(s if _only_dp(s) else None) for s in spec])
+
+    def _only_dp(s):
+        names = s if isinstance(s, tuple) else (s,)
+        return all(n in ("pod", "data") for n in names if n) and any(n for n in (names if isinstance(names, tuple) else (names,)))
+
+    in_state_specs = jax.tree.map(
+        manual_only, specs, is_leaf=lambda x: x is None or isinstance(x, P))
+    in_batch_specs = jax.tree.map(
+        manual_only, bspecs, is_leaf=lambda x: x is None or isinstance(x, P))
+
+    mapped = jax.shard_map(
+        inner, mesh=mesh,
+        in_specs=(in_state_specs, in_batch_specs, P()),
+        out_specs=(in_state_specs, P()),
+        check_vma=False,
+        axis_names=set(dp_ax),
+    )
+
+    sh = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()), t,
+        is_leaf=lambda x: x is None or isinstance(x, P))
+    jitted = jax.jit(
+        mapped,
+        in_shardings=(sh(specs), sh(bspecs), NamedSharding(mesh, P())),
+        out_shardings=(sh(specs), NamedSharding(mesh, P())),
+        donate_argnums=(0,),
+    )
+    return jitted, (shapes, specs)

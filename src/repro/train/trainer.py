@@ -1,0 +1,121 @@
+"""Fault-tolerant training driver.
+
+Responsibilities beyond the jitted step:
+  * checkpoint every N steps (atomic) + resume-from-latest on start,
+  * survive injected/step failures: restore last checkpoint and continue
+    (the data pipeline is keyed by step, so replayed batches are identical),
+  * straggler watchdog: per-step wall time vs a running median; a step
+    exceeding ``straggler_factor`` x median is logged and counted — on a
+    real pod this feeds the skip/backup-worker policy; in-process it is
+    observability (SPMD has no per-host stragglers to act on),
+  * elastic restart: `resume(new_mesh)` re-chunks replica-dependent state
+    (see checkpoint.restore(remesh=True)).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from statistics import median
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.train import checkpoint as ckpt
+from repro.train.state import TrainConfig, TrainState
+from repro.train.train_step import build_train_step, dp_total_of, init_state
+
+
+@dataclass
+class TrainerLog:
+    losses: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+    straggler_events: list = field(default_factory=list)
+    restarts: int = 0
+
+
+class Trainer:
+    def __init__(self, model, tcfg: TrainConfig, mesh, data_cfg: DataConfig,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
+                 straggler_factor: float = 3.0):
+        self.model = model
+        self.tcfg = tcfg
+        self.mesh = mesh
+        self.data_cfg = data_cfg
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.straggler_factor = straggler_factor
+        self.log = TrainerLog()
+        self.step_fn, (self.shapes, self.specs) = build_train_step(model, tcfg, mesh)
+        self.state: Optional[TrainState] = None
+        self._root_key = jax.random.PRNGKey(tcfg.seed)
+
+    # -- lifecycle ---------------------------------------------------------
+    def init_or_resume(self):
+        self.state, _ = init_state(self.model, self.tcfg, self.mesh)
+        if self.ckpt_dir and ckpt.latest_step(self.ckpt_dir) is not None:
+            self.state = ckpt.restore(
+                self.ckpt_dir, self.state, dp_total=dp_total_of(self.mesh))
+            self.log.restarts += 1
+        return int(self.state.step)
+
+    def resume_elastic(self, new_mesh):
+        """Elastic restart onto a different mesh (pod count change)."""
+        self.mesh = new_mesh
+        self.step_fn, (self.shapes, self.specs) = build_train_step(
+            self.model, self.tcfg, new_mesh)
+        self.state, _ = init_state(self.model, self.tcfg, new_mesh)
+        if self.ckpt_dir and ckpt.latest_step(self.ckpt_dir) is not None:
+            self.state = ckpt.restore(
+                self.ckpt_dir, self.state, dp_total=dp_total_of(new_mesh),
+                remesh=True)
+        return int(self.state.step)
+
+    # -- main loop ---------------------------------------------------------
+    def run(self, num_steps: int, fail_at: Optional[int] = None) -> TrainerLog:
+        """Train for num_steps (absolute). fail_at injects a fault for tests."""
+        if self.state is None:
+            self.init_or_resume()
+        with self.mesh:
+            while int(self.state.step) < num_steps:
+                step = int(self.state.step)
+                batch = jax.tree.map(
+                    jax.numpy.asarray, synthetic_batch(self.data_cfg, step))
+                key = jax.random.fold_in(self._root_key, step)
+                t0 = time.perf_counter()
+                try:
+                    if fail_at is not None and step == fail_at:
+                        fail_at = None  # fail exactly once
+                        raise RuntimeError("injected node failure")
+                    new_state, metrics = self.step_fn(self.state, batch, key)
+                    jax.block_until_ready(metrics["loss"])
+                except Exception:
+                    # node-failure path: restore + replay
+                    if not self.ckpt_dir:
+                        raise
+                    self.log.restarts += 1
+                    self.state = ckpt.restore(
+                        self.ckpt_dir, self._abstract_like(),
+                        dp_total=dp_total_of(self.mesh))
+                    continue
+                dt = time.perf_counter() - t0
+                self.state = new_state
+                self.log.losses.append(float(metrics["loss"]))
+                self.log.step_times.append(dt)
+                if len(self.log.step_times) >= 5:
+                    med = median(self.log.step_times[-50:])
+                    if dt > self.straggler_factor * med:
+                        self.log.straggler_events.append((step, dt, med))
+                if self.ckpt_dir and (step + 1) % self.ckpt_every == 0:
+                    ckpt.save(self.ckpt_dir, self.state,
+                              dp_total=dp_total_of(self.mesh))
+        if self.ckpt_dir:
+            ckpt.save(self.ckpt_dir, self.state, dp_total=dp_total_of(self.mesh))
+        return self.log
+
+    def _abstract_like(self):
+        if self.state is not None:
+            return self.state
+        state, _ = init_state(self.model, self.tcfg, self.mesh)
+        return state

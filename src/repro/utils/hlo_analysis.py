@@ -1,0 +1,114 @@
+"""Parse collective traffic out of post-SPMD HLO text.
+
+cost_analysis() gives FLOPs and memory bytes but NOT collective bytes
+(per the roofline spec): we regex every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op, read its result
+shape + replica groups, and convert to per-chip wire bytes with the
+standard ring/bidirectional formulas.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+# e.g.  %all-gather.5 = bf16[4,1024]{1,0} all-gather(bf16[4,64]{1,0} %x), ...
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^\s]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+_GROUPS_ALT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+@dataclass
+class CollectiveStats:
+    """Per-chip wire bytes + op counts, by collective kind."""
+
+    bytes_by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    count_by_kind: dict = field(default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_bytes(self) -> float:
+        return sum(self.bytes_by_kind.values())
+
+    def as_dict(self) -> dict:
+        return {
+            "total_bytes_per_chip": self.total_bytes,
+            "bytes_by_kind": dict(self.bytes_by_kind),
+            "count_by_kind": dict(self.count_by_kind),
+        }
+
+
+def _shape_bytes(dtype: str, dims: str) -> float:
+    isize = _DTYPE_BYTES.get(dtype)
+    if isize is None:
+        return 0.0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return float(n * isize)
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ALT_RE.search(line)  # replica_groups=[8,64] (iota form)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        body = m.group(1)
+        first = body.split("}")[0].lstrip("{")
+        ids = [x for x in first.split(",") if x.strip()]
+        return max(1, len(ids))
+    return default
+
+
+def parse_collectives(hlo_text: str, default_group: int = 1) -> CollectiveStats:
+    """Per-chip wire-byte model (ring algorithms on a bidirectional torus):
+
+      all-gather      result R, groups g: each chip receives (g-1)/g * R
+      reduce-scatter  operand O ~ result*g: (g-1)/g * O  (we see result R ->
+                      bytes = (g-1) * R)
+      all-reduce      result R: 2 (g-1)/g * R   (RS + AG)
+      all-to-all      result R: (g-1)/g * R
+      collective-permute result R: R
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        r = _shape_bytes(dtype, dims)
+        g = _group_size(line, default_group)
+        if g <= 1:
+            continue
+        if kind == "all-gather":
+            b = (g - 1) / g * r
+        elif kind == "reduce-scatter":
+            b = (g - 1) * r
+        elif kind == "all-reduce":
+            b = 2 * (g - 1) / g * r
+        elif kind == "all-to-all":
+            b = (g - 1) / g * r
+        else:  # collective-permute
+            b = r
+        stats.bytes_by_kind[kind] += b
+        stats.count_by_kind[kind] += 1
+    return stats
+
+
+def remat_duplication(hlo_text: str) -> float:
+    """Crude remat-waste signal: ratio of dot ops to distinct dot shapes."""
+    dots = re.findall(r"= *[a-z0-9]+\[[\d,]*\][^\s]* dot\(", hlo_text)
+    if not dots:
+        return 1.0
+    return len(dots) / max(1, len(set(dots)))

@@ -1,0 +1,318 @@
+"""Trip-count-aware cost extraction from post-optimization HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so a
+scan-over-layers model under-reports FLOPs by ~layers x microbatches.
+This walker parses the HLO module into computations, builds the call
+graph (fusion calls / while bodies / conditionals), extracts loop trip
+counts from the condition computations, and accumulates:
+
+  * dot FLOPs (dots dominate transformer FLOPs) via a module-wide symbol
+    table (scheduled HLO does not carry operand shapes inline),
+  * HBM bytes at fusion boundaries (post-fusion HLO only materializes
+    fusion parameters/results, so operand+result bytes of top-level ops
+    are exactly XLA's HBM-traffic model),
+  * per-chip collective wire bytes (ring formulas).
+
+Validated against cost_analysis() on loop-free modules (tests/test_roofline).
+"""
+from __future__ import annotations
+
+import functools
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1, "c64": 8, "c128": 16,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_RESULT_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?)([a-z][a-z0-9]*)\[([\d,]*)\]")
+_OP_KIND_RE = re.compile(r"=\s*(?:\([^)]*\)\s*)?(?:[a-z][a-z0-9]*\[[\d,]*\][^\s]*\s+)?([a-z][a-z0-9\-]*)\(")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_COND_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"s(?:32|64)\[\]\s+constant\((\d+)\)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_GROUPS_ALT_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{([^}]*)\}")
+
+_SKIP_HBM = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "after-all", "opt-barrier", "partition-id", "replica-id",
+}
+
+_COLLECTIVES = {"all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+
+
+def _nbytes(dtype: str, dims) -> float:
+    isize = _DTYPE_BYTES.get(dtype)
+    if isize is None:
+        return 0.0
+    n = 1
+    for d in dims:
+        n *= d
+    return float(n) * isize
+
+
+def _dims(s: str) -> tuple:
+    return tuple(int(d) for d in s.split(",") if d.strip())
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_by_kind: dict = field(default_factory=lambda: defaultdict(float))
+    coll_count: dict = field(default_factory=lambda: defaultdict(int))
+    children: list = field(default_factory=list)  # (kind, name, cond)
+    max_const: int = 0
+    # fusion-boundary analysis (fusion bodies only):
+    params: dict = field(default_factory=dict)        # pname -> bytes
+    param_slice: dict = field(default_factory=dict)   # pname -> slice bytes (if only sliced)
+    param_other_use: set = field(default_factory=set) # pname consumed unsliced
+    root_bytes: float = 0.0
+    root_dus_update: float = 0.0
+
+    def boundary_bytes(self) -> float:
+        """HBM traffic at this fusion's boundary: params are charged their
+        full size unless they are ONLY dynamic-sliced inside (then the
+        slice), the root is charged its size unless it is an in-place
+        dynamic-update-slice (then 2x the update)."""
+        total = 0.0
+        for pname, b in self.params.items():
+            if pname in self.param_slice and pname not in self.param_other_use:
+                total += 2 * self.param_slice[pname]
+            else:
+                total += b
+        total += (2 * self.root_dus_update) if self.root_dus_update else self.root_bytes
+        return total
+
+
+def parse_module(hlo: str):
+    """Returns (comps dict, entry name)."""
+    comps: dict[str, CompCost] = {}
+    symbols: dict[str, tuple] = {}  # name -> (dtype, dims) result shapes
+    lines = hlo.splitlines()
+    # pass 1: symbol table (module-wide; HLO names are unique per module)
+    for line in lines:
+        m = _RESULT_RE.match(line)
+        if m and not m.group(2):  # skip tuple-typed results for shapes
+            symbols[m.group(1)] = (m.group(3), _dims(m.group(4)))
+    # also parameters declared in headers:  %p (x: f32[4,8], ...)
+    for m in re.finditer(r"([\w\.\-]+)\s*:\s*([a-z][a-z0-9]*)\[([\d,]*)\]", hlo):
+        symbols.setdefault(m.group(1), (m.group(2), _dims(m.group(3))))
+
+    entry = None
+    cur: CompCost | None = None
+    for line in lines:
+        if line and not line[0].isspace():
+            h = _COMP_HDR.match(line.rstrip())
+            if h:
+                cur = CompCost()
+                comps[h.group(1)] = cur
+                if line.lstrip().startswith("ENTRY"):
+                    entry = h.group(1)
+                # record declared parameters (fusion boundary analysis)
+                for pm in re.finditer(
+                        r"([\w\.\-]+)\s*:\s*([a-z][a-z0-9]*)\[([\d,]*)\]", line):
+                    cur.params[pm.group(1)] = _nbytes(pm.group(2), _dims(pm.group(3)))
+            continue
+        s = line.strip()
+        if not s or cur is None or s == "}":
+            if s == "}":
+                cur = None
+            continue
+        _parse_op(s, cur, symbols)
+    return comps, entry
+
+
+def _parse_op(line: str, comp: CompCost, symbols: dict):
+    mk = _OP_KIND_RE.search(line)
+    kind = mk.group(1) if mk else None
+    mres = _RESULT_RE.match(line)
+
+    # constants (loop-bound candidates)
+    for c in _CONST_RE.findall(line):
+        comp.max_const = max(comp.max_const, int(c))
+
+    # call-graph edges
+    mw = _WHILE_RE.search(line)
+    if mw and kind == "while":
+        comp.children.append(("while", mw.group(2), mw.group(1)))
+        return
+    mc = _CALL_RE.search(line)
+    if mc:
+        comp.children.append(
+            ("fusion" if kind == "fusion" else "call", mc.group(1), None))
+    mb = _COND_BRANCHES_RE.search(line)
+    if mb:
+        for b in mb.group(1).split(","):
+            b = b.strip().lstrip("%")
+            if b:
+                comp.children.append(("branch", b, None))
+
+    # dot flops
+    if kind == "dot" and mres and not mres.group(2):
+        out_elems = 1
+        for d in _dims(mres.group(4)):
+            out_elems *= d
+        k = 1
+        mlc = _LHS_CONTRACT_RE.search(line)
+        if mlc:
+            body = line.split("dot(", 1)[1]
+            ops = _OPERANDS_RE.findall(body.split(")", 1)[0])
+            if ops and ops[0] in symbols:
+                lhs_dims = symbols[ops[0]][1]
+                for ci in mlc.group(1).split(","):
+                    if ci.strip() and int(ci) < len(lhs_dims):
+                        k *= lhs_dims[int(ci)]
+        comp.flops += 2.0 * out_elems * k
+
+    # collectives
+    if kind in _COLLECTIVES or (kind or "").replace("-start", "") in _COLLECTIVES:
+        ckind = (kind or "").replace("-start", "")
+        r = 0.0
+        if mres:
+            if mres.group(2):  # tuple result: sum components
+                for dt, dd in re.findall(r"([a-z][a-z0-9]*)\[([\d,]*)\]",
+                                         line.split("=", 1)[1].split(")")[0]):
+                    r += _nbytes(dt, _dims(dd))
+                r /= 2 if "-start" in (kind or "") else 1
+            else:
+                r = _nbytes(mres.group(3), _dims(mres.group(4)))
+        g = 1
+        mg = _GROUPS_ALT_RE.search(line)
+        if mg:
+            g = int(mg.group(2))
+        else:
+            mg = _GROUPS_RE.search(line)
+            if mg:
+                first = mg.group(1).split("}")[0].lstrip("{")
+                g = max(1, len([x for x in first.split(",") if x.strip()]))
+        if g > 1 and r:
+            if ckind == "all-gather":
+                b = (g - 1) / g * r
+            elif ckind == "reduce-scatter":
+                b = (g - 1) * r
+            elif ckind == "all-reduce":
+                b = 2 * (g - 1) / g * r
+            elif ckind == "all-to-all":
+                b = (g - 1) / g * r
+            else:
+                b = r
+            comp.coll_by_kind[ckind] += b
+            comp.coll_count[ckind] += 1
+
+    # Track fusion-boundary param usage: params that are ONLY dynamic-sliced
+    # inside a body contribute slice-sized traffic, not their full size.
+    body = line.split("(", 1)
+    ops = (_OPERANDS_RE.findall(body[1].split(")", 1)[0])
+           if len(body) > 1 else [])
+    res_b = (_nbytes(mres.group(3), _dims(mres.group(4)))
+             if (mres and not mres.group(2)) else 0.0)
+    if comp.params:
+        for i, op in enumerate(ops):
+            if op in comp.params:
+                if kind in ("dynamic-slice", "slice", "gather") and i == 0:
+                    comp.param_slice[op] = max(
+                        comp.param_slice.get(op, 0.0), res_b)
+                elif kind == "dynamic-update-slice" and i == 0:
+                    pass  # in-place destination: charged via root
+                else:
+                    comp.param_other_use.add(op)
+    if line.startswith("ROOT") or " ROOT " in ("  " + line):
+        comp.root_bytes = res_b
+        if kind == "dynamic-update-slice" and len(ops) > 1:
+            upd = symbols.get(ops[1])
+            comp.root_dus_update = _nbytes(*upd) if upd else res_b
+
+    # HBM traffic at top-level op boundaries.
+    # Slicing/update ops only touch the slice, not the whole operand:
+    #   dynamic-slice / gather       -> 2 x result (read slice, write out)
+    #   dynamic-update-slice         -> 2 x update operand (in-place)
+    #   scatter                      -> 2 x updates operand
+    #   fusion                       -> deferred to walk(): boundary_bytes()
+    if kind and kind not in _SKIP_HBM and mres and not mres.group(2):
+        if kind == "fusion":
+            pass  # accounted via the callee's boundary_bytes() in walk()
+        elif kind in ("dynamic-slice", "gather", "slice"):
+            comp.hbm_bytes += 2 * res_b
+        elif kind == "dynamic-update-slice":
+            upd = symbols.get(ops[1]) if len(ops) > 1 else None
+            comp.hbm_bytes += 2 * (_nbytes(*upd) if upd else res_b)
+        elif kind == "scatter":
+            upd = symbols.get(ops[2]) if len(ops) > 2 else None
+            comp.hbm_bytes += 2 * (_nbytes(*upd) if upd else res_b)
+        else:
+            comp.hbm_bytes += res_b
+            for op in ops:
+                if op in symbols:
+                    comp.hbm_bytes += _nbytes(*symbols[op])
+
+
+@dataclass
+class ModuleCost:
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    coll_by_kind: dict
+    coll_count: dict
+    trip_counts: list
+
+    def as_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "coll_by_kind": dict(self.coll_by_kind),
+            "coll_count": dict(self.coll_count),
+            "trip_counts": self.trip_counts[:16],
+        }
+
+
+def total_cost(hlo: str) -> ModuleCost:
+    comps, entry = parse_module(hlo)
+    if not comps or entry is None:
+        return ModuleCost(0, 0, 0, {}, {}, [])
+    trip_counts: list = []
+
+    @functools.lru_cache(maxsize=None)
+    def walk(name: str):
+        c = comps.get(name)
+        if c is None:
+            return (0.0, 0.0, ())
+        fl, hb = c.flops, c.hbm_bytes
+        agg = defaultdict(lambda: [0.0, 0])
+        for k, v in c.coll_by_kind.items():
+            agg[k][0] += v
+            agg[k][1] += c.coll_count[k]
+        for kind, child, cond in c.children:
+            cf, ch, ck = walk(child)
+            mult = 1.0
+            if kind == "while":
+                trip = comps.get(cond, CompCost()).max_const or 1
+                trip_counts.append((child, trip))
+                mult = float(trip)
+            fl += cf * mult
+            if kind == "fusion":
+                # internals never touch HBM; charge the boundary model
+                hb += comps.get(child, CompCost()).boundary_bytes()
+            elif kind != "call":
+                hb += ch * mult
+            for k, v, n in ck:
+                agg[k][0] += v * mult
+                agg[k][1] += int(n * mult)
+        return (fl, hb, tuple((k, v[0], v[1]) for k, v in agg.items()))
+
+    fl, hb, ck = walk(entry)
+    by_kind, by_count = {}, {}
+    for k, v, n in ck:
+        by_kind[k] = v
+        by_count[k] = n
+    return ModuleCost(fl, hb, sum(by_kind.values()), by_kind, by_count,
+                      trip_counts)

@@ -1,0 +1,92 @@
+"""Three-term roofline model (TPU v5e targets).
+
+  compute    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+  memory     = HLO bytes accessed / (chips x 819e9 B/s HBM)
+  collective = collective bytes per chip / (links x 50e9 B/s ICI)
+
+Terms derive from the compiled dry-run artifact (cost_analysis + HLO
+parse); there is no wall clock on this CPU-only container. We report the
+perfectly-overlapped bound max(terms) and the serial bound sum(terms);
+the roofline fraction scores MODEL_FLOPS-time against the overlapped
+bound.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+ICI_BW = 50e9              # bytes/s per link
+ICI_LINKS = 2              # bidirectional links engaged per collective on a
+                           # 2-D torus axis (conservative; v5e has 4 total)
+
+
+@dataclass(frozen=True)
+class Roofline:
+    flops: float                  # total HLO flops across chips
+    hbm_bytes: float              # total bytes accessed across chips
+    coll_bytes_per_chip: float    # wire bytes per chip
+    chips: int
+    model_flops: float            # 6*N*D useful flops (per step, all chips)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / (self.chips * PEAK_FLOPS)
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / (self.chips * HBM_BW)
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / (ICI_LINKS * ICI_BW)
+
+    @property
+    def bound(self) -> float:
+        """Perfect-overlap step-time lower bound."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def serial_bound(self) -> float:
+        return self.t_compute + self.t_memory + self.t_collective
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — catches remat/redundancy waste."""
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Achievable MFU at the overlapped bound."""
+        t_model = self.model_flops / (self.chips * PEAK_FLOPS)
+        return t_model / self.bound if self.bound else 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bound_s": self.bound,
+            "serial_bound_s": self.serial_bound,
+            "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "hlo_flops": self.flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def model_flops_train(param_count: int, tokens: int) -> float:
+    """6*N*D for a training step (fwd+bwd)."""
+    return 6.0 * param_count * tokens
+
+
+def model_flops_infer(param_count: int, tokens: int) -> float:
+    """2*N*D for inference."""
+    return 2.0 * param_count * tokens

@@ -1,0 +1,30 @@
+"""Test harness: 8 host devices for the distributed unit tests.
+
+(The 512-device flag is reserved for launch/dryrun.py per its contract;
+8 is enough for every collective test here and keeps smoke tests fast.)
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import pytest  # noqa: E402
+from jax.sharding import AxisType  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="session")
+def mesh8():
+    return jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+
+
+@pytest.fixture(scope="session")
+def mesh4x2():
+    return jax.make_mesh((4, 2), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+
+
+@pytest.fixture(scope="session")
+def mesh2x2x2():
+    return jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(AxisType.Auto,) * 3)

@@ -1,0 +1,94 @@
+"""Paper analytics: expected fill-in (App. B) and alpha-beta bounds (§5.3)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import density, cost_model
+from repro.core.sparse_stream import delta_threshold
+
+
+@settings(max_examples=30, deadline=None)
+@given(n=st.sampled_from([512, 4096]), k=st.integers(1, 128),
+       p=st.sampled_from([2, 8, 64, 1024]))
+def test_closed_form_matches_inclusion_exclusion(n, k, p):
+    k = min(k, n)
+    a = density.expected_nnz(k, n, p)
+    b = density.expected_nnz_inclusion_exclusion(k, n, min(p, 128))
+    if p <= 128:
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+    assert 0 <= a <= n + 1e-9
+    assert a <= k * p + 1e-9  # union bound
+
+
+def test_monte_carlo_agrees():
+    k, n, p = 16, 512, 8
+    mc = density.monte_carlo_nnz(k, n, p, trials=64)
+    cf = density.expected_nnz(k, n, p)
+    assert abs(mc - cf) / cf < 0.05
+
+
+def test_fig1_density_growth_monotone():
+    """Fig. 1: reduced density grows with node count, saturates at 1."""
+    dens = [density.reduced_density(int(0.05 * 4096), 4096, p)
+            for p in [1, 2, 4, 8, 16, 32, 64, 128]]
+    assert all(np.diff(dens) >= -1e-12)
+    assert dens[-1] > 0.9  # 5% per node goes dense at large P (paper's point)
+
+
+def test_fig7_fill_in_factor():
+    # E[K]/k at N=512 as in Fig. 7: bounded by min(P, N/k)
+    for p in [2, 8, 32]:
+        f = density.fill_in_factor(8, 512, p)
+        assert 1 <= f <= min(p, 512 / 8) + 1e-9
+
+
+# -- alpha-beta cost model ---------------------------------------------------
+
+def test_bound_orderings():
+    p, k, n = 64, 1024, 1 << 20
+    lo, exp, hi = cost_model.t_ssar_recursive_double(p, k, n)
+    assert lo <= exp <= hi
+    lo2, exp2, hi2 = cost_model.t_ssar_split_allgather(p, k, n)
+    assert lo2 <= exp2 <= hi2
+    dlo, dhi = cost_model.t_dsar_split_allgather(p, k, n)
+    assert dlo <= dhi
+
+
+def test_recursive_double_wins_small_data():
+    """§5.3.1: latency-dominated regime favors recursive doubling."""
+    p, n = 64, 1 << 22
+    k = 64  # tiny payload
+    assert cost_model.select_algorithm(p, k, n) == "ssar_recursive_double"
+
+
+def test_dense_or_dsar_wins_when_fill_in_dense():
+    """§5.3.3: when E[K] >= delta, sparse end-representation can't win."""
+    p, n = 1024, 1 << 20
+    k = n // 8  # heavy per-node density -> dense result
+    choice = cost_model.select_algorithm(p, k, n)
+    assert choice in ("dsar_split_allgather", "dense")
+
+
+def test_lemma52_speedup_cap():
+    """Lemma 5.2: sparse speedup capped at 2/kappa once result is dense."""
+    n = 1 << 20
+    cap = cost_model.dsar_speedup_cap(n, isize=4)
+    kappa = delta_threshold(n, 4) / n  # = 0.5 for fp32
+    assert abs(cap - 2 / kappa) < 1e-9
+    assert abs(cap - 4.0) < 1e-9  # paper: kappa=0.5 -> max 4x
+
+
+def test_quantized_dsar_cheaper_than_fp32_dsar():
+    """§6: 4-bit second phase cuts the DSAR bandwidth term."""
+    p, k, n = 64, 4096, 1 << 20
+    _, hi32 = cost_model.t_dsar_split_allgather(p, k, n, value_bits=32)
+    _, hi4 = cost_model.t_dsar_split_allgather(p, k, n, value_bits=4)
+    assert hi4 < hi32
+
+
+def test_dense_rabenseifner_formula():
+    p, n = 16, 1 << 20
+    net = cost_model.DEFAULT_NET
+    t = cost_model.t_dense_allreduce(p, n, net)
+    expect = 2 * 4 * net.alpha + 2 * 15 / 16 * n * net.beta_d
+    np.testing.assert_allclose(t, expect, rtol=1e-12)

@@ -1,0 +1,159 @@
+"""Per-kernel validation: Pallas (interpret mode) vs pure-jnp oracle,
+with hypothesis sweeps over shapes/dtypes/k."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.bucket_topk.ops import bucket_topk
+from repro.kernels.bucket_scatter.ops import bucket_scatter
+from repro.kernels.qsgd_pack.ops import qsgd_pack
+from repro.kernels.qsgd_unpack.ops import qsgd_unpack
+from repro.kernels.qsgd_pack.ref import levels
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# bucket_topk
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nb=st.sampled_from([1, 3, 16]),
+    b=st.sampled_from([128, 256, 512]),
+    k=st.sampled_from([1, 4, 8]),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    seed=st.integers(0, 2**16),
+)
+def test_bucket_topk_matches_ref(nb, b, k, dtype, seed):
+    x = _rand(jax.random.PRNGKey(seed), (nb, b), jnp.dtype(dtype))
+    v1, i1, r1 = bucket_topk(x, k, impl="ref")
+    v2, i2, r2 = bucket_topk(x, k, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+    np.testing.assert_allclose(np.asarray(v1, np.float32),
+                               np.asarray(v2, np.float32), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(r1, np.float32),
+                               np.asarray(r2, np.float32), rtol=1e-5)
+
+
+def test_bucket_topk_selects_largest_and_residual_is_complement():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 512))
+    k = 16
+    val, lidx, res = bucket_topk(x, k, impl="pallas")
+    # selected entries zeroed in residual, untouched elsewhere
+    sel = np.zeros((8, 512), bool)
+    np.put_along_axis(sel, np.asarray(lidx), True, axis=1)
+    xr = np.asarray(x)
+    assert np.all(np.asarray(res)[sel] == 0)
+    np.testing.assert_array_equal(np.asarray(res)[~sel], xr[~sel])
+    # top-k by magnitude: min selected |v| >= max unselected |v| per bucket
+    mag_sel = np.abs(np.take_along_axis(xr, np.asarray(lidx), axis=1)).min(1)
+    mag_uns = np.where(sel, 0, np.abs(xr)).max(1)
+    assert np.all(mag_sel >= mag_uns - 1e-7)
+    # reconstruction: residual + densified selection == x
+    dense = bucket_scatter(lidx, val, 512, impl="ref")
+    np.testing.assert_allclose(np.asarray(dense) + np.asarray(res), xr, rtol=1e-6)
+
+
+def test_bucket_topk_indices_sorted():
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 256))
+    _, lidx, _ = bucket_topk(x, 8, impl="pallas")
+    li = np.asarray(lidx)
+    assert np.all(np.diff(li, axis=1) > 0)
+
+
+# --------------------------------------------------------------------------
+# qsgd pack/unpack
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nb=st.sampled_from([1, 4, 16]),
+    bq=st.sampled_from([128, 512, 1024]),
+    bits=st.sampled_from([2, 4, 8]),
+    scale_mode=st.sampled_from(["l2", "max"]),
+    seed=st.integers(0, 2**16),
+)
+def test_qsgd_pack_matches_ref(nb, bq, bits, scale_mode, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (nb, bq))
+    rand = jax.random.bits(key, (nb, bq), dtype=jnp.uint32)
+    p1, s1 = qsgd_pack(x, rand, bits, scale_mode, impl="ref")
+    p2, s2 = qsgd_pack(x, rand, bits, scale_mode, impl="pallas")
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-6)
+    u1 = qsgd_unpack(p1, s1, bits, impl="ref")
+    u2 = qsgd_unpack(p1, s1, bits, impl="pallas")
+    np.testing.assert_allclose(np.asarray(u1), np.asarray(u2), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bits", [2, 4, 8])
+def test_qsgd_error_bounded_by_scale_over_levels(bits):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (32, 1024))
+    rand = jax.random.bits(key, (32, 1024), dtype=jnp.uint32)
+    p, s = qsgd_pack(x, rand, bits, "l2", impl="ref")
+    xh = qsgd_unpack(p, s, bits, impl="ref")
+    err = np.abs(np.asarray(xh) - np.asarray(x))
+    bound = np.asarray(s) / levels(bits) + 1e-6
+    assert np.all(err <= bound)
+
+
+def test_qsgd_unbiased():
+    """E[Q(x)] == x across stochastic-rounding draws (QSGD property)."""
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (1, 512))
+    acc = np.zeros((1, 512))
+    n = 400
+    for i in range(n):
+        rand = jax.random.bits(jax.random.fold_in(key, i), (1, 512), dtype=jnp.uint32)
+        p, s = qsgd_pack(x, rand, 4, "l2", impl="ref")
+        acc += np.asarray(qsgd_unpack(p, s, 4, impl="ref"))
+    mean = acc / n
+    scale = float(np.asarray(s)[0, 0])
+    # std of the mean ~ scale/levels/sqrt(n)
+    tol = 4 * scale / levels(4) / np.sqrt(n)
+    np.testing.assert_allclose(mean, np.asarray(x), atol=tol)
+
+
+def test_qsgd_zero_bucket():
+    x = jnp.zeros((2, 512))
+    rand = jnp.zeros((2, 512), jnp.uint32)
+    p, s = qsgd_pack(x, rand, 4, impl="ref")
+    xh = qsgd_unpack(p, s, 4, impl="ref")
+    assert float(jnp.abs(xh).max()) == 0.0
+
+
+# --------------------------------------------------------------------------
+# bucket_scatter
+# --------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(
+    nb=st.sampled_from([1, 8]),
+    b=st.sampled_from([128, 512]),
+    k=st.sampled_from([1, 8, 32]),
+    dups=st.booleans(),
+    seed=st.integers(0, 2**16),
+)
+def test_bucket_scatter_matches_ref(nb, b, k, dups, seed):
+    key = jax.random.PRNGKey(seed)
+    hi = b // 2 if dups else b  # force duplicates half the time
+    lidx = jax.random.randint(key, (nb, k), 0, hi, dtype=jnp.int32)
+    val = jax.random.normal(key, (nb, k))
+    d1 = bucket_scatter(lidx, val, b, impl="ref")
+    d2 = bucket_scatter(lidx, val, b, impl="pallas")
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), rtol=1e-6, atol=1e-6)
+
+
+def test_bucket_scatter_drops_oob_sentinel():
+    lidx = jnp.array([[0, 5, 1000]], jnp.int32)  # 1000 >= B: sentinel
+    val = jnp.array([[1.0, 2.0, 3.0]])
+    d = bucket_scatter(lidx, val, 16, impl="pallas")
+    assert float(d[0, 0]) == 1.0 and float(d[0, 5]) == 2.0
+    assert float(jnp.abs(d).sum()) == 3.0  # the 3.0 was dropped

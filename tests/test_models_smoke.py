@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests (deliverable f): REDUCED config of the same
+family, one forward + one train step on CPU, asserting shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfgreg
+from repro.models.model import build_model
+
+ARCHS = [cfgreg.EXTERNAL_NAMES[a] for a in cfgreg.ARCH_IDS]
+
+
+def _smoke_batch(cfg, key, b=2, s=16):
+    batch = {"tokens": jax.random.randint(key, (b, s), 0, cfg.vocab_size),
+             "labels": jax.random.randint(key, (b, s), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            key, (b, cfg.num_image_tokens, cfg.vision_dim))
+    if cfg.family == "encoder":
+        batch["frames"] = jax.random.normal(key, (b, s, cfg.frontend_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes_no_nans(arch):
+    cfg = cfgreg.smoke_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _smoke_batch(cfg, key)
+    logits = model.forward(params, batch)
+    assert logits.shape == (2, 16, cfg.padded_vocab)
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: NaN/inf in logits"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_one_train_step(arch):
+    cfg = cfgreg.smoke_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    batch = _smoke_batch(cfg, key)
+    loss, grads = jax.value_and_grad(lambda p: model.loss(p, batch))(params)
+    assert bool(jnp.isfinite(loss)), f"{arch}: NaN loss"
+    gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+    # normalized SGD step reduces the loss (guaranteed descent direction
+    # for a small enough step; fixed lr overshoots on some inits)
+    step = 0.1 / (float(gnorm) + 1e-9)
+    new_params = jax.tree.map(lambda p, g: p - step * g.astype(p.dtype),
+                              params, grads)
+    loss2 = model.loss(new_params, batch)
+    assert bool(jnp.isfinite(loss2))
+    assert float(loss2) < float(loss), f"{arch}: descent step did not reduce loss"
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if a != "hubert-xlarge"])
+def test_smoke_prefill_decode(arch):
+    cfg = cfgreg.smoke_config(arch)
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(2)
+    params = model.init(key)
+    batch = _smoke_batch(cfg, key)
+    logits, state = model.prefill(params, batch, cache_len=32)
+    assert logits.shape == (2, cfg.padded_vocab)
+    logits2, state2 = model.decode_step(params, state, batch["tokens"][:, :1])
+    assert logits2.shape == (2, cfg.padded_vocab)
+    assert int(state2.pos) == 17
+    assert bool(jnp.isfinite(logits2).all())
+
+
+def test_full_configs_match_assignment():
+    """The exact assigned numbers (not smoke-reduced)."""
+    expect = {
+        "llama-3.2-vision-11b": dict(num_layers=40, d_model=4096, num_heads=32,
+                                     num_kv_heads=8, d_ff=14336, vocab_size=128256),
+        "mamba2-370m": dict(num_layers=48, d_model=1024, vocab_size=50280,
+                            ssm_state=128),
+        "minicpm-2b": dict(num_layers=40, d_model=2304, num_heads=36,
+                           num_kv_heads=36, d_ff=5760, vocab_size=122753),
+        "qwen3-4b": dict(num_layers=36, d_model=2560, num_heads=32,
+                         num_kv_heads=8, d_ff=9728, vocab_size=151936,
+                         qk_norm=True),
+        "llama3-405b": dict(num_layers=126, d_model=16384, num_heads=128,
+                            num_kv_heads=8, d_ff=53248, vocab_size=128256),
+        "internlm2-20b": dict(num_layers=48, d_model=6144, num_heads=48,
+                              num_kv_heads=8, d_ff=16384, vocab_size=92544),
+        "dbrx-132b": dict(num_layers=40, d_model=6144, num_heads=48,
+                          num_kv_heads=8, vocab_size=100352, num_experts=16,
+                          experts_per_token=4, moe_d_ff=10752),
+        "moonshot-v1-16b-a3b": dict(num_layers=48, d_model=2048, num_heads=16,
+                                    num_kv_heads=16, vocab_size=163840,
+                                    num_experts=64, experts_per_token=6,
+                                    moe_d_ff=1408),
+        "zamba2-2.7b": dict(num_layers=54, d_model=2560, num_heads=32,
+                            num_kv_heads=32, d_ff=10240, vocab_size=32000,
+                            ssm_state=64, attn_every=6),
+        "hubert-xlarge": dict(num_layers=48, d_model=1280, num_heads=16,
+                              num_kv_heads=16, d_ff=5120, vocab_size=504),
+    }
+    for arch, fields in expect.items():
+        cfg = cfgreg.get_config(arch)
+        for f, v in fields.items():
+            assert getattr(cfg, f) == v, f"{arch}.{f}: {getattr(cfg, f)} != {v}"
+
+
+def test_param_counts_plausible():
+    """Analytic param counts within the advertised scale."""
+    bounds = {
+        "llama3-405b": (3.8e11, 4.3e11),
+        "dbrx-132b": (1.2e11, 1.45e11),
+        "internlm2-20b": (1.7e10, 2.3e10),
+        # NOTE: the assigned numbers (48L x 64e x d_ff=1408) give ~29B total;
+        # the "16b" tag matches the real Moonlight's 27 layers, but the
+        # assignment's explicit config is authoritative here.
+        "moonshot-v1-16b-a3b": (2.5e10, 3.2e10),
+        "qwen3-4b": (3e9, 5e9),
+        "minicpm-2b": (2e9, 3.3e9),
+        "zamba2-2.7b": (2e9, 3.4e9),
+        "mamba2-370m": (3e8, 4.8e8),
+        "hubert-xlarge": (8e8, 1.3e9),
+        "llama-3.2-vision-11b": (8.5e9, 1.2e10),
+    }
+    for arch, (lo, hi) in bounds.items():
+        n = cfgreg.get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n:.3e} outside [{lo:.1e},{hi:.1e}]"
+
+
+def test_applicability_table():
+    app = {a: cfgreg.applicable_shapes(a) for a in ARCHS}
+    # encoder: no decode shapes
+    assert not app["hubert-xlarge"]["decode_32k"][0]
+    assert not app["hubert-xlarge"]["long_500k"][0]
+    # subquadratic archs run long_500k
+    assert app["mamba2-370m"]["long_500k"][0]
+    assert app["zamba2-2.7b"]["long_500k"][0]
+    # pure attention archs skip long_500k
+    for a in ["qwen3-4b", "llama3-405b", "dbrx-132b", "minicpm-2b",
+              "internlm2-20b", "moonshot-v1-16b-a3b", "llama-3.2-vision-11b"]:
+        assert not app[a]["long_500k"][0]
+    # total applicable cells = 31 of 40
+    n_ok = sum(ok for by in app.values() for ok, _ in by.values())
+    assert n_ok == 31

@@ -1,0 +1,78 @@
+"""Sparse stream (paper §5.1) properties: merge = dense sum, densify,
+delta threshold, capacity bounds — with hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparse_stream as ss
+
+
+def _random_stream(seed, n, k):
+    rng = np.random.default_rng(seed)
+    idx = np.sort(rng.choice(n, size=k, replace=False)).astype(np.int32)
+    val = rng.standard_normal(k).astype(np.float32)
+    pad = np.full(16, ss.SENTINEL, np.int32)
+    return ss.SparseStream(
+        idx=jnp.concatenate([jnp.asarray(idx), jnp.asarray(pad)]),
+        val=jnp.concatenate([jnp.asarray(val), jnp.zeros(16)]),
+        nnz=jnp.asarray(k, jnp.int32),
+    ), idx, val
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.sampled_from([64, 256, 1024]),
+    k1=st.integers(1, 32),
+    k2=st.integers(1, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_merge_equals_dense_sum(n, k1, k2, seed):
+    k1, k2 = min(k1, n // 2), min(k2, n // 2)
+    s1, i1, v1 = _random_stream(seed, n, k1)
+    s2, i2, v2 = _random_stream(seed + 1, n, k2)
+    merged = ss.merge(s1, s2, cap_out=k1 + k2 + 32)
+    dense = np.zeros(n, np.float32)
+    np.add.at(dense, i1, v1)
+    np.add.at(dense, i2, v2)
+    np.testing.assert_allclose(np.asarray(ss.densify(merged, n)), dense,
+                               rtol=1e-6, atol=1e-6)
+    # merged stream is sorted with padding at the back
+    mi = np.asarray(merged.idx)
+    nnz = int(merged.nnz)
+    assert np.all(np.diff(mi[:nnz]) > 0)
+    assert np.all(mi[nnz:] == ss.SENTINEL)
+    assert nnz == len(np.union1d(i1, i2))
+
+
+def test_merge_cancellation_keeps_index():
+    """Paper: 'we ignore cancellation of indices during the summation'."""
+    a = ss.SparseStream(jnp.array([3], jnp.int32), jnp.array([1.0]), jnp.asarray(1))
+    b = ss.SparseStream(jnp.array([3], jnp.int32), jnp.array([-1.0]), jnp.asarray(1))
+    m = ss.merge(a, b, 4)
+    assert int(m.nnz) == 1 and int(m.idx[0]) == 3 and float(m.val[0]) == 0.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.sampled_from([256, 4096]), k=st.integers(1, 64), seed=st.integers(0, 2**16))
+def test_from_mask_densify_roundtrip(n, k, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    mask = np.zeros(n, bool)
+    mask[rng.choice(n, size=min(k, n), replace=False)] = True
+    s = ss.from_mask(jnp.asarray(x), jnp.asarray(mask), cap=n)
+    np.testing.assert_allclose(np.asarray(ss.densify(s, n)),
+                               np.where(mask, x, 0), rtol=1e-6)
+
+
+def test_delta_threshold_matches_paper_formula():
+    # delta = N*isize/(c+isize); fp32 values, 4-byte indices -> N/2
+    assert ss.delta_threshold(1 << 20, isize=4) == (1 << 20) // 2
+    # fp64 values: 8/(4+8) = 2/3 N
+    assert ss.delta_threshold(1200, isize=8) == 800
+
+
+def test_from_dense_topk():
+    x = jnp.asarray(np.array([0.1, -5.0, 0.0, 3.0, -0.2], np.float32))
+    s = ss.from_dense_topk(x, 2)
+    assert set(np.asarray(s.idx).tolist()) == {1, 3}

@@ -1,0 +1,152 @@
+"""End-to-end training integration: dense vs sparcml modes, decode
+consistency, zero1 vs replicated optimizer equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.compressor import SyncConfig
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.optim.optimizers import OptimizerConfig
+from repro.optim.schedule import ScheduleConfig
+from repro.train.state import TrainConfig
+from repro.train.train_step import build_train_step, init_state
+
+
+def tiny_cfg(**kw):
+    base = dict(name="t", family="dense", num_layers=2, d_model=64, num_heads=4,
+                num_kv_heads=2, d_ff=128, vocab_size=256, dtype=jnp.float32,
+                param_dtype=jnp.float32, max_seq_len=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def sparse_cfg(**kw):
+    """Leaves sized so the batched sparse path engages at dp=4 with
+    bucket_size=128 (canonical cols/bucket must divide dp)."""
+    base = dict(name="ts", family="dense", num_layers=2, d_model=512,
+                num_heads=8, num_kv_heads=4, d_ff=1024, vocab_size=512,
+                dtype=jnp.float32, param_dtype=jnp.float32, max_seq_len=64)
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def run_steps(mesh, tcfg, n=25, cfg=None):
+    model = build_model(cfg or tiny_cfg())
+    step_fn, _ = build_train_step(model, tcfg, mesh)
+    state, _ = init_state(model, tcfg, mesh)
+    dcfg = DataConfig(global_batch=8, seq_len=32, vocab_size=256)
+    key = jax.random.PRNGKey(0)
+    losses = []
+    with mesh:
+        for i in range(n):
+            batch = jax.tree.map(jnp.asarray, synthetic_batch(dcfg, i))
+            state, m = step_fn(state, batch, jax.random.fold_in(key, i))
+            losses.append(float(m["loss"]))
+    return losses, state
+
+
+SCHED = ScheduleConfig(peak_lr=3e-3, warmup_steps=5, total_steps=100)
+
+
+def test_dense_fsdp_training_converges(mesh4x2):
+    losses, _ = run_steps(mesh4x2, TrainConfig(
+        sync=SyncConfig(mode="dense"), optimizer=OptimizerConfig(),
+        schedule=SCHED, microbatches=2, fsdp=True))
+    assert losses[-1] < losses[0] - 0.5
+
+
+# the in-train batched pipeline implements DSAR (the paper's DNN-training
+# algorithm); SSAR variants are exercised via the standalone library tests
+# (test_allreduce.py). Parametrize over compression strength instead.
+@pytest.mark.parametrize("k,qsgd", [
+    (16, None),   # 12.5% density
+    (16, 8),      # + 8-bit QSGD second phase
+    (16, 4),      # + 4-bit (paper default)
+    (2, None),    # 1.6% density
+])
+def test_sparcml_training_converges(mesh4x2, k, qsgd):
+    sync = SyncConfig(mode="sparcml", k_per_bucket=k, bucket_size=128,
+                      algorithm="dsar_split_allgather", qsgd_bits=qsgd,
+                      qsgd_bucket=128, min_sparse_size=65536, impl="ref")
+    tcfg = TrainConfig(sync=sync, optimizer=OptimizerConfig(), schedule=SCHED,
+                       microbatches=2, zero1=True)
+    cfg = sparse_cfg()
+    # regression guard: the sparse path must actually engage (leaves too
+    # small / indivisible silently fall back to dense — that is NOT what
+    # this test is for)
+    from repro.models.model import build_model
+    from repro.train.train_step import state_shapes
+    model = build_model(cfg)
+    shapes, _ = state_shapes(model, tcfg, mesh4x2)
+    n_sparse = sum(x is not None for x in jax.tree.leaves(
+        shapes.residuals, is_leaf=lambda x: x is None))
+    assert n_sparse >= 4, "sparse path not engaged for any leaf"
+    losses, _ = run_steps(mesh4x2, tcfg, cfg=cfg)
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_sparcml_matches_dense_closely(mesh4x2):
+    """Paper Figs. 4/5: compressed training tracks dense training."""
+    sparse, _ = run_steps(mesh4x2, TrainConfig(
+        sync=SyncConfig(mode="sparcml", k_per_bucket=16, bucket_size=128,
+                        algorithm="dsar_split_allgather",
+                        min_sparse_size=65536, impl="ref"),
+        optimizer=OptimizerConfig(), schedule=SCHED, microbatches=1),
+        cfg=sparse_cfg())
+    dense, _ = run_steps(mesh4x2, TrainConfig(
+        sync=SyncConfig(mode="dense"), optimizer=OptimizerConfig(),
+        schedule=SCHED, microbatches=1), cfg=sparse_cfg())
+    # 25 steps is a SHORT horizon: compressed SGD lags transiently while
+    # the EF residual warms up (paper Fig. 5 shows the same early-phase
+    # divergence closing by convergence; full-convergence parity is
+    # asserted in test_convergence.py). 20% bounds the transient.
+    assert abs(dense[-1] - sparse[-1]) / dense[-1] < 0.20
+    assert sparse[-1] != dense[-1]  # the sparse path actually ran
+
+
+def test_multipod_training(mesh2x2x2):
+    sync = SyncConfig(mode="sparcml", k_per_bucket=64, bucket_size=512,
+                      algorithm="dsar_split_allgather", min_sparse_size=4096,
+                      impl="ref")
+    losses, _ = run_steps(mesh2x2x2, TrainConfig(
+        sync=sync, optimizer=OptimizerConfig(), schedule=SCHED, zero1=True))
+    assert losses[-1] < losses[0] - 0.4
+
+
+def test_zero1_equals_replicated_adam(mesh4x2):
+    """ZeRO-1 chunked update must be bitwise-equivalent math to the
+    replicated AdamW (same grads -> same params)."""
+    sync = SyncConfig(mode="sparcml", k_per_bucket=512, bucket_size=512,
+                      algorithm="dsar_split_allgather", min_sparse_size=1 << 30,
+                      impl="ref")  # k=all + dense path only -> exact mean grads
+    t1 = TrainConfig(sync=sync, optimizer=OptimizerConfig(grad_clip=0),
+                     schedule=ScheduleConfig(kind="constant", peak_lr=1e-2,
+                                             warmup_steps=0),
+                     zero1=True)
+    t2 = TrainConfig(sync=sync, optimizer=OptimizerConfig(grad_clip=0),
+                     schedule=ScheduleConfig(kind="constant", peak_lr=1e-2,
+                                             warmup_steps=0),
+                     zero1=False)
+    l1, s1 = run_steps(mesh4x2, t1, n=5)
+    l2, s2 = run_steps(mesh4x2, t2, n=5)
+    np.testing.assert_allclose(l1, l2, rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-6)
+
+
+def test_schedules():
+    from repro.optim.schedule import make_schedule
+    for kind in ["cosine", "linear", "wsd", "constant"]:
+        sched = make_schedule(ScheduleConfig(kind=kind, peak_lr=1.0,
+                                             warmup_steps=10, total_steps=100))
+        assert float(sched(0)) == 0.0 or kind == "constant" or float(sched(0)) <= 0.11
+        assert abs(float(sched(10)) - 1.0) < 1e-6
+        assert float(sched(99)) <= 1.0
+    wsd = make_schedule(ScheduleConfig(kind="wsd", peak_lr=1.0, warmup_steps=10,
+                                       total_steps=100, wsd_decay_frac=0.2))
+    assert abs(float(wsd(79)) - 1.0) < 1e-6   # stable phase
+    assert float(wsd(99)) < 0.3               # decay phase
