@@ -19,12 +19,12 @@ from repro.data.sparse_datasets import make_url_like_dataset
 
 
 def run() -> list[tuple[str, float, str]]:
-    from jax.sharding import AxisType
+    from repro.compat import make_mesh
     rows = []
     n_feat = 1 << 20
     idx, val, y = make_url_like_dataset(
         n_samples=1024, n_features=n_feat, nnz_per_sample=64)
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
 
     # per-rank minibatch gradient of logistic loss (naturally sparse)
     def local_grad(w, rank, step):

@@ -41,9 +41,8 @@ def _run(mesh, sync: SyncConfig, steps=30):
 
 
 def run() -> list[tuple[str, float, str]]:
-    from jax.sharding import AxisType
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(data=4, model=2)
     rows = []
     t0 = time.perf_counter()
     dense = _run(mesh, SyncConfig(mode="dense"))

@@ -31,6 +31,10 @@ def main() -> None:
     ap.add_argument("--only", type=str, default=None)
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
+    unknown = [n for n in names if n not in MODULES]
+    if unknown:
+        raise SystemExit(
+            f"unknown benchmark modules {unknown}; choose from {list(MODULES)}")
 
     print("name,us_per_call,derived")
     failed = []

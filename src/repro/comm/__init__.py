@@ -1,0 +1,46 @@
+"""Fusion-bucket gradient sync engine (DESIGN.md §3).
+
+SparCML's scaling claim rests on amortizing the latency (alpha) term of
+the collective over the WHOLE gradient, not paying it once per layer.
+This package turns the per-leaf sync of ``core/compressor.py`` into a
+planned, fused pipeline:
+
+  plan.py        trace-time SyncPlan: packs all gradient leaves into a
+                 small number of fixed-size fusion buckets in canonical
+                 layout; per-bucket algorithm selection via the cost model
+  buckets.py     leaf <-> bucket packing/unpacking (pure reshapes/concats)
+  collectives.py data-axis collectives with a psum-emulated fallback for
+                 partial-manual shard_map regions on backends whose SPMD
+                 partitioner cannot lower them (XLA-CPU)
+  executor.py    one TopK-compress + sparse allreduce per bucket, with
+                 error-feedback residual state keyed by bucket
+
+``core/allreduce.py`` stays the algorithm layer (SSAR/DSAR); the executor
+invokes it per bucket. Per-leaf entry points in ``core/compressor.py``
+are thin wrappers over a one-leaf-per-bucket plan.
+"""
+from repro.comm.buckets import pack_group, unpack_group
+from repro.comm.collectives import CollectiveContext
+from repro.comm.executor import execute_plan, execute_plan_spmd
+from repro.comm.plan import (
+    BucketSpec,
+    GroupSpec,
+    LeafSlot,
+    SyncPlan,
+    build_per_leaf_plan,
+    build_sync_plan,
+)
+
+__all__ = [
+    "BucketSpec",
+    "CollectiveContext",
+    "GroupSpec",
+    "LeafSlot",
+    "SyncPlan",
+    "build_per_leaf_plan",
+    "build_sync_plan",
+    "execute_plan",
+    "execute_plan_spmd",
+    "pack_group",
+    "unpack_group",
+]

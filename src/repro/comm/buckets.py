@@ -1,0 +1,114 @@
+"""Canonical layout + leaf<->fusion-bucket packing (DESIGN.md §2, §3.2).
+
+Canonical layout (moved here from ``core/compressor.py``; the old names
+stay importable from there): the 'model'-sharded axis of a leaf is moved
+to the front so the (m, B) bucket reshape never crosses a shard boundary
+— zero resharding under SPMD. Leaves without a model-sharded axis
+canonicalize to a single row.
+
+Fusion packing: all leaves of a plan *group* (same canonical row count)
+are concatenated along the column axis into one fused buffer, padded at
+the tail to the plan's bucket quantum. Packing/unpacking are pure
+reshape/concat/slice — no cross-rank communication and no data-dependent
+shapes, so they fuse into the surrounding step program.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+if TYPE_CHECKING:  # avoid an import cycle with core.compressor
+    from repro.comm.plan import GroupSpec
+
+
+# --------------------------------------------------------------------------
+# Canonical layout (model-sharded axis first, trailing dims bucket-padded)
+# --------------------------------------------------------------------------
+
+def model_axis(spec, model_axis_name: str = "model") -> int | None:
+    """Index of the dim sharded over 'model' in a PartitionSpec, if any."""
+    if spec is None:
+        return None
+    for i, s in enumerate(spec):
+        names = s if isinstance(s, tuple) else (s,)
+        if model_axis_name in [n for n in names if n]:
+            return i
+    return None
+
+
+def canonical_shape(shape: tuple[int, ...], spec, bucket_size: int,
+                    model_axis_name: str = "model") -> tuple[int, int]:
+    """(rows, padded_cols) of the canonical 2-D layout for a leaf."""
+    ax = model_axis(spec, model_axis_name)
+    if ax is None or len(shape) <= 1:
+        lead, rest = 1, int(np.prod(shape))
+    else:
+        lead = shape[ax]
+        rest = int(np.prod(shape)) // lead
+    cols = -(-rest // bucket_size) * bucket_size
+    return lead, cols
+
+
+def to_canonical(g: jax.Array, spec, bucket_size: int,
+                 model_axis_name: str = "model") -> jax.Array:
+    rows, cols = canonical_shape(g.shape, spec, bucket_size, model_axis_name)
+    ax = model_axis(spec, model_axis_name)
+    if ax is not None and g.ndim > 1 and ax != 0:
+        g = jnp.moveaxis(g, ax, 0)
+    g2 = g.reshape(rows, -1)
+    pad = cols - g2.shape[1]
+    if pad:
+        g2 = jnp.pad(g2, ((0, 0), (0, pad)))
+    return g2
+
+
+def from_canonical(c: jax.Array, orig_shape: tuple[int, ...], spec,
+                   model_axis_name: str = "model") -> jax.Array:
+    ax = model_axis(spec, model_axis_name)
+    if ax is None or len(orig_shape) <= 1:
+        n = int(np.prod(orig_shape))
+        return c.reshape(-1)[:n].reshape(orig_shape)
+    moved = tuple([orig_shape[ax]] + [s for i, s in enumerate(orig_shape) if i != ax])
+    rest = int(np.prod(moved[1:]))
+    out = c[:, :rest].reshape(moved)
+    return jnp.moveaxis(out, 0, ax)
+
+
+# --------------------------------------------------------------------------
+# Group pack / unpack
+# --------------------------------------------------------------------------
+
+def pack_group(group: "GroupSpec", leaves: Sequence[jax.Array],
+               bucket_size: int, dtype=jnp.float32) -> jax.Array:
+    """Fuse a group's leaves into one canonical (rows, group.cols) buffer.
+
+    Column offsets follow ``group.slots`` (each leaf's canonical cols are
+    already a bucket multiple, so slot boundaries stay bucket-aligned);
+    the tail past the last slot is zero padding up to the bucket quantum.
+    """
+    segs = [
+        to_canonical(leaves[slot.leaf_id], slot.spec, bucket_size).astype(dtype)
+        for slot in group.slots
+    ]
+    buf = segs[0] if len(segs) == 1 else jnp.concatenate(segs, axis=1)
+    pad = group.cols - buf.shape[1]
+    if pad:
+        buf = jnp.pad(buf, ((0, 0), (0, pad)))
+    return buf
+
+
+def unpack_group(group: "GroupSpec", buf: jax.Array,
+                 leaves: Sequence[jax.Array]) -> list[tuple[int, jax.Array]]:
+    """Split a reduced group buffer back into (leaf_id, leaf-shaped array)
+    pairs, casting each to its original leaf dtype."""
+    out = []
+    for slot in group.slots:
+        seg = jax.lax.slice_in_dim(buf, slot.offset, slot.offset + slot.cols,
+                                   axis=1)
+        leaf = leaves[slot.leaf_id]
+        out.append((slot.leaf_id,
+                    from_canonical(seg, slot.shape, slot.spec).astype(leaf.dtype)))
+    return out

@@ -1,0 +1,300 @@
+"""Plan executor: one TopK-compress + sparse allreduce per bucket.
+
+Runs INSIDE the training shard_map (manual over the dp axes). For each
+group the leaves are fused into one canonical buffer (pure reshapes),
+then per fusion bucket:
+
+    residual  +=  bucket slice            (error feedback, Alg. 2 line 1)
+    stream, residual' = bucketed TopK     (Alg. 2 line 2)
+    reduced   = <bucket's algorithm>      (Alg. 2 line 3 — ONE planned
+                                           collective pipeline per bucket)
+    [+ dense psum over the pod axis — hierarchical, DCN traffic already
+       compressed by the within-pod reduction]
+
+Dense buckets (below ``min_sparse_size`` or cost-model-selected) skip
+compression and ride a single psum — still fused, still one collective.
+
+Error-feedback state is keyed by bucket name (``plan.residual_shapes``):
+the bucket is the unit of compression, so it is the unit of feedback.
+
+The collective flavor (native vs psum-emulated, DESIGN.md §4) arrives via
+``native`` + the rank feeds; SSAR algorithms need native collectives and
+fall back to DSAR when emulated (same dense result, different wire path).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.comm.buckets import pack_group, unpack_group
+from repro.comm.collectives import CollectiveContext
+from repro.comm.plan import SyncPlan
+
+# repro.core is imported lazily inside the functions below: core/__init__
+# re-exports core.compressor, which imports comm — see plan.py.
+
+
+def _qsgd_rand(key, bucket_idx: int, coll: CollectiveContext,
+               pod_rank, shard_elems: int, p: int):
+    """Stochastic-rounding bits for one bucket's QSGD phase.
+
+    Native: my shard's bits, keyed by (step key, bucket, my data rank[,
+    pod rank]). Emulated: every range's bits stacked (p, shard) — each
+    rank replays every owner's rounding on the replicated psum result, so
+    the emulated output is bit-identical to the native wire."""
+    sub = jax.random.fold_in(key, bucket_idx)
+    if pod_rank is not None:
+        sub = jax.random.fold_in(sub, pod_rank)
+    if coll.native:
+        sub = jax.random.fold_in(sub, coll.axis_rank())
+        return jax.random.bits(sub, (shard_elems,), dtype=jnp.uint32)
+    return jnp.stack([
+        jax.random.bits(jax.random.fold_in(sub, j), (shard_elems,),
+                        dtype=jnp.uint32)
+        for j in range(p)
+    ])
+
+
+def _reduce_flat_sparse(u_flat, algorithm: str, *,
+                        coll: CollectiveContext) -> jax.Array:
+    """SSAR variants for flat (rows==1) buckets; returns the dense (n,)."""
+    from repro.core import sparse_stream as ss
+    from repro.core.allreduce import (
+        ssar_recursive_double_inside,
+        ssar_split_allgather_inside,
+    )
+
+    if algorithm == "ssar_recursive_double":
+        out = ssar_recursive_double_inside(
+            u_flat.to_stream(), axis_name=coll.axis_name, p=coll.p,
+            n=u_flat.n)
+        return out.to_dense(u_flat.n)
+    if algorithm == "ssar_split_allgather":
+        stream = ssar_split_allgather_inside(
+            u_flat, axis_name=coll.axis_name, p=coll.p)
+        return ss.densify(stream, u_flat.n)
+    raise ValueError(f"not a flat sparse algorithm: {algorithm!r}")
+
+
+def execute_plan(
+    plan: SyncPlan,
+    leaves: Sequence[jax.Array],
+    residuals: dict,
+    key: jax.Array,
+    *,
+    data_axis: str = "data",
+    p_data: int,
+    pod_axis: Optional[str] = None,
+    p_pod: int = 1,
+    native: bool = True,
+    data_rank: Optional[jax.Array] = None,
+    pod_rank: Optional[jax.Array] = None,
+):
+    """Sync the planned leaves. Returns (new_leaves, new_residuals).
+
+    leaves: flat per-rank grad leaves (original layouts, jax.tree.leaves
+    order of the plan's param tree). Leaves not covered by the plan come
+    back as None — the caller decides (the per-leaf wrapper psums them).
+    residuals: bucket-keyed dict; inside shard_map each value carries its
+    rank's slice with a leading replica axis of size 1.
+    """
+    from repro.core import topk as topk_mod
+    from repro.core.allreduce import (
+        dsar_split_allgather_batched_inside,
+        safe_psum,
+    )
+    from repro.core.topk import UniformStream
+
+    cfg = plan.cfg
+    replicas = p_data * p_pod
+    scale = 1.0 / replicas if cfg.mean else 1.0
+    coll = CollectiveContext(data_axis, p_data, native=native, rank=data_rank)
+    if pod_axis is not None and pod_rank is None:
+        if not native:
+            raise ValueError("emulated multi-pod sync needs a pod rank feed")
+        # Native callers (the per-leaf wrapper) may omit the feed; the
+        # QSGD rounding key must still fold the pod rank so pods don't
+        # share rounding bits.
+        pod_rank = jax.lax.axis_index(pod_axis)
+
+    new_leaves: list = [None] * plan.num_leaves
+    new_residuals: dict = {}
+    bucket_idx = 0
+    for group in plan.groups:
+        buf = pack_group(group, leaves, cfg.bucket_size)     # (rows, cols) f32
+        out_parts = []
+        for b in group.buckets:
+            seg = jax.lax.slice_in_dim(buf, b.col_start,
+                                       b.col_start + b.cols, axis=1)
+            if not b.sparse and b.name not in residuals:
+                # Fused dense bucket: no feedback state, plain psum.
+                out = safe_psum(seg, data_axis)
+                if pod_axis is not None:
+                    out = safe_psum(out, pod_axis)
+                out_parts.append(out * scale)
+                bucket_idx += 1
+                continue
+
+            res = residuals[b.name][0]                        # strip replica axis
+            acc = res.astype(jnp.float32) + seg               # Alg. 2 line 1
+            u, residual = topk_mod.compress2d(
+                acc, cfg.k_per_bucket, cfg.bucket_size)       # Alg. 2 line 2
+
+            algorithm = b.algorithm
+            # QSGD belongs to DSAR's dense gather phase ONLY: an SSAR
+            # bucket rerouted to DSAR by the emulated fallback stays
+            # unquantized, so every lowering of the same plan produces
+            # the same values (the executor-parity invariant).
+            qsgd = cfg.qsgd() if algorithm == "dsar_split_allgather" else None
+            if not native and algorithm.startswith("ssar"):
+                algorithm = "dsar_split_allgather"            # DESIGN.md §4
+            if algorithm == "dense":
+                # Residual-bearing bucket whose cost model picked a dense
+                # end-representation (paper §5.3.3): STILL compress + EF,
+                # then allreduce the densified stream — the legacy 'auto
+                # -> dense' semantics of sparse_allreduce_inside.
+                out = safe_psum(u.densify(), data_axis)
+            elif algorithm == "dsar_split_allgather":
+                rand = None
+                if qsgd is not None:
+                    rand = _qsgd_rand(key, bucket_idx, coll, pod_rank,
+                                      group.rows * b.cols // p_data, p_data)
+                out = dsar_split_allgather_batched_inside(   # Alg. 2 line 3
+                    u, axis_name=data_axis, p=p_data, qsgd=qsgd,
+                    rand=rand, out_dtype=jnp.float32, impl=cfg.impl,
+                    coll=coll)
+            else:
+                # SSAR keeps a sparse end-representation; flat rows only.
+                assert group.rows == 1, (b.name, algorithm)
+                flat = UniformStream(u.lidx[0], u.val[0], cfg.bucket_size)
+                out = _reduce_flat_sparse(flat, algorithm, coll=coll)[None, :]
+            if pod_axis is not None:
+                out = safe_psum(out, pod_axis)                # hierarchical
+            out_parts.append(out * scale)
+            new_residuals[b.name] = residual.astype(res.dtype)[None]
+            bucket_idx += 1
+        out_buf = (out_parts[0] if len(out_parts) == 1
+                   else jnp.concatenate(out_parts, axis=1))
+        for leaf_id, arr in unpack_group(group, out_buf, leaves):
+            new_leaves[leaf_id] = arr
+    return new_leaves, new_residuals
+
+
+# --------------------------------------------------------------------------
+# Auto-SPMD formulation (no shard_map) — DESIGN.md §4.2
+# --------------------------------------------------------------------------
+
+def _qsgd_rand_all(key, bucket_idx: int, p_pod: int, p_data: int,
+                   shard_elems: int):
+    """(p_pod, p_data, shard) rounding bits — bit-compatible with the
+    per-rank fold order of :func:`_qsgd_rand` (bucket, pod, data)."""
+    sub = jax.random.fold_in(key, bucket_idx)
+    pods = []
+    for a in range(p_pod):
+        sp = jax.random.fold_in(sub, a) if p_pod > 1 else sub
+        pods.append(jnp.stack([
+            jax.random.bits(jax.random.fold_in(sp, j), (shard_elems,),
+                            dtype=jnp.uint32)
+            for j in range(p_data)
+        ]))
+    return jnp.stack(pods)
+
+
+def execute_plan_spmd(
+    plan: SyncPlan,
+    leaves_r: Sequence[jax.Array],
+    residuals: dict,
+    key: jax.Array,
+    *,
+    p_data: int,
+    p_pod: int = 1,
+):
+    """The same per-bucket pipeline as :func:`execute_plan`, expressed as
+    plain auto-SPMD array ops OUTSIDE any shard_map.
+
+    Used on backends whose partitioner cannot lower a partial-manual
+    training step at all (XLA-CPU container build: every explicit
+    collective but psum, ``lax.scan`` bodies, and PartitionId abort — see
+    DESIGN.md §4.2). The replica axis is a real leading axis instead:
+
+    leaves_r: per-rank grads stacked as (R, *leaf_shape), R = p_pod*p_data,
+    leading axis sharded over the dp mesh axes — "rank r's grads" IS the
+    r-th slice, so per-rank TopK/EF semantics are preserved exactly and
+    the reductions below lower to XLA's own all-reduces over the dp axes.
+    residuals: bucket-keyed, FULL (R, rows, cols) arrays (not slices).
+
+    Returns (synced leaves in original layout, replica-replicated;
+    new bucket-keyed residuals, full arrays). Numerics match the manual
+    executor: sums over the leading axis are the allreduce; DSAR+QSGD
+    replays every (pod, range-owner) quantization on the pod-local sums.
+    SSAR algorithms reduce exactly (their wire layout has no numeric
+    effect), so they fold into the same sum here.
+    """
+    from repro.comm.buckets import to_canonical
+    from repro.core import topk as topk_mod
+
+    cfg = plan.cfg
+    replicas = p_data * p_pod
+    scale = 1.0 / replicas if cfg.mean else 1.0
+    qsgd = cfg.qsgd()
+
+    new_leaves: list = [None] * plan.num_leaves
+    new_residuals: dict = {}
+    bucket_idx = 0
+    for group in plan.groups:
+        segs = [
+            jax.vmap(lambda g, s=slot: to_canonical(g, s.spec, cfg.bucket_size)
+                     .astype(jnp.float32))(leaves_r[slot.leaf_id])
+            for slot in group.slots
+        ]
+        buf = segs[0] if len(segs) == 1 else jnp.concatenate(segs, axis=2)
+        pad = group.cols - buf.shape[2]
+        if pad:
+            buf = jnp.pad(buf, ((0, 0), (0, 0), (0, pad)))  # (R, rows, cols)
+        out_parts = []
+        for b in group.buckets:
+            seg = jax.lax.slice_in_dim(buf, b.col_start,
+                                       b.col_start + b.cols, axis=2)
+            if not b.sparse and b.name not in residuals:
+                out_parts.append(seg.sum(axis=0) * scale)
+                bucket_idx += 1
+                continue
+            res = residuals[b.name]                           # (R, rows, cols)
+            acc = res.astype(jnp.float32) + seg
+            u, residual = topk_mod.compress2d(
+                acc, cfg.k_per_bucket, cfg.bucket_size)
+            dens = u.densify()                                # (R, rows, m*B)
+            rows, mb = dens.shape[1], dens.shape[2]
+            dpod = dens.reshape(p_pod, p_data, rows, mb).sum(axis=1)
+            if qsgd is not None and b.algorithm == "dsar_split_allgather":
+                shard = mb // p_data
+                bq = qsgd.bucket_size
+                nbq = shard // bq
+                x = dpod.reshape(p_pod, rows, p_data, shard)
+                x = x.transpose(0, 2, 1, 3)        # (p_pod, p_data, rows, shard)
+                rand = _qsgd_rand_all(key, bucket_idx, p_pod, p_data,
+                                      rows * shard)
+                xq = _qsgd_roundtrip_spmd(
+                    x.reshape(p_pod * p_data * rows * nbq, bq),
+                    rand.reshape(p_pod * p_data * rows * nbq, bq),
+                    qsgd, cfg.impl)
+                dpod = (xq.reshape(p_pod, p_data, rows, shard)
+                        .transpose(0, 2, 1, 3).reshape(p_pod, rows, mb))
+            out_parts.append(dpod.sum(axis=0) * scale)
+            new_residuals[b.name] = residual.astype(res.dtype)
+            bucket_idx += 1
+        out_buf = (out_parts[0] if len(out_parts) == 1
+                   else jnp.concatenate(out_parts, axis=1))
+        # rank-0 slices stand in for per-rank leaves (dtype/shape only)
+        ref_leaves = [l[0] for l in leaves_r]
+        for leaf_id, arr in unpack_group(group, out_buf, ref_leaves):
+            new_leaves[leaf_id] = arr
+    return new_leaves, new_residuals
+
+
+def _qsgd_roundtrip_spmd(x2d, rand2d, qsgd, impl: str):
+    from repro.core.allreduce import _qsgd_roundtrip
+
+    return _qsgd_roundtrip(x2d, rand2d, qsgd, impl, jnp.float32)

@@ -1,0 +1,315 @@
+"""Trace-time sync planning: leaves -> fusion buckets (DESIGN.md §3).
+
+A :class:`SyncPlan` is built ONCE per train-step configuration from
+``param_shapes`` + ``param_specs`` + ``SyncConfig`` + the data-parallel
+world size. It decides, entirely at trace time:
+
+* which *group* each leaf belongs to (leaves with the same canonical row
+  count fuse together; model-sharded leaves keep their batched row axis,
+  everything else lands in the single flat row-1 group — including the
+  small leaves that the per-leaf path used to send over dense psum);
+* how each group's fused column space is chopped into fixed-size
+  *fusion buckets* (quantum = bucket_size x dp_total columns so the
+  split phase always divides, x the QSGD bucket when quantizing);
+* which algorithm each bucket runs (``cost_model.select_bucket_algorithm``
+  per bucket: SSAR recursive-double for high-sparsity flat buckets,
+  DSAR+QSGD for dense-ish ones, plain psum below ``min_sparse_size``).
+
+Error-feedback residual state is keyed BY BUCKET (``plan.residual_*``),
+not by leaf: a bucket is the unit of compression, so it is the unit of
+feedback. The executor (executor.py) runs one TopK-compress + sparse
+allreduce per bucket.
+
+``cfg`` is duck-typed (``repro.core.compressor.SyncConfig``); importing
+it here would cycle — compressor's per-leaf entry points are themselves
+thin wrappers over :func:`build_per_leaf_plan`.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm.buckets import canonical_shape, model_axis
+
+# NOTE: repro.core is imported lazily (inside functions) throughout comm:
+# core/__init__ eagerly re-exports core.compressor, which imports comm for
+# its thin wrappers — a module-level import here would close that cycle.
+
+SPARSE_ALGORITHMS = ("ssar_recursive_double", "ssar_split_allgather",
+                     "dsar_split_allgather")
+# The batched (rows > 1) pipeline keeps the model-sharded row axis as a
+# pure batch dim; only DSAR (and dense) are implemented batched.
+BATCHED_ALGORITHMS = ("dsar_split_allgather", "dense")
+
+
+@dataclass(frozen=True)
+class LeafSlot:
+    """Where one leaf lives inside its group's fused canonical buffer."""
+
+    leaf_id: int                  # index in jax.tree.leaves order
+    shape: tuple[int, ...]        # original leaf shape
+    spec: Any                     # PartitionSpec (or None)
+    rows: int                     # canonical rows
+    cols: int                     # canonical padded cols (bucket multiple)
+    offset: int                   # column offset inside the group buffer
+
+
+@dataclass(frozen=True)
+class BucketSpec:
+    """One fusion bucket: a contiguous column range of a group buffer."""
+
+    name: str                     # residual-state key, stable across runs
+    col_start: int
+    cols: int
+    rows: int
+    algorithm: str                # resolved: one of SPARSE_ALGORITHMS|'dense'
+
+    @property
+    def sparse(self) -> bool:
+        return self.algorithm != "dense"
+
+    @property
+    def n(self) -> int:
+        return self.rows * self.cols
+
+
+@dataclass(frozen=True)
+class GroupSpec:
+    """All leaves sharing one canonical row count, fused along columns."""
+
+    gid: int
+    rows: int
+    model_sharded: bool           # row axis carries the 'model' sharding
+    cols: int                     # total padded cols (sum of bucket cols)
+    slots: tuple[LeafSlot, ...]
+    buckets: tuple[BucketSpec, ...]
+
+
+@dataclass(frozen=True)
+class SyncPlan:
+    """The full fusion plan for one (param tree, SyncConfig, dp) triple."""
+
+    cfg: Any                      # SyncConfig (duck-typed)
+    dp_total: int
+    num_leaves: int
+    groups: tuple[GroupSpec, ...]
+
+    # -- summary -----------------------------------------------------------
+    @property
+    def buckets(self) -> tuple[BucketSpec, ...]:
+        return tuple(b for g in self.groups for b in g.buckets)
+
+    @property
+    def num_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def num_sparse_buckets(self) -> int:
+        return sum(1 for b in self.buckets if b.sparse)
+
+    def covered_leaf_ids(self) -> set[int]:
+        return {s.leaf_id for g in self.groups for s in g.slots}
+
+    # -- error-feedback residual state (keyed by bucket) -------------------
+    def residual_shapes(self) -> dict[str, jax.ShapeDtypeStruct]:
+        """Bucket-name -> ShapeDtypeStruct (leading per-replica axis).
+        Dense buckets carry no feedback state and are skipped."""
+        out = {}
+        for g in self.groups:
+            for b in g.buckets:
+                if b.sparse:
+                    out[b.name] = jax.ShapeDtypeStruct(
+                        (self.dp_total, g.rows, b.cols), self.cfg.ef_dtype)
+        return out
+
+    def residual_specs(self, dp_axes=("pod", "data")) -> dict:
+        from jax.sharding import PartitionSpec as P
+
+        out = {}
+        for g in self.groups:
+            for b in g.buckets:
+                if b.sparse:
+                    out[b.name] = P(dp_axes,
+                                    "model" if g.model_sharded else None, None)
+        return out
+
+    def init_residuals(self) -> dict[str, jax.Array]:
+        return {k: jnp.zeros(s.shape, s.dtype)
+                for k, s in self.residual_shapes().items()}
+
+    # -- analytic wire traffic (per rank per step) -------------------------
+    def wire_bytes(self, p: Optional[int] = None) -> float:
+        """Bytes on the wire per rank per step under this plan. Dense
+        buckets pay the Rabenseifner dense-allreduce cost; sparse buckets
+        pay split-phase items + the (possibly quantized) gather phase."""
+        p = p or self.dp_total
+        cfg = self.cfg
+        total = 0.0
+        for g in self.groups:
+            for b in g.buckets:
+                n = b.n
+                if not b.sparse:
+                    total += 2 * (p - 1) / p * n * 4
+                    continue
+                nnz = g.rows * (b.cols // cfg.bucket_size) * cfg.k_per_bucket
+                total += (p - 1) / p * nnz * 8          # idx+val split phase
+                if b.algorithm == "dsar_split_allgather":
+                    if cfg.qsgd_bits is not None:
+                        total += (p - 1) / p * (n * cfg.qsgd_bits / 8
+                                                + n / cfg.qsgd_bucket * 4)
+                    else:
+                        total += (p - 1) / p * n * 4    # dense gather fp32
+                else:                                    # sparse result
+                    total += (p - 1) / p * nnz * 8
+        return total
+
+    def describe(self) -> str:
+        lines = [f"SyncPlan: {self.num_leaves} leaves -> "
+                 f"{self.num_buckets} buckets ({self.num_sparse_buckets} sparse)"]
+        for g in self.groups:
+            lines.append(f"  group {g.gid}: rows={g.rows} cols={g.cols} "
+                         f"leaves={len(g.slots)} "
+                         f"model_sharded={g.model_sharded}")
+            for b in g.buckets:
+                lines.append(f"    {b.name}: cols={b.cols} algo={b.algorithm}")
+        return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# Plan construction
+# --------------------------------------------------------------------------
+
+def _flatten_with_specs(param_shapes, param_specs):
+    leaves, treedef = jax.tree.flatten(param_shapes)
+    specs = treedef.flatten_up_to(param_specs)
+    return leaves, specs
+
+
+def _col_quantum(cfg, dp_total: int) -> int:
+    """Bucket columns must divide into dp_total equal whole-TopK-bucket
+    shards (split phase), and into whole QSGD buckets per shard."""
+    q = cfg.bucket_size
+    if cfg.qsgd_bits is not None:
+        q = math.lcm(cfg.bucket_size, cfg.qsgd_bucket)
+    return q * dp_total
+
+
+def _bucket_capacity_cols(cfg, dp_total: int, rows: int) -> int:
+    q = _col_quantum(cfg, dp_total)
+    budget_elems = max(1, getattr(cfg, "fusion_bucket_bytes", 4 << 20) // 4)
+    return max(q, budget_elems // rows // q * q)
+
+
+def _resolve_algorithm(cfg, dp_total: int, rows: int, cols: int) -> str:
+    n = rows * cols
+    if n < cfg.min_sparse_size:
+        return "dense"
+    if cfg.algorithm != "auto":
+        algo = cfg.algorithm
+        if rows > 1 and algo not in BATCHED_ALGORITHMS:
+            algo = "dsar_split_allgather"   # batched pipeline: DSAR only
+        return algo
+    from repro.core.cost_model import select_bucket_algorithm
+
+    nnz = rows * (cols // cfg.bucket_size) * cfg.k_per_bucket
+    allow = SPARSE_ALGORITHMS + ("dense",) if rows == 1 else BATCHED_ALGORITHMS
+    return select_bucket_algorithm(
+        dp_total, nnz, n,
+        value_bits=(cfg.qsgd_bits if cfg.qsgd_bits is not None else 32),
+        allow=allow)
+
+
+def _chop(group_cols: int, cap: int, q: int) -> list[int]:
+    out, remaining = [], group_cols
+    while remaining > 0:
+        take = min(cap, remaining)
+        out.append(take)
+        remaining -= take
+    assert all(c % q == 0 for c in out), (out, q)
+    return out
+
+
+def build_sync_plan(param_shapes, param_specs, cfg, dp_total: int) -> SyncPlan:
+    """The fused plan: every leaf rides a fusion bucket (small leaves are
+    concatenated into the shared flat group instead of falling back to
+    per-leaf dense psum; whether a BUCKET goes sparse or dense is the cost
+    model's per-bucket decision)."""
+    leaves, specs = _flatten_with_specs(param_shapes, param_specs)
+    q = _col_quantum(cfg, dp_total)
+
+    by_rows: dict[int, list[tuple[int, Any, Any, int, int]]] = {}
+    for i, (sd, spec) in enumerate(zip(leaves, specs)):
+        shape = tuple(sd.shape)
+        rows, cols = canonical_shape(shape, spec, cfg.bucket_size)
+        by_rows.setdefault(rows, []).append((i, shape, spec, rows, cols))
+
+    groups = []
+    # flat group (rows == 1) first, then rowed groups by ascending rows:
+    # stable bucket names across config-invariant reorderings of the tree.
+    for gid, rows in enumerate(sorted(by_rows, key=lambda r: (r != 1, r))):
+        entries = by_rows[rows]
+        slots, off = [], 0
+        for i, shape, spec, r, cols in entries:
+            slots.append(LeafSlot(i, shape, spec, r, cols, off))
+            off += cols
+        group_cols = -(-off // q) * q
+        cap = _bucket_capacity_cols(cfg, dp_total, rows)
+        buckets, start = [], 0
+        for bi, bcols in enumerate(_chop(group_cols, cap, q)):
+            algo = _resolve_algorithm(cfg, dp_total, rows, bcols)
+            buckets.append(BucketSpec(f"g{gid}b{bi}", start, bcols, rows, algo))
+            start += bcols
+        model_sharded = rows > 1 and any(
+            model_axis(spec) is not None for _, _, spec, _, _ in entries)
+        groups.append(GroupSpec(gid, rows, model_sharded, group_cols,
+                                tuple(slots), tuple(buckets)))
+    return SyncPlan(cfg, dp_total, len(leaves), tuple(groups))
+
+
+# --------------------------------------------------------------------------
+# Legacy per-leaf routing (thin-wrapper compatibility)
+# --------------------------------------------------------------------------
+
+def leaf_sparse_ok(shape, spec, cfg, dp_total: int) -> bool:
+    """The PER-LEAF qualification rule of the pre-fusion pipeline: big
+    enough (paper §8: N > 65k) and the per-row bucket count divides the
+    split-phase group size. Kept for the compressor wrappers and for
+    deciding which leaves a per-leaf plan covers."""
+    if cfg.mode != "sparcml" or int(np.prod(shape)) < cfg.min_sparse_size:
+        return False
+    lead, cols = canonical_shape(shape, spec, cfg.bucket_size)
+    m = cols // cfg.bucket_size
+    if cfg.qsgd_bits is not None:
+        if (cols // dp_total) % cfg.qsgd_bucket:
+            return False
+    return m % dp_total == 0
+
+
+def build_per_leaf_plan(param_shapes, param_specs, cfg, dp_total: int) -> SyncPlan:
+    """One group + one bucket per QUALIFYING leaf (legacy routing); leaves
+    that fail :func:`leaf_sparse_ok` are not covered — callers psum them
+    densely, exactly as the old ``sync_grads_inside`` did."""
+    leaves, specs = _flatten_with_specs(param_shapes, param_specs)
+    groups = []
+    for i, (sd, spec) in enumerate(zip(leaves, specs)):
+        shape = tuple(sd.shape)
+        if not leaf_sparse_ok(shape, spec, cfg, dp_total):
+            continue
+        rows, cols = canonical_shape(shape, spec, cfg.bucket_size)
+        gid = len(groups)
+        algo = cfg.algorithm
+        if algo == "auto":
+            algo = _resolve_algorithm(cfg, dp_total, rows, cols)
+        elif rows > 1 and algo not in BATCHED_ALGORITHMS:
+            algo = "dsar_split_allgather"
+        slot = LeafSlot(i, shape, spec, rows, cols, 0)
+        bucket = BucketSpec(f"g{gid}b0", 0, cols, rows, algo)
+        groups.append(GroupSpec(
+            gid, rows, rows > 1 and model_axis(spec) is not None,
+            cols, (slot,), (bucket,)))
+    return SyncPlan(cfg, dp_total, len(leaves), tuple(groups))

@@ -212,6 +212,16 @@ def dsar_split_allgather_inside(
 # rides through the data-axis collectives as a pure batch dim.
 # --------------------------------------------------------------------------
 
+def _qsgd_roundtrip(x2d, rand2d, qsgd: QSGDConfig, impl: str, out_dtype):
+    """quantize -> dequantize (the wire fidelity without the wire)."""
+    from repro.kernels.qsgd_pack.ops import qsgd_pack
+    from repro.kernels.qsgd_unpack.ops import qsgd_unpack
+
+    packed, scale = qsgd_pack(x2d, rand2d, qsgd.bits, qsgd.scale_mode,
+                              impl=impl)
+    return qsgd_unpack(packed, scale, qsgd.bits, out_dtype, impl=impl)
+
+
 def dsar_split_allgather_batched_inside(
     u,  # BatchedStream: lidx/val (r, m, k)
     *,
@@ -220,50 +230,92 @@ def dsar_split_allgather_batched_inside(
     qsgd: QSGDConfig | None = None,
     rand: jax.Array | None = None,
     out_dtype=jnp.float32,
+    impl: str = "auto",
+    coll=None,  # repro.comm.collectives.CollectiveContext | None (native)
 ) -> jax.Array:
     """DSAR over the 'data' axis with a batched row dim. Returns (r, m*B).
 
-    Split phase: a2a on the BUCKET axis (axis 1) — rows untouched.
-    Densify: batched one-hot contraction. Gather phase: all_gather on
-    axis 1 (optionally QSGD-packed per (row, shard)-bucket)."""
-    from repro.core.topk import BatchedStream  # local: avoid cycle
+    Native lowering — ONE collective per phase:
+      split: single fused a2a on the BUCKET axis (axis 1) carrying
+             [val | lidx-as-f32] (lidx < B <= 512 is exact in f32);
+      densify my bucket range (batched one-hot contraction);
+      gather: single all_gather on axis 1 ([packed-bitcast-f32 | scale]
+              when QSGD-quantized).
 
+    Emulated lowering (coll.native=False — partial-manual regions on
+    backends where only psum lowers, DESIGN.md §4): the full dense sum in
+    one psum, then the identical per-range QSGD quantize->dequantize
+    applied locally by every rank. Bit-identical results to the native
+    path given the same per-range rand bits.
+
+    rand: stochastic-rounding bits for the QSGD phase — my shard's
+    (r*m*B/p,) u32 when native, all ranges' (p, r*m*B/p) when emulated
+    (every rank replays every owner's rounding).
+    """
     r, m, k = u.lidx.shape
     b = u.bucket_size
     assert m % p == 0, f"buckets-per-row {m} % p {p}"
     mp = m // p
-    lidx = jax.lax.all_to_all(
-        u.lidx.reshape(r, p, mp, k), axis_name, split_axis=1, concat_axis=1,
-        tiled=True).reshape(r, p, mp, k)
-    val = jax.lax.all_to_all(
-        u.val.reshape(r, p, mp, k), axis_name, split_axis=1, concat_axis=1,
-        tiled=True).reshape(r, p, mp, k)
+    shard_cols = mp * b
+
+    if coll is None:
+        from repro.comm.collectives import CollectiveContext  # lazy: no cycle
+        coll = CollectiveContext(axis_name, p)
+
+    if not coll.native:
+        dense = coll.psum(u.densify().astype(jnp.float32))   # (r, m*B)
+        if qsgd is None:
+            return dense.astype(out_dtype)
+        if rand is None:
+            raise ValueError("QSGD second phase needs stochastic-rounding bits")
+        bq = qsgd.bucket_size
+        nbq = shard_cols // bq
+        # (r, m*B) -> per-range rows exactly as each native owner would see
+        xs = dense.reshape(r, p, shard_cols).transpose(1, 0, 2)
+        xhat = _qsgd_roundtrip(
+            xs.reshape(p * r * nbq, bq),
+            rand.reshape(p * r * nbq, bq), qsgd, impl, jnp.float32)
+        out = xhat.reshape(p, r, shard_cols).transpose(1, 0, 2)
+        return out.reshape(r, m * b).astype(out_dtype)
+
+    assert b <= 1 << 24, "lidx-as-f32 wire format needs exact f32 ints"
+    payload = jnp.concatenate(
+        [u.val.astype(jnp.float32), u.lidx.astype(jnp.float32)], axis=-1)
+    payload = coll.all_to_all(payload, axis=1)               # ONE a2a
+    payload = payload.reshape(r, p, mp, 2 * k)
+    val = payload[..., :k]
+    lidx = payload[..., k:].astype(jnp.int32)
     # densify my bucket range and reduce over the p sources
     iota = jnp.arange(b, dtype=jnp.int32)
     onehot = (lidx[..., None] == iota).astype(jnp.float32)
-    shard = jnp.einsum("rpmkb,rpmk->rmb", onehot,
-                       val.astype(jnp.float32)).reshape(r, mp * b)
+    shard = jnp.einsum("rpmkb,rpmk->rmb", onehot, val).reshape(r, shard_cols)
     if qsgd is None:
-        full = jax.lax.all_gather(shard.astype(out_dtype), axis_name,
-                                  axis=1, tiled=True)
-        return full
+        return coll.all_gather(shard.astype(out_dtype), axis=1)
     if rand is None:
         raise ValueError("QSGD second phase needs stochastic-rounding bits")
+    from repro.kernels.qsgd_pack.ops import qsgd_pack
+    from repro.kernels.qsgd_unpack.ops import qsgd_unpack
+
     bq = qsgd.bucket_size
-    nbq = mp * b // bq
-    from repro.kernels.qsgd_pack.ref import qsgd_pack_ref
-    from repro.kernels.qsgd_unpack.ref import qsgd_unpack_ref
-    packed, scale = qsgd_pack_ref(
+    nbq = shard_cols // bq
+    packed, scale = qsgd_pack(
         shard.reshape(r * nbq, bq),
         rand.reshape(-1)[: r * nbq * bq].reshape(r * nbq, bq), qsgd.bits,
-        qsgd.scale_mode)
+        qsgd.scale_mode, impl=impl)
     w = packed.shape[-1]
-    packed = jax.lax.all_gather(packed.reshape(r, nbq * w), axis_name,
-                                axis=1, tiled=True)
-    scale = jax.lax.all_gather(scale.reshape(r, nbq), axis_name,
-                               axis=1, tiled=True)
-    xhat = qsgd_unpack_ref(packed.reshape(r * nbq * p, w),
-                           scale.reshape(r * nbq * p, 1), qsgd.bits)
+    # ONE gather: [packed u32 bitcast to f32 | scale f32] along axis 1
+    wire = jnp.concatenate(
+        [jax.lax.bitcast_convert_type(packed.reshape(r, nbq * w), jnp.float32),
+         scale.reshape(r, nbq)], axis=1)
+    wire = coll.all_gather(wire, axis=1).reshape(r, p, nbq * w + nbq)
+    packed_all = jax.lax.bitcast_convert_type(
+        wire[..., : nbq * w], jnp.uint32)
+    scale_all = wire[..., nbq * w:]
+    xhat = qsgd_unpack(packed_all.reshape(r * p * nbq, w),
+                       scale_all.reshape(r * p * nbq, 1), qsgd.bits,
+                       jnp.float32, impl=impl)
+    # received order is (r, p, shard) — identical to the pre-fusion
+    # two-gather layout, so the reshape back to (r, m*B) is unchanged
     return xhat.reshape(r, m * b).astype(out_dtype)
 
 
@@ -352,6 +404,7 @@ def make_sparse_allreduce(
     replicated. For benchmarks and the MPI-OPT-style examples.
     """
     from jax.sharding import PartitionSpec as P  # local import, avoids cycle
+    from repro.compat import shard_map
     from repro.core import topk as topk_mod
 
     p = mesh.shape[axis_name]
@@ -370,7 +423,7 @@ def make_sparse_allreduce(
     spec_r = P(axis_name) if qsgd is not None else None
     in_specs = (spec_x, spec_r)
     return jax.jit(
-        jax.shard_map(
+        shard_map(
             inner, mesh=mesh, in_specs=in_specs, out_specs=P(None),
             check_vma=False,
         )

@@ -5,33 +5,42 @@ for the dense gradient all-reduce, running INSIDE a shard_map that is
 manual over the data-parallel axes ('pod', 'data') and auto over 'model'
 (XLA keeps tensor-parallel sharding transparent).
 
-Key design points (DESIGN.md §2.2):
+As of the fusion refactor (DESIGN.md §3) the heavy lifting lives in
+``repro.comm``: a trace-time :class:`~repro.comm.plan.SyncPlan` packs
+leaves into fusion buckets and ``repro.comm.executor`` runs one planned
+collective per bucket. THIS module keeps:
 
-* Per-leaf compression in a *canonical layout*: the 'model'-sharded axis is
-  moved to the front so the (nb, B) bucket reshape never crosses a shard
-  boundary -> zero resharding under SPMD.
-* Error-feedback residuals are rank-local state. Outside shard_map they
-  carry a leading axis of size P_pod*P_data sharded over ('pod','data');
-  inside, each rank sees exactly its slice.
-* Leaves smaller than ``min_sparse_size`` use the dense psum path (the
-  paper only claims wins for N > 65k; latency dominates below).
-* ``mean=True`` divides the reduced sum by the replica count (the paper
-  sums; modern optimizers expect means — both supported).
-* Hierarchical multi-pod: sparse allreduce over 'data' within each pod
-  (ICI), then dense psum over 'pod' (DCN) — bandwidth across the slow link
-  is already compressed by the within-pod reduction.
+* :class:`SyncConfig` — the user-facing knob set;
+* the PER-LEAF entry points (``sync_grads_inside``, ``residual_*``) as
+  thin wrappers over a one-leaf-per-bucket plan, preserving the original
+  per-leaf semantics (leaves below ``min_sparse_size`` dense-psum'd,
+  residual state keyed by leaf) for the standalone-library API and tests;
+* canonical-layout helpers re-exported from ``repro.comm.buckets`` (the
+  implementation moved there so plan/executor avoid a cycle).
+
+The fused train path (``train/train_step.py``) skips these wrappers and
+drives ``comm.build_sync_plan`` + ``comm.execute_plan`` directly.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import topk as topk_mod
-from repro.core.allreduce import safe_psum, sparse_allreduce_inside
+# Canonical layout: implementation moved to comm.buckets (re-exported
+# under the historical names — external callers keep working).
+from repro.comm.buckets import (  # noqa: F401
+    canonical_shape,
+    from_canonical,
+    model_axis as _model_axis,
+    to_canonical,
+)
+from repro.comm.executor import execute_plan
+from repro.comm.plan import build_per_leaf_plan, leaf_sparse_ok
+from repro.core.allreduce import safe_psum
 from repro.core.qsgd import QSGDConfig
 
 
@@ -47,10 +56,11 @@ class SyncConfig:
     qsgd_bits: Optional[int] = None  # quantize DSAR dense phase (2/4/8)
     qsgd_bucket: int = 1024
     qsgd_scale: str = "l2"
-    min_sparse_size: int = 65536     # leaves below this use dense psum (paper §8)
+    min_sparse_size: int = 65536     # buckets/leaves below this use dense psum
     mean: bool = True
     impl: str = "ref"                # kernel impl inside auto-SPMD regions
     ef_dtype: Any = jnp.float32
+    fusion_bucket_bytes: int = 4 << 20  # fused-plan bucket size (DESIGN.md §3.2)
 
     @property
     def density(self) -> float:
@@ -63,81 +73,19 @@ class SyncConfig:
 
 
 # --------------------------------------------------------------------------
-# Canonical layout: model-sharded axis first, trailing dims bucket-padded
-# --------------------------------------------------------------------------
-
-def _model_axis(spec, model_axis_name: str = "model") -> int | None:
-    """Index of the dim sharded over 'model' in a PartitionSpec, if any."""
-    if spec is None:
-        return None
-    for i, s in enumerate(spec):
-        names = s if isinstance(s, tuple) else (s,)
-        if model_axis_name in [n for n in names if n]:
-            return i
-    return None
-
-
-def canonical_shape(shape: tuple[int, ...], spec, bucket_size: int,
-                    model_axis_name: str = "model") -> tuple[int, int]:
-    """(rows, padded_cols) of the canonical 2-D layout for a leaf."""
-    ax = _model_axis(spec, model_axis_name)
-    if ax is None or len(shape) <= 1:
-        lead, rest = 1, int(np.prod(shape))
-    else:
-        lead = shape[ax]
-        rest = int(np.prod(shape)) // lead
-    cols = -(-rest // bucket_size) * bucket_size
-    return lead, cols
-
-
-def to_canonical(g: jax.Array, spec, bucket_size: int,
-                 model_axis_name: str = "model") -> jax.Array:
-    rows, cols = canonical_shape(g.shape, spec, bucket_size, model_axis_name)
-    ax = _model_axis(spec, model_axis_name)
-    if ax is not None and g.ndim > 1 and ax != 0:
-        g = jnp.moveaxis(g, ax, 0)
-    g2 = g.reshape(rows, -1)
-    pad = cols - g2.shape[1]
-    if pad:
-        g2 = jnp.pad(g2, ((0, 0), (0, pad)))
-    return g2
-
-
-def from_canonical(c: jax.Array, orig_shape: tuple[int, ...], spec,
-                   model_axis_name: str = "model") -> jax.Array:
-    ax = _model_axis(spec, model_axis_name)
-    if ax is None or len(orig_shape) <= 1:
-        n = int(np.prod(orig_shape))
-        return c.reshape(-1)[:n].reshape(orig_shape)
-    moved = tuple([orig_shape[ax]] + [s for i, s in enumerate(orig_shape) if i != ax])
-    rest = int(np.prod(moved[1:]))
-    out = c[:, :rest].reshape(moved)
-    return jnp.moveaxis(out, 0, ax)
-
-
-# --------------------------------------------------------------------------
-# Residual (error-feedback) state
+# Per-leaf routing + residual (error-feedback) state — legacy API surface
 # --------------------------------------------------------------------------
 
 def sparse_path_ok(shape, spec, cfg: SyncConfig, dp_total: int) -> bool:
-    """Leaf qualifies for the sparse path: big enough (paper §8: N > 65k)
-    and its PER-ROW bucket count divides the split-phase group size (the
-    batched pipeline splits buckets within each canonical row so the
-    model-sharded row axis is never reshaped away)."""
-    if cfg.mode != "sparcml" or int(np.prod(shape)) < cfg.min_sparse_size:
-        return False
-    lead, cols = canonical_shape(shape, spec, cfg.bucket_size)
-    m = cols // cfg.bucket_size
-    if cfg.qsgd_bits is not None:
-        # quantized second phase also needs whole qsgd buckets per shard
-        if (cols // dp_total) % cfg.qsgd_bucket:
-            return False
-    return m % dp_total == 0
+    """Leaf qualifies for the per-leaf sparse path (see
+    :func:`repro.comm.plan.leaf_sparse_ok`; the fused plan instead packs
+    every leaf into a bucket and decides sparsity per bucket)."""
+    return leaf_sparse_ok(shape, spec, cfg, dp_total)
 
 
 def residual_shapes(param_shapes, param_specs, cfg: SyncConfig, dp_total: int):
-    """Pytree of ShapeDtypeStruct for EF residuals (canonical layout with a
-    leading per-replica axis). Leaves on the dense path get None."""
+    """Pytree of ShapeDtypeStruct for PER-LEAF EF residuals (canonical
+    layout with a leading per-replica axis). Dense-path leaves get None."""
 
     def one(shape_dtype, spec):
         shape = shape_dtype.shape
@@ -160,10 +108,10 @@ def init_residuals(param_shapes, param_specs, cfg: SyncConfig, dp_total: int):
 
 def residual_specs(param_shapes, param_specs, cfg: SyncConfig, dp_total: int,
                    dp_axes=("pod", "data")):
-    """PartitionSpecs for residuals: leading axis over dp axes, canonical
-    rows over 'model' when the leaf was model-sharded. Driven by the
-    param_shapes tree (PartitionSpec is itself a tuple — never use it as
-    the tree.map driver)."""
+    """PartitionSpecs for per-leaf residuals: leading axis over dp axes,
+    canonical rows over 'model' when the leaf was model-sharded. Driven by
+    the param_shapes tree (PartitionSpec is itself a tuple — never use it
+    as the tree.map driver)."""
     from jax.sharding import PartitionSpec as P
 
     def one(shape_dtype, spec):
@@ -177,7 +125,7 @@ def residual_specs(param_shapes, param_specs, cfg: SyncConfig, dp_total: int,
 
 
 # --------------------------------------------------------------------------
-# The sync step (runs inside shard_map: manual over dp axes, auto 'model')
+# The per-leaf sync step (thin wrapper over a one-leaf-per-bucket plan)
 # --------------------------------------------------------------------------
 
 def sync_grads_inside(
@@ -191,78 +139,119 @@ def sync_grads_inside(
     p_data: int,
     pod_axis: str | None = None,
     p_pod: int = 1,
+    native: bool = True,
+    data_rank: jax.Array | None = None,
+    pod_rank: jax.Array | None = None,
 ):
     """Compress + allreduce a grad pytree. Returns (synced_grads, new_residuals).
 
     grads: per-rank (unreduced) gradients, leaves in original layout.
     residuals: canonical-layout EF state with leading per-replica axis of
     size 1 inside shard_map (each rank holds its slice), or None per leaf.
+
+    Internally builds a degenerate one-leaf-per-bucket :class:`SyncPlan`
+    and runs the shared executor: identical numerics to the pre-fusion
+    path, one code path for both pipelines.
     """
     replicas = p_data * p_pod
     scale = 1.0 / replicas if cfg.mean else 1.0
 
     leaves_g, treedef = jax.tree.flatten(grads)
-    leaves_r = treedef.flatten_up_to(residuals) if residuals is not None else [None] * len(leaves_g)
+    leaves_r = (treedef.flatten_up_to(residuals)
+                if residuals is not None else [None] * len(leaves_g))
     leaves_s = treedef.flatten_up_to(param_specs)
 
-    new_g, new_r = [], []
-    for i, (g, r, spec) in enumerate(zip(leaves_g, leaves_r, leaves_s)):
-        if cfg.mode != "sparcml" or r is None:
-            # Dense path (small leaves / dense mode).
-            out = safe_psum(g, data_axis)
-            if pod_axis is not None:
-                out = safe_psum(out, pod_axis)
-            new_g.append(out * scale)
-            new_r.append(r)
-            continue
+    # Leaves with EF state ride the executor; the rest dense-psum below.
+    shapes = treedef.unflatten(
+        [jax.ShapeDtypeStruct(g.shape, g.dtype) for g in leaves_g])
+    plan = build_per_leaf_plan(shapes, param_specs, cfg, replicas)
+    covered = {s.leaf_id for g in plan.groups for s in g.slots}
+    active = (cfg.mode == "sparcml")
+    covered = {i for i in covered if active and leaves_r[i] is not None}
+    import dataclasses
 
-        canon = to_canonical(g, spec, cfg.bucket_size)            # (c, mB)
-        res = r[0]                                                 # strip replica axis
-        acc = res.astype(jnp.float32) + canon.astype(jnp.float32)  # Alg.2 line 1
-        rows, cols = acc.shape
-        # Batched pipeline: the (possibly 'model'-sharded) row axis is a
-        # pure batch dim through compress + the data-axis collectives —
-        # flattening it forced full-grad all-gathers over TP (dry-run HLO).
-        u, residual = topk_mod.compress2d(
-            acc, cfg.k_per_bucket, cfg.bucket_size)                # Alg.2 line 2
-        rand = None
-        if cfg.qsgd_bits is not None:
-            sub = jax.random.fold_in(key, i)
-            sub = jax.random.fold_in(sub, jax.lax.axis_index(data_axis))
-            if pod_axis is not None:
-                sub = jax.random.fold_in(sub, jax.lax.axis_index(pod_axis))
-            rand = jax.random.bits(sub, (rows * cols // p_data,),
-                                   dtype=jnp.uint32)
-        from repro.core.allreduce import dsar_split_allgather_batched_inside
-        out = dsar_split_allgather_batched_inside(                 # Alg.2 line 3
-            u, axis_name=data_axis, p=p_data, qsgd=cfg.qsgd(), rand=rand,
-            out_dtype=jnp.float32,
-        )
+    plan = dataclasses.replace(
+        plan, groups=tuple(g for g in plan.groups
+                           if g.slots[0].leaf_id in covered))
+
+    res_by_bucket = {
+        g.buckets[0].name: leaves_r[g.slots[0].leaf_id] for g in plan.groups
+    }
+    synced, new_res_by_bucket = execute_plan(
+        plan, leaves_g, res_by_bucket, key,
+        data_axis=data_axis, p_data=p_data, pod_axis=pod_axis, p_pod=p_pod,
+        native=native, data_rank=data_rank, pod_rank=pod_rank)
+
+    new_g, new_r = [], []
+    bucket_of_leaf = {g.slots[0].leaf_id: g.buckets[0].name
+                      for g in plan.groups}
+    for i, (g, r) in enumerate(zip(leaves_g, leaves_r)):
+        if i in covered:
+            new_g.append(synced[i])
+            new_r.append(new_res_by_bucket[bucket_of_leaf[i]])
+            continue
+        out = safe_psum(g, data_axis)
         if pod_axis is not None:
-            out = safe_psum(out, pod_axis)                         # hierarchical
-        out = out * scale
-        new_g.append(from_canonical(out, g.shape, spec).astype(g.dtype))
-        new_r.append(residual.astype(r.dtype)[None])
+            out = safe_psum(out, pod_axis)
+        new_g.append(out * scale)
+        new_r.append(r)
 
     return treedef.unflatten(new_g), treedef.unflatten(new_r)
 
 
-def wire_bytes_per_step(param_shapes, cfg: SyncConfig, p: int) -> dict:
-    """Analytic bytes-on-wire per rank per step (for §8.4-style reporting:
-    '80 MB -> <0.5 MB'). Dense = 2 (P-1)/P N isize (Rabenseifner);
-    sparcml = split-phase sparse items + dense/quantized allgather."""
-    from repro.core.sparse_stream import delta_threshold
+# --------------------------------------------------------------------------
+# Analytic wire-traffic reporting
+# --------------------------------------------------------------------------
 
-    total_n = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(param_shapes))
+def wire_bytes_per_step(param_shapes, cfg: SyncConfig, p: int,
+                        param_specs=None, plan=None) -> dict:
+    """Analytic bytes-on-wire per rank per step (for §8.4-style reporting:
+    '80 MB -> <0.5 MB').
+
+    Accounting is PER LEAF (or per bucket when a fused ``plan`` is
+    given): a leaf that ``sparse_path_ok`` routes to dense psum is
+    charged the dense Rabenseifner cost — earlier revisions charged every
+    leaf the sparse rate even when it actually rode dense psum, so the
+    reported ratio overstated the win whenever small/indivisible leaves
+    fell back. Dense mode: 2 (P-1)/P N isize per leaf.
+    """
+    leaves = jax.tree.leaves(param_shapes)
+    specs = ([None] * len(leaves) if param_specs is None
+             else jax.tree.structure(param_shapes).flatten_up_to(param_specs))
+    total_n = sum(int(np.prod(s.shape)) for s in leaves)
     dense = 2 * (p - 1) / p * total_n * 4
     if cfg.mode != "sparcml":
-        return {"dense_bytes": dense, "sparcml_bytes": dense, "ratio": 1.0}
-    k_items = total_n * cfg.density
-    split = (p - 1) / p * k_items * 8  # idx+val
-    q = cfg.qsgd()
-    if q is not None:
-        gather = (p - 1) / p * (total_n * q.bits / 8 + total_n / q.bucket_size * 4)
+        return {"dense_bytes": dense, "sparcml_bytes": dense, "ratio": 1.0,
+                "sparse_frac": 0.0}
+
+    if plan is not None:
+        covered = plan.covered_leaf_ids()
+        sparse = plan.wire_bytes(p)
+        # sparse fraction by BUCKET: a fused plan covers every leaf, but
+        # only the canonical range living in sparse buckets rides the
+        # compressed path — dense buckets are psum traffic.
+        all_buckets = plan.buckets
+        sparse_n = (total_n * sum(b.n for b in all_buckets if b.sparse)
+                    / max(1, sum(b.n for b in all_buckets)))
+        for i, s in enumerate(leaves):       # uncovered leaves ride psum
+            if i not in covered:
+                sparse += 2 * (p - 1) / p * int(np.prod(s.shape)) * 4
     else:
-        gather = (p - 1) / p * total_n * 4  # DSAR dense phase fp32
-    sparse = split + gather
-    return {"dense_bytes": dense, "sparcml_bytes": sparse, "ratio": dense / sparse}
+        q = cfg.qsgd()
+        sparse = 0.0
+        sparse_n = 0
+        for s, spec in zip(leaves, specs):
+            n_leaf = int(np.prod(s.shape))
+            if not sparse_path_ok(s.shape, spec, cfg, p):
+                sparse += 2 * (p - 1) / p * n_leaf * 4
+                continue
+            sparse_n += n_leaf
+            k_items = n_leaf * cfg.density
+            sparse += (p - 1) / p * k_items * 8              # idx+val split
+            if q is not None:
+                sparse += (p - 1) / p * (n_leaf * q.bits / 8
+                                         + n_leaf / q.bucket_size * 4)
+            else:
+                sparse += (p - 1) / p * n_leaf * 4           # fp32 gather
+    return {"dense_bytes": dense, "sparcml_bytes": sparse,
+            "ratio": dense / sparse, "sparse_frac": sparse_n / total_n}

@@ -98,18 +98,27 @@ def dsar_speedup_cap(n: int, isize: int = 4) -> float:
     return 2.0 / kappa
 
 
-def select_algorithm(
+ALL_ALGORITHMS = ("ssar_recursive_double", "ssar_split_allgather",
+                  "dsar_split_allgather", "dense")
+
+
+def select_bucket_algorithm(
     p: int,
     k: int,
     n: int,
     net: NetworkParams = DEFAULT_NET,
     value_bits: int = 32,
+    allow: tuple = ALL_ALGORITHMS,
 ) -> str:
-    """Trace-time auto-selection by expected cost (DESIGN.md §2.1).
+    """Per-bucket trace-time auto-selection by expected cost (DESIGN.md
+    §3.3). ``k`` is the bucket's TOTAL selected items (rows x buckets-per-
+    row x k_per_bucket), ``n`` its total canonical length.
 
     Mirrors the paper's guidance: recursive doubling for small data
-    (latency-bound), split_allgather for large sparse results, DSAR once the
-    expected result exceeds the delta threshold.
+    (latency-bound), split_allgather for large sparse results, DSAR once
+    the expected result exceeds the delta threshold. ``allow`` restricts
+    the candidate set — the batched (model-sharded rows) pipeline only
+    implements DSAR/dense, and the fusion planner passes that in.
     """
     delta = delta_threshold(n, net.isize)
     exp_k = expected_nnz(k, n, p)
@@ -123,4 +132,19 @@ def select_algorithm(
         candidates.pop("ssar_recursive_double")
         candidates.pop("ssar_split_allgather")
         candidates["dense"] = t_dense_allreduce(p, n, net)
+    candidates = {a: t for a, t in candidates.items() if a in allow}
+    if not candidates:  # everything filtered: dense always works
+        return "dense"
     return min(candidates, key=candidates.get)
+
+
+def select_algorithm(
+    p: int,
+    k: int,
+    n: int,
+    net: NetworkParams = DEFAULT_NET,
+    value_bits: int = 32,
+) -> str:
+    """Whole-vector auto-selection (single-bucket view of
+    :func:`select_bucket_algorithm`; kept as the standalone-library API)."""
+    return select_bucket_algorithm(p, k, n, net, value_bits)

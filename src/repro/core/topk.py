@@ -18,6 +18,16 @@ from repro.kernels.bucket_scatter.ops import bucket_scatter
 from repro.core.sparse_stream import SparseStream
 
 
+def _topk_lowers_everywhere() -> bool:
+    """lax.top_k is the fast path; the pinned old-JAX XLA-CPU build
+    aborts on its partitioner rule in partial-manual regions (and
+    compress2d cannot know its lowering context), so that build takes
+    the argsort fallback globally."""
+    from repro import compat
+
+    return compat.HAS_JAX_SHARD_MAP or jax.default_backend() != "cpu"
+
+
 class UniformStream(NamedTuple):
     """A bucket-uniform sparse vector: exactly k entries per B-wide bucket.
 
@@ -82,12 +92,13 @@ def compress(
 
 
 class BatchedStream(NamedTuple):
-    """Bucket-uniform stream with a leading batch axis that is NEVER
-    reshaped away — so a 'model'-sharded canonical row axis rides through
-    compression and the data-axis collectives untouched (flattening it
-    forced a full-gradient all-gather over TP; found via dry-run HLO).
+    """Bucket-uniform stream with leading batch axes that are NEVER
+    reshaped away — so a 'model'-sharded canonical row axis (and, in the
+    auto-SPMD fallback, a leading replica axis) rides through compression
+    and the data-axis collectives untouched (flattening it forced a
+    full-gradient all-gather over TP; found via dry-run HLO).
 
-    lidx/val: (r, m, k) — r rows (sharded ok), m buckets per row.
+    lidx/val: (*lead, m, k) — lead batch dims (sharded ok), m buckets each.
     """
 
     lidx: jax.Array
@@ -99,33 +110,42 @@ class BatchedStream(NamedTuple):
         return self.lidx.shape[-1]
 
     def densify(self) -> jax.Array:
-        """(r, m*B) via batched one-hot contraction (k small)."""
-        r, m, k = self.lidx.shape
+        """(*lead, m*B) via batched one-hot contraction (k small)."""
+        *lead, m, k = self.lidx.shape
         b = self.bucket_size
         iota = jnp.arange(b, dtype=jnp.int32)
         onehot = (self.lidx[..., None] == iota).astype(self.val.dtype)
-        dense = jnp.einsum("rmkb,rmk->rmb", onehot, self.val)
-        return dense.reshape(r, m * b)
+        dense = jnp.einsum("...mkb,...mk->...mb", onehot, self.val)
+        return dense.reshape(*lead, m * b)
 
 
 def compress2d(
     x: jax.Array, k_per_bucket: int, bucket_size: int = 512
 ) -> tuple[BatchedStream, jax.Array]:
-    """Batched TopK compression of a canonical (r, cols) layout.
+    """Batched TopK compression of a canonical (*lead, cols) layout.
 
-    Pure batched-jnp (top_k/sort/take_along_axis operate on the last axis
-    only), so the row axis keeps whatever sharding it has. Returns
-    (stream, residual (r, cols))."""
-    r, cols = x.shape
+    Pure batched-jnp (sort/take_along_axis operate on the last axis
+    only — the leading dims are never merged or split), so every leading
+    axis keeps whatever sharding it has. Returns
+    (stream, residual (*lead, cols))."""
+    *lead, cols = x.shape
     b = bucket_size
     assert cols % b == 0, (x.shape, b)
     m = cols // b
-    xb = x.reshape(r, m, b)
+    xb = x.reshape(*lead, m, b)
     mag = jnp.abs(xb)
-    _, lidx = jax.lax.top_k(mag, k_per_bucket)               # (r, m, k)
-    lidx = jnp.sort(lidx, axis=-1).astype(jnp.int32)
+    if _topk_lowers_everywhere():
+        _, order = jax.lax.top_k(mag, k_per_bucket)          # (*lead, m, k)
+    else:
+        # Stable argsort fallback: identical selection (ties go to the
+        # lower index, same as top_k), but top_k's partitioner rule
+        # aborts in partial-manual regions on the pinned XLA-CPU build
+        # while sort lowers fine everywhere (DESIGN.md §5.2). O(B log B)
+        # vs O(B) — paid only on the correctness backend.
+        order = jnp.argsort(-mag, axis=-1)[..., :k_per_bucket]
+    lidx = jnp.sort(order, axis=-1).astype(jnp.int32)
     val = jnp.take_along_axis(xb, lidx, axis=-1)
     iota = jnp.arange(b, dtype=jnp.int32)
-    sel = jnp.any(lidx[..., None] == iota, axis=-2)          # (r, m, b)
-    residual = jnp.where(sel, 0, xb).reshape(r, cols)
+    sel = jnp.any(lidx[..., None] == iota, axis=-2)          # (*lead, m, b)
+    residual = jnp.where(sel, 0, xb).reshape(*lead, cols)
     return BatchedStream(lidx, val, b), residual

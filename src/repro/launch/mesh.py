@@ -3,24 +3,26 @@
 A FUNCTION, not a module-level constant, so importing this module never
 touches jax device state (smoke tests see 1 CPU device; only dryrun.py
 sets the 512-placeholder-device XLA flag before any jax import).
+
+All meshes are built through :func:`repro.compat.make_mesh`, which applies
+``AxisType.Auto`` on JAX builds that support axis types and silently omits
+it elsewhere — tests, benchmarks, and examples route through here so no
+other module imports ``jax.sharding.AxisType`` directly.
 """
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 4, model: int = 2, pod: int = 0):
     """Small mesh over host devices (tests / examples)."""
     if pod:
-        return jax.make_mesh((pod, data, model), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))

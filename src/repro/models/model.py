@@ -171,12 +171,10 @@ def _cb(x, cfg: ModelConfig):
     if not cfg.act_dp_axes:
         return x
     from jax.sharding import PartitionSpec as P
-    from jax.sharding import get_abstract_mesh
+
+    from repro.compat import ambient_mesh_shape
     axes = list(cfg.act_dp_axes)
-    try:
-        mesh_shape = dict(get_abstract_mesh().shape)
-    except Exception:
-        mesh_shape = {}
+    mesh_shape = ambient_mesh_shape()
     # drop leading dp axes until the batch dim divides evenly (microbatches
     # can be narrower than pod x data)
     import numpy as _np

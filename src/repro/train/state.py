@@ -14,7 +14,8 @@ from repro.optim.schedule import ScheduleConfig
 class TrainState(NamedTuple):
     params: Any
     opt: Any
-    residuals: Any       # error-feedback state (sparcml) or None
+    residuals: Any       # EF state: bucket-keyed dict {name: (dp, rows,
+                         # cols)} from the SyncPlan (sparcml) or None
     step: jax.Array      # i32 scalar
 
 

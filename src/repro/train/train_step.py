@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import comm, compat
 from repro.core import compressor as comp
 from repro.models.config import ModelConfig
 from repro.models.model import Model
@@ -87,8 +88,12 @@ def zero1_state_specs(param_shapes, specs, tcfg: TrainConfig, dp_axes):
 # State construction
 # --------------------------------------------------------------------------
 
-def state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh, key=None):
-    """(abstract TrainState, TrainState of PartitionSpecs) without allocating."""
+def state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh, key=None,
+                 return_plan: bool = False):
+    """(abstract TrainState, TrainState of PartitionSpecs) without
+    allocating. return_plan=True additionally returns the SyncPlan whose
+    bucket names key the residual dict (None outside sparcml mode) — the
+    ONE plan both the state layout and the step executor must share."""
     if key is None:
         key = jax.random.PRNGKey(tcfg.seed)
     pshapes = jax.eval_shape(model.init, key)
@@ -108,15 +113,20 @@ def state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh, key=None):
         if n_opt == 2:
             ospecs["nu"] = pspecs
 
+    plan = None
     if tcfg.sync.mode == "sparcml":
-        rshapes = comp.residual_shapes(pshapes, pspecs, tcfg.sync, dp_total)
-        rspecs = comp.residual_specs(pshapes, pspecs, tcfg.sync, dp_total, dp_ax)
+        # Fusion plan (DESIGN.md §3): residual state is keyed BY BUCKET.
+        plan = comm.build_sync_plan(pshapes, pspecs, tcfg.sync, dp_total)
+        rshapes = plan.residual_shapes()
+        rspecs = plan.residual_specs(dp_ax)
     else:
         rshapes = rspecs = None
 
     shapes = TrainState(params=pshapes, opt=oshapes, residuals=rshapes,
                         step=jax.ShapeDtypeStruct((), jnp.int32))
     specs = TrainState(params=pspecs, opt=ospecs, residuals=rspecs, step=P())
+    if return_plan:
+        return shapes, specs, plan
     return shapes, specs
 
 
@@ -212,8 +222,12 @@ def _accumulated_grads(model: Model, params, batch, n_micro: int,
 # --------------------------------------------------------------------------
 
 def _zero1_update(params, grads, opt, lr, tcfg: TrainConfig, pspecs,
-                  dp_axes, dp_index, dp_total):
-    """Each rank updates its canonical column slice, then all-gathers."""
+                  dp_axes, dp_index, dp_total, gather_ctxs):
+    """Each rank updates its canonical column slice, then all-gathers.
+
+    gather_ctxs: one CollectiveContext per dp axis (innermost last) — the
+    slice gather uses the same native/emulated collective flavor as the
+    sync executor (DESIGN.md §4)."""
     sync = tcfg.sync
     leaves_p, treedef = jax.tree.flatten(params)
     leaves_g = treedef.flatten_up_to(grads)
@@ -250,8 +264,8 @@ def _zero1_update(params, grads, opt, lr, tcfg: TrainConfig, pspecs,
         new_mu.append(m2.astype(mul.dtype)[None])
         # all-gather updated slices back to the full canonical layout
         full = upd
-        for ax in reversed(dp_axes):
-            full = jax.lax.all_gather(full, ax, axis=1, tiled=True)
+        for ctx in reversed(gather_ctxs):
+            full = ctx.all_gather(full, axis=1)
         new_p.append(comp.from_canonical(full, pl.shape, sl))
     out_opt = {"mu": treedef.unflatten(new_mu), "count": count}
     if "nu" in opt:
@@ -259,16 +273,76 @@ def _zero1_update(params, grads, opt, lr, tcfg: TrainConfig, pspecs,
     return treedef.unflatten(new_p), out_opt
 
 
+def _zero1_update_spmd(params, grads, opt, lr, tcfg: TrainConfig, pspecs,
+                       dp_total):
+    """ZeRO-1 chunked update as plain auto-SPMD array ops: all ranks'
+    chunks live on the leading (dp_total,) axis of the opt state, so the
+    per-chunk math of :func:`_zero1_update` vectorizes over it — bitwise
+    the same values, no shard_map (DESIGN.md §4.2)."""
+    sync = tcfg.sync
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_s = treedef.flatten_up_to(pspecs)
+    leaves_mu = treedef.flatten_up_to(opt["mu"])
+    leaves_nu = treedef.flatten_up_to(opt["nu"]) if "nu" in opt else [None] * len(leaves_p)
+
+    count = opt["count"] + 1
+    ocfg = tcfg.optimizer
+    b1, b2 = ocfg.beta1, ocfg.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    new_p, new_mu, new_nu = [], [], []
+    for pl, gl, sl, mul, nul in zip(leaves_p, leaves_g, leaves_s, leaves_mu, leaves_nu):
+        pc = comp.to_canonical(pl, sl, sync.bucket_size)        # (rows, cols)
+        gc = comp.to_canonical(gl, sl, sync.bucket_size)
+        rows, cols = pc.shape
+        w = cols // dp_total
+        pch = pc.reshape(rows, dp_total, w).transpose(1, 0, 2)  # (dp, rows, w)
+        gch = gc.reshape(rows, dp_total, w).transpose(1, 0, 2).astype(jnp.float32)
+        m = mul.astype(jnp.float32)                             # (dp, rows, w)
+        if ocfg.kind == "adamw":
+            v = nul.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * gch
+            v2 = b2 * v + (1 - b2) * gch * gch
+            step = (m2 / c1) / (jnp.sqrt(v2 / c2) + ocfg.eps)
+            step = step + ocfg.weight_decay * pch.astype(jnp.float32)
+            new_nu.append(v2.astype(nul.dtype))
+        else:
+            m2 = ocfg.momentum * m + gch
+            step = m2
+            new_nu.append(None)
+        upd = (pch.astype(jnp.float32) - lr * step).astype(pl.dtype)
+        new_mu.append(m2.astype(mul.dtype))
+        full = upd.transpose(1, 0, 2).reshape(rows, cols)
+        new_p.append(comp.from_canonical(full, pl.shape, sl))
+    out_opt = {"mu": treedef.unflatten(new_mu), "count": count}
+    if "nu" in opt:
+        out_opt["nu"] = treedef.unflatten(new_nu)
+    return treedef.unflatten(new_p), out_opt
+
+
+def sparcml_uses_manual_collectives(mesh: Mesh) -> bool:
+    """True when the sparcml step lowers through the shard_map manual-dp
+    region (native collectives: all-to-all/all-gather appear in HLO);
+    False when it falls back to the auto-SPMD formulation (XLA inserts
+    all-reduces — DESIGN.md §4.2)."""
+    return not compat.partial_manual_collectives_broken(mesh, dp_axes_of(mesh))
+
+
 def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
     """Returns (jitted step fn(state, batch, key) -> (state, metrics),
     (state_shapes, state_specs))."""
     cfg = model.cfg
     sched = make_schedule(tcfg.schedule)
-    shapes, specs = state_shapes(model, tcfg, mesh)
+    shapes, specs, plan = state_shapes(model, tcfg, mesh, return_plan=True)
     bspecs = batch_specs(cfg, mesh)
     dp_ax = dp_axes_of(mesh)
     dp_total = dp_total_of(mesh)
     n_micro = tcfg.microbatches
+    sh = lambda t: jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()), t,
+        is_leaf=lambda x: x is None or isinstance(x, P))
 
     if tcfg.sync.mode != "sparcml":
         # ---------------- dense mode: plain auto-SPMD jit ----------------
@@ -287,9 +361,6 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
             new_state = TrainState(new_p, new_opt, None, state.step + 1)
             return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
 
-        sh = lambda t: jax.tree.map(
-            lambda s: NamedSharding(mesh, s if s is not None else P()), t,
-            is_leaf=lambda x: x is None or isinstance(x, P))
         jitted = jax.jit(
             step_fn,
             in_shardings=(sh(specs), sh(bspecs), NamedSharding(mesh, P())),
@@ -300,30 +371,102 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
 
     # ---------------- sparcml mode: manual dp, auto model ----------------
     pspecs = specs.params
+    # `plan` is the one state_shapes keyed the residual dict with.
+    # Collective flavor inside the partial-manual region (DESIGN.md §4):
+    # native lax collectives, or the psum-emulated fallback on backends
+    # whose partitioner cannot lower them there (XLA-CPU container build).
+    native = not compat.partial_manual_collectives_broken(mesh, dp_ax)
+    data_axis = dp_ax[-1]
+    p_data = mesh.shape[data_axis]
+    pod_axis = dp_ax[0] if len(dp_ax) > 1 else None
+    p_pod = mesh.shape[pod_axis] if pod_axis else 1
 
-    def inner(state: TrainState, batch, key):
-        # batch arrives as this rank's rows (split over dp by in_specs)
+
+    if not native:
+        # ------- auto-SPMD fallback: no shard_map (DESIGN.md §4.2) -------
+        # The partitioner of this backend cannot lower a partial-manual
+        # region (scan bodies / non-psum collectives abort), so the
+        # replica axis becomes a real leading axis: vmap computes every
+        # rank's grads on its batch slice, the executor's sums over that
+        # axis ARE the allreduce (XLA inserts them), numerics unchanged.
+        def step_fn(state: TrainState, batch, key):
+            lr = sched(state.step)
+
+            def split_ranks(x):
+                out = x.reshape((dp_total, x.shape[0] // dp_total)
+                                + x.shape[1:])
+                spec = P(tuple(dp_ax), *([None] * (out.ndim - 1)))
+                return jax.lax.with_sharding_constraint(
+                    out, NamedSharding(mesh, spec))
+
+            batch_r = jax.tree.map(split_ranks, batch)
+            loss_r, grads_r = jax.vmap(
+                lambda b: _accumulated_grads(model, state.params, b,
+                                             n_micro))(batch_r)
+            loss = jnp.mean(loss_r)
+            leaves_r, gtree = jax.tree.flatten(grads_r)
+            leaves_spec = gtree.flatten_up_to(pspecs)
+            leaves_r = [
+                jax.lax.with_sharding_constraint(
+                    g, NamedSharding(mesh, P(tuple(dp_ax),
+                                             *(s if s is not None else ()))))
+                for g, s in zip(leaves_r, leaves_spec)
+            ]
+            synced_leaves, new_res = comm.execute_plan_spmd(
+                plan, leaves_r, state.residuals, key,
+                p_data=p_data, p_pod=p_pod)
+            synced = gtree.unflatten(synced_leaves)
+            synced, gnorm = clip_by_global_norm(synced, tcfg.optimizer.grad_clip)
+            if tcfg.zero1:
+                new_p, new_opt = _zero1_update_spmd(
+                    state.params, synced, state.opt, lr, tcfg, pspecs,
+                    dp_total)
+            else:
+                new_p, new_opt = opt_update(
+                    state.params, synced, state.opt, lr, tcfg.optimizer)
+            new_state = TrainState(new_p, new_opt, new_res, state.step + 1)
+            return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(sh(specs), sh(bspecs), NamedSharding(mesh, P())),
+            out_shardings=(sh(specs), NamedSharding(mesh, P())),
+            donate_argnums=(0,),
+        )
+        return jitted, (shapes, specs)
+
+    def inner(state: TrainState, batch, key, rid):
+        # batch arrives as this rank's rows (split over dp by in_specs);
+        # rid is this rank's flat dp index fed AS DATA (a (1,) slice of
+        # arange(dp_total)) — jax.lax.axis_index does not lower in
+        # partial-manual regions on the emulated backends.
         lr = sched(state.step)
         loss, grads = _accumulated_grads(model, state.params, batch, n_micro)
         loss = jax.lax.pmean(loss, dp_ax[-1])
         if len(dp_ax) > 1:
             loss = jax.lax.pmean(loss, dp_ax[0])
-        pod_axis = dp_ax[0] if len(dp_ax) > 1 else None
-        synced, new_res = comp.sync_grads_inside(
-            grads, state.residuals, key, tcfg.sync, pspecs,
-            data_axis=dp_ax[-1], p_data=mesh.shape[dp_ax[-1]],
-            pod_axis=pod_axis,
-            p_pod=mesh.shape[pod_axis] if pod_axis else 1,
+        dp_index = rid[0]
+        data_rank = dp_index % p_data
+        pod_rank = dp_index // p_data if pod_axis else None
+        leaves_g, gtree = jax.tree.flatten(grads)
+        synced_leaves, new_res = comm.execute_plan(
+            plan, leaves_g, state.residuals, key,
+            data_axis=data_axis, p_data=p_data,
+            pod_axis=pod_axis, p_pod=p_pod,
+            native=native, data_rank=data_rank, pod_rank=pod_rank,
         )
+        synced = gtree.unflatten(synced_leaves)
         synced, gnorm = clip_by_global_norm(synced, tcfg.optimizer.grad_clip)
-        # rank id within the flattened dp axes
-        dp_index = jax.lax.axis_index(dp_ax[-1])
-        if pod_axis:
-            dp_index = dp_index + mesh.shape[dp_ax[-1]] * jax.lax.axis_index(pod_axis)
         if tcfg.zero1:
+            gather_ctxs = [
+                comm.CollectiveContext(ax, mesh.shape[ax], native=native,
+                                       rank=(pod_rank if ax == pod_axis
+                                             else data_rank))
+                for ax in dp_ax
+            ]
             new_p, new_opt = _zero1_update(
                 state.params, synced, state.opt, lr, tcfg, pspecs,
-                dp_ax, dp_index, dp_total)
+                dp_ax, dp_index, dp_total, gather_ctxs)
         else:
             new_p, new_opt = opt_update(
                 state.params, synced, state.opt, lr, tcfg.optimizer)
@@ -346,19 +489,22 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
     in_batch_specs = jax.tree.map(
         manual_only, bspecs, is_leaf=lambda x: x is None or isinstance(x, P))
 
-    mapped = jax.shard_map(
+    rid_spec = P(tuple(dp_ax))
+    mapped = compat.shard_map(
         inner, mesh=mesh,
-        in_specs=(in_state_specs, in_batch_specs, P()),
+        in_specs=(in_state_specs, in_batch_specs, P(), rid_spec),
         out_specs=(in_state_specs, P()),
         check_vma=False,
         axis_names=set(dp_ax),
     )
 
-    sh = lambda t: jax.tree.map(
-        lambda s: NamedSharding(mesh, s if s is not None else P()), t,
-        is_leaf=lambda x: x is None or isinstance(x, P))
+    def stepped(state: TrainState, batch, key):
+        # rank-id feed: each rank's slice of arange(dp_total) — see inner.
+        rid = jnp.arange(dp_total, dtype=jnp.int32)
+        return mapped(state, batch, key, rid)
+
     jitted = jax.jit(
-        mapped,
+        stepped,
         in_shardings=(sh(specs), sh(bspecs), NamedSharding(mesh, P())),
         out_shardings=(sh(specs), NamedSharding(mesh, P())),
         donate_argnums=(0,),

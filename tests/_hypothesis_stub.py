@@ -1,0 +1,73 @@
+"""Minimal deterministic stand-in for the `hypothesis` package.
+
+The container image does not ship hypothesis and nothing may be pip
+installed, so conftest registers this module under ``sys.modules
+['hypothesis']`` when the real package is absent. It covers exactly the
+surface the suite uses — ``given``, ``settings``, ``strategies.
+sampled_from/integers/booleans`` — by running each property test over a
+fixed number of pseudo-random draws seeded from the test name, so runs
+are reproducible and failures are replayable.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+from typing import Any, Callable
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+
+class strategies:
+    @staticmethod
+    def sampled_from(options):
+        options = list(options)
+        return _Strategy(lambda rng: rng.choice(options))
+
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**named_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(fn, "_stub_max_examples", None)
+            n = n if n is not None else getattr(wrapper, "_stub_max_examples", 20)
+            rng = random.Random(fn.__qualname__)
+            for case in range(n):
+                draws = {k: s.draw(rng) for k, s in named_strategies.items()}
+                try:
+                    fn(*args, **draws, **kwargs)
+                except Exception as e:  # replayable: seed is the test name
+                    raise AssertionError(
+                        f"property case {case} failed with draws {draws}"
+                    ) from e
+
+        # Strategy-bound params must not look like pytest fixtures.
+        sig = inspect.signature(fn)
+        keep = [p for name, p in sig.parameters.items()
+                if name not in named_strategies]
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+
+    return deco

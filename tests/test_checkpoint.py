@@ -94,15 +94,19 @@ def test_checkpoint_gc_keeps_last(mesh4x2, tmp_path):
 
 
 def test_straggler_watchdog_logs(mesh4x2, tmp_path, monkeypatch):
+    from statistics import median
+
     tr = make_trainer(mesh4x2, tmp_path)
     tr.init_or_resume()
-    # wrap the step fn with an artificial delay at step 8
+    tr.run(6)  # warm up: compile + collect a baseline step-time median
+    baseline = median(tr.log.step_times[1:])  # drop the compile step
+    # wrap the step fn with a delay safely above straggler_factor x median
     orig = tr.step_fn
 
     def slow(state, batch, key):
         import time
         if int(state.step) == 8:
-            time.sleep(1.0)
+            time.sleep(max(5 * baseline, 0.5))
         return orig(state, batch, key)
 
     tr.step_fn = slow

@@ -7,6 +7,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core import compressor as comp
 from repro.core import topk as topk_mod
 from repro.core.compressor import SyncConfig
@@ -52,7 +53,7 @@ def test_sync_matches_oracle_and_ef_invariant(mesh4x2):
         return comp.sync_grads_inside(g, r, k, cfg, specs,
                                       data_axis="data", p_data=4)
 
-    f = jax.shard_map(
+    f = shard_map(
         step, mesh=mesh4x2,
         in_specs=({"w": P("data", None, "model"), "b": P("data", None)},
                   rspecs, P()),
@@ -97,7 +98,7 @@ def test_hierarchical_pod_reduction(mesh2x2x2):
             g, r, k, cfg, specs, data_axis="data", p_data=2,
             pod_axis="pod", p_pod=2)
 
-    f = jax.shard_map(
+    f = shard_map(
         step, mesh=mesh2x2x2,
         in_specs=({"w": P(("pod", "data"), None)}, rspecs, P()),
         out_specs=({"w": P()}, rspecs), check_vma=False)
@@ -108,6 +109,43 @@ def test_hierarchical_pod_reduction(mesh2x2x2):
         for r in range(4)]
     np.testing.assert_allclose(np.asarray(out["w"]), np.stack(dens).mean(0),
                                rtol=1e-5, atol=1e-6)
+
+
+def test_sync_auto_dense_resolution_keeps_error_feedback(mesh8):
+    """Regression: algorithm='auto' resolving a residual-bearing leaf's
+    bucket to 'dense' (high density -> fill-in past the delta threshold)
+    must keep the legacy semantics — compress + EF + allreduce of the
+    densified stream — not KeyError on the missing bucket residual."""
+    from repro import comm
+
+    cfg = SyncConfig(mode="sparcml", algorithm="auto", k_per_bucket=256,
+                     bucket_size=512, min_sparse_size=65536, impl="ref")
+    n = 1 << 17
+    shapes = {"w": jax.ShapeDtypeStruct((n,), jnp.float32)}
+    specs = {"w": P()}
+    plan = comm.build_per_leaf_plan(shapes, specs, cfg, 8)
+    assert plan.buckets[0].algorithm == "dense"    # the premise
+    res = comp.init_residuals(shapes, specs, cfg, dp_total=8)
+    assert res["w"] is not None
+    rspecs = comp.residual_specs(shapes, specs, cfg, 8, dp_axes=("data",))
+    key = jax.random.PRNGKey(0)
+    grads = {"w": jax.random.normal(key, (8, n))}
+
+    def step(g, r, k):
+        g = jax.tree.map(lambda x: x[0], g)
+        return comp.sync_grads_inside(g, r, k, cfg, specs,
+                                      data_axis="data", p_data=8)
+
+    f = shard_map(step, mesh=mesh8,
+                  in_specs=({"w": P("data", None)}, rspecs, P()),
+                  out_specs=({"w": P()}, rspecs), check_vma=False)
+    out, new_res = f(grads, res, key)
+    dens = [np.asarray(topk_mod.compress2d(
+        grads["w"][r].reshape(1, -1), 256, 512)[0].densify()).reshape(-1)
+        for r in range(8)]
+    np.testing.assert_allclose(np.asarray(out["w"]), np.stack(dens).mean(0),
+                               rtol=1e-5, atol=1e-6)
+    assert np.abs(np.asarray(new_res["w"])).sum() > 0   # EF actually ran
 
 
 def test_wire_bytes_report():

@@ -46,14 +46,21 @@ def test_smoke_one_train_step(arch):
     gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
                          for g in jax.tree.leaves(grads)))
     assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
-    # normalized SGD step reduces the loss (guaranteed descent direction
-    # for a small enough step; fixed lr overshoots on some inits)
-    step = 0.1 / (float(gnorm) + 1e-9)
-    new_params = jax.tree.map(lambda p, g: p - step * g.astype(p.dtype),
-                              params, grads)
-    loss2 = model.loss(new_params, batch)
-    assert bool(jnp.isfinite(loss2))
-    assert float(loss2) < float(loss), f"{arch}: descent step did not reduce loss"
+    # a normalized SGD step reduces the loss for SOME small step — the
+    # guaranteed-descent property. Backtrack instead of a single fixed
+    # 0.1: MoE routers are only piecewise smooth and 0.1 overshoots on
+    # moonshot's init (grads verified descending at 0.03 and below).
+    descended = False
+    for scale in (0.1, 0.03, 0.01):
+        step = scale / (float(gnorm) + 1e-9)
+        new_params = jax.tree.map(lambda p, g: p - step * g.astype(p.dtype),
+                                  params, grads)
+        loss2 = model.loss(new_params, batch)
+        assert bool(jnp.isfinite(loss2))
+        if float(loss2) < float(loss):
+            descended = True
+            break
+    assert descended, f"{arch}: no backtracked descent step reduced loss"
 
 
 @pytest.mark.parametrize("arch", [a for a in ARCHS if a != "hubert-xlarge"])

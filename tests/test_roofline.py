@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import cost_analysis, shard_map
 from repro.utils.hlo_cost import total_cost
 from repro.utils.roofline import Roofline, model_flops_train
 
@@ -18,7 +19,7 @@ def test_loop_free_flops_match_cost_analysis():
                    jax.ShapeDtypeStruct((512, 1024), jnp.float32),
                    jax.ShapeDtypeStruct((1024, 128), jnp.float32)).compile()
     mc = total_cost(comp.as_text())
-    np.testing.assert_allclose(mc.flops, comp.cost_analysis()["flops"], rtol=1e-6)
+    np.testing.assert_allclose(mc.flops, cost_analysis(comp)["flops"], rtol=1e-6)
 
 
 def test_scan_trip_count_multiplies():
@@ -34,15 +35,15 @@ def test_scan_trip_count_multiplies():
     np.testing.assert_allclose(mc.flops, 10 * 2 * 256 ** 3, rtol=1e-6)
     assert any(t == 10 for _, t in mc.trip_counts)
     # XLA's own analysis counts the body once — we must exceed it
-    assert mc.flops > comp.cost_analysis()["flops"] * 5
+    assert mc.flops > cost_analysis(comp)["flops"] * 5
 
 
 def test_collective_bytes_psum(mesh4x2):
     def h(x):
         return jax.lax.psum(x, "data")
 
-    m = jax.jit(jax.shard_map(h, mesh=mesh4x2, in_specs=P("data"),
-                              out_specs=P(), check_vma=False))
+    m = jax.jit(shard_map(h, mesh=mesh4x2, in_specs=P("data"),
+                          out_specs=P(), check_vma=False))
     comp = m.lower(jax.ShapeDtypeStruct((64, 128), jnp.float32)).compile()
     mc = total_cost(comp.as_text())
     # all-reduce of a (16,128) f32 shard = 8192B -> ring 2*(3/4)*8192
