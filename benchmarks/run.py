@@ -1,7 +1,12 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. Heavy modules can be filtered:
+Prints ``name,us_per_call,derived`` CSV and, per module, writes a
+machine-readable ``BENCH_<module>.json`` (list of
+``{name, us_per_call, derived}``) so the perf trajectory can be tracked
+across PRs (CI uploads the JSON as artifacts). Heavy modules can be
+filtered:
   PYTHONPATH=src python -m benchmarks.run [--only density,allreduce,...]
+                                          [--json-dir DIR]
 """
 from __future__ import annotations
 
@@ -13,6 +18,7 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -23,12 +29,15 @@ MODULES = {
     "convergence": "benchmarks.bench_convergence",  # Figs. 4/5
     "volume": "benchmarks.bench_volume",            # §8.3/8.4 bandwidth
     "kernels": "benchmarks.bench_kernels",          # kernel microbench
+    "overlap": "benchmarks.bench_overlap",          # §4/§7 non-blocking
 }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None)
+    ap.add_argument("--json-dir", type=str, default=".",
+                    help="directory for the BENCH_<module>.json files")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
     unknown = [n for n in names if n not in MODULES]
@@ -42,9 +51,16 @@ def main() -> None:
         modname = MODULES[name]
         try:
             mod = __import__(modname, fromlist=["run"])
-            for row_name, us, derived in mod.run():
+            rows = list(mod.run())
+            for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}")
             sys.stdout.flush()
+            os.makedirs(args.json_dir, exist_ok=True)
+            with open(os.path.join(args.json_dir,
+                                   f"BENCH_{name}.json"), "w") as f:
+                json.dump(
+                    [{"name": r, "us_per_call": us, "derived": d}
+                     for r, us, d in rows], f, indent=1)
         except Exception as e:  # pragma: no cover
             failed.append(name)
             print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)

@@ -5,9 +5,16 @@ watchdog, deterministic data pipeline.
 
     PYTHONPATH=src python examples/train_lm_topk.py --steps 300
     PYTHONPATH=src python examples/train_lm_topk.py --fast   # ~12M params
+    PYTHONPATH=src python examples/train_lm_topk.py --fast --pipeline
+
+--pipeline drives the non-blocking runtime (DESIGN.md §6) instead of the
+synchronous Trainer.run: one-step-stale pipelined supersteps dispatched
+asynchronously with background data prefetch. A short synchronous probe
+runs first so the measured overlap win can be printed. Checkpoints are
+interchangeable between the two loops.
 
 A crash / Ctrl-C mid-run resumes from the latest checkpoint on restart
-(same command). ~100M x 300 steps is a few hours on this 1-core CPU
+(same command). ~100M x 300 steps is a few hours on this small CPU
 container; --fast demonstrates the identical code path in ~2 minutes.
 """
 import os
@@ -34,6 +41,11 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--fast", action="store_true")
     ap.add_argument("--ckpt-dir", type=str, default="/tmp/sparcml_lm_ckpt")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="non-blocking runtime: pipelined stale-gradient "
+                         "supersteps + async driver (DESIGN.md §6)")
+    ap.add_argument("--superstep", type=int, default=4,
+                    help="steps per scanned superstep (with --pipeline)")
     args = ap.parse_args()
 
     if args.fast:
@@ -70,9 +82,38 @@ def main():
                       ckpt_every=25)
     start = trainer.init_or_resume()
     print(f"starting at step {start} (resume={'yes' if start else 'no'})")
-    log = trainer.run(steps)
+
+    def med(times):
+        return sorted(times)[len(times) // 2]
+
+    if args.pipeline:
+        # short synchronous probe first, so the overlap win is measurable
+        probe_to = min(start + 8, steps)
+        if probe_to > start:
+            trainer.run(probe_to)
+        n_sync = len(trainer.log.step_times)
+        # drop sync's first entry (it carries the jit compile); keep ALL
+        # pipelined entries, compile included — the mean is exact in
+        # aggregate (fill/drain intervals tile the run). Charging the
+        # pipelined arm its own compile AND every checkpoint drain/save
+        # (the short sync probe crosses no ckpt boundary) keeps the
+        # printed win strictly conservative.
+        sync_times = trainer.log.step_times[1:n_sync]
+        log = trainer.run_pipelined(steps, staleness=1,
+                                    superstep=args.superstep, depth=2)
+        pipe_times = log.step_times[n_sync:]
+        if sync_times and pipe_times:
+            sync_avg = sum(sync_times) / len(sync_times)
+            pipe_avg = sum(pipe_times) / len(pipe_times)
+            print(f"overlap win: sync {sync_avg*1e3:.0f} ms/step -> "
+                  f"pipelined {pipe_avg*1e3:.0f} ms/step "
+                  f"({sync_avg/pipe_avg:.2f}x, staleness=1, "
+                  f"superstep={args.superstep}, depth=2)")
+    else:
+        log = trainer.run(steps)
     print(f"done: step {steps}, loss {log.losses[0]:.3f} -> {log.losses[-1]:.3f}, "
-          f"median step {sorted(log.step_times)[len(log.step_times)//2]*1e3:.0f} ms, "
+          f"avg step {sum(log.step_times)/len(log.step_times)*1e3:.0f} ms "
+          f"(median {med(log.step_times)*1e3:.0f} ms), "
           f"restarts={log.restarts}, stragglers={len(log.straggler_events)}")
 
 

@@ -21,7 +21,14 @@ are thin wrappers over a one-leaf-per-bucket plan.
 """
 from repro.comm.buckets import pack_group, unpack_group
 from repro.comm.collectives import CollectiveContext
-from repro.comm.executor import execute_plan, execute_plan_spmd
+from repro.comm.executor import (
+    apply_buckets,
+    apply_buckets_spmd,
+    execute_plan,
+    execute_plan_spmd,
+    reduce_buckets,
+    reduce_buckets_spmd,
+)
 from repro.comm.plan import (
     BucketSpec,
     GroupSpec,
@@ -37,10 +44,14 @@ __all__ = [
     "GroupSpec",
     "LeafSlot",
     "SyncPlan",
+    "apply_buckets",
+    "apply_buckets_spmd",
     "build_per_leaf_plan",
     "build_sync_plan",
     "execute_plan",
     "execute_plan_spmd",
     "pack_group",
+    "reduce_buckets",
+    "reduce_buckets_spmd",
     "unpack_group",
 ]

@@ -20,6 +20,14 @@ the bucket is the unit of compression, so it is the unit of feedback.
 The collective flavor (native vs psum-emulated, DESIGN.md §4) arrives via
 ``native`` + the rank feeds; SSAR algorithms need native collectives and
 fall back to DSAR when emulated (same dense result, different wire path).
+
+The pipeline is split into compose-able halves (DESIGN.md §6): the
+REDUCE half (``reduce_buckets`` / ``reduce_buckets_spmd``) produces
+name-keyed reduced bucket buffers plus the new EF residuals, the APPLY
+half (``apply_buckets`` / ``apply_buckets_spmd``) unpacks them back to
+leaf layouts. ``execute_plan*`` is the synchronous composition; the
+non-blocking runtime (``repro/runtime``) holds the reduced buffers in
+flight for one step between the halves.
 """
 from __future__ import annotations
 
@@ -78,7 +86,7 @@ def _reduce_flat_sparse(u_flat, algorithm: str, *,
     raise ValueError(f"not a flat sparse algorithm: {algorithm!r}")
 
 
-def execute_plan(
+def reduce_buckets(
     plan: SyncPlan,
     leaves: Sequence[jax.Array],
     residuals: dict,
@@ -92,11 +100,18 @@ def execute_plan(
     data_rank: Optional[jax.Array] = None,
     pod_rank: Optional[jax.Array] = None,
 ):
-    """Sync the planned leaves. Returns (new_leaves, new_residuals).
+    """The REDUCE half of the bucket pipeline: pack -> EF add -> TopK ->
+    per-bucket collective. Returns (reduced, new_residuals) where
+    ``reduced`` maps bucket name -> the fully reduced, scaled (rows, cols)
+    f32 buffer (replicated over the dp axes once the collective is done).
+
+    Splitting here is what makes the non-blocking runtime possible
+    (DESIGN.md §6): the pipelined superstep holds ``reduced`` in flight as
+    TrainState.inflight for one step and applies it while the NEXT step's
+    collectives run; :func:`apply_buckets` is the other half.
 
     leaves: flat per-rank grad leaves (original layouts, jax.tree.leaves
-    order of the plan's param tree). Leaves not covered by the plan come
-    back as None — the caller decides (the per-leaf wrapper psums them).
+    order of the plan's param tree).
     residuals: bucket-keyed dict; inside shard_map each value carries its
     rank's slice with a leading replica axis of size 1.
     """
@@ -119,12 +134,11 @@ def execute_plan(
         # share rounding bits.
         pod_rank = jax.lax.axis_index(pod_axis)
 
-    new_leaves: list = [None] * plan.num_leaves
+    reduced: dict = {}
     new_residuals: dict = {}
     bucket_idx = 0
     for group in plan.groups:
         buf = pack_group(group, leaves, cfg.bucket_size)     # (rows, cols) f32
-        out_parts = []
         for b in group.buckets:
             seg = jax.lax.slice_in_dim(buf, b.col_start,
                                        b.col_start + b.cols, axis=1)
@@ -133,7 +147,7 @@ def execute_plan(
                 out = safe_psum(seg, data_axis)
                 if pod_axis is not None:
                     out = safe_psum(out, pod_axis)
-                out_parts.append(out * scale)
+                reduced[b.name] = out * scale
                 bucket_idx += 1
                 continue
 
@@ -148,6 +162,10 @@ def execute_plan(
             # unquantized, so every lowering of the same plan produces
             # the same values (the executor-parity invariant).
             qsgd = cfg.qsgd() if algorithm == "dsar_split_allgather" else None
+            # A size-1 pod axis must not fold the (always-0) pod rank
+            # into the rounding key: _qsgd_rand_all skips that fold, and
+            # the two lowerings must draw identical bits (parity).
+            qsgd_pod_rank = pod_rank if p_pod > 1 else None
             if not native and algorithm.startswith("ssar"):
                 algorithm = "dsar_split_allgather"            # DESIGN.md §4
             if algorithm == "dense":
@@ -159,7 +177,7 @@ def execute_plan(
             elif algorithm == "dsar_split_allgather":
                 rand = None
                 if qsgd is not None:
-                    rand = _qsgd_rand(key, bucket_idx, coll, pod_rank,
+                    rand = _qsgd_rand(key, bucket_idx, coll, qsgd_pod_rank,
                                       group.rows * b.cols // p_data, p_data)
                 out = dsar_split_allgather_batched_inside(   # Alg. 2 line 3
                     u, axis_name=data_axis, p=p_data, qsgd=qsgd,
@@ -172,14 +190,53 @@ def execute_plan(
                 out = _reduce_flat_sparse(flat, algorithm, coll=coll)[None, :]
             if pod_axis is not None:
                 out = safe_psum(out, pod_axis)                # hierarchical
-            out_parts.append(out * scale)
+            reduced[b.name] = out * scale
             new_residuals[b.name] = residual.astype(res.dtype)[None]
             bucket_idx += 1
-        out_buf = (out_parts[0] if len(out_parts) == 1
-                   else jnp.concatenate(out_parts, axis=1))
+    return reduced, new_residuals
+
+
+def apply_buckets(plan: SyncPlan, reduced: dict, leaves: Sequence[jax.Array]):
+    """The APPLY half: reassemble each group buffer from its reduced
+    buckets (name-keyed, as produced by :func:`reduce_buckets` — possibly
+    a step earlier, via TrainState.inflight) and unpack back to the
+    original leaf layouts. Pure reshapes/concats, no communication.
+
+    leaves: shape/dtype references for the unpack (any per-rank leaf tree
+    of the plan's layout). Returns the flat new-leaf list; leaves not
+    covered by the plan come back as None.
+    """
+    new_leaves: list = [None] * plan.num_leaves
+    for group in plan.groups:
+        parts = [reduced[b.name] for b in group.buckets]
+        out_buf = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
         for leaf_id, arr in unpack_group(group, out_buf, leaves):
             new_leaves[leaf_id] = arr
-    return new_leaves, new_residuals
+    return new_leaves
+
+
+def execute_plan(
+    plan: SyncPlan,
+    leaves: Sequence[jax.Array],
+    residuals: dict,
+    key: jax.Array,
+    *,
+    data_axis: str = "data",
+    p_data: int,
+    pod_axis: Optional[str] = None,
+    p_pod: int = 1,
+    native: bool = True,
+    data_rank: Optional[jax.Array] = None,
+    pod_rank: Optional[jax.Array] = None,
+):
+    """Synchronous sync of the planned leaves: :func:`reduce_buckets`
+    composed immediately with :func:`apply_buckets` (the staleness=0
+    path). Returns (new_leaves, new_residuals)."""
+    reduced, new_residuals = reduce_buckets(
+        plan, leaves, residuals, key, data_axis=data_axis, p_data=p_data,
+        pod_axis=pod_axis, p_pod=p_pod, native=native,
+        data_rank=data_rank, pod_rank=pod_rank)
+    return apply_buckets(plan, reduced, leaves), new_residuals
 
 
 # --------------------------------------------------------------------------
@@ -202,7 +259,7 @@ def _qsgd_rand_all(key, bucket_idx: int, p_pod: int, p_data: int,
     return jnp.stack(pods)
 
 
-def execute_plan_spmd(
+def reduce_buckets_spmd(
     plan: SyncPlan,
     leaves_r: Sequence[jax.Array],
     residuals: dict,
@@ -211,7 +268,7 @@ def execute_plan_spmd(
     p_data: int,
     p_pod: int = 1,
 ):
-    """The same per-bucket pipeline as :func:`execute_plan`, expressed as
+    """The same REDUCE half as :func:`reduce_buckets`, expressed as
     plain auto-SPMD array ops OUTSIDE any shard_map.
 
     Used on backends whose partitioner cannot lower a partial-manual
@@ -225,8 +282,8 @@ def execute_plan_spmd(
     the reductions below lower to XLA's own all-reduces over the dp axes.
     residuals: bucket-keyed, FULL (R, rows, cols) arrays (not slices).
 
-    Returns (synced leaves in original layout, replica-replicated;
-    new bucket-keyed residuals, full arrays). Numerics match the manual
+    Returns (reduced {bucket name -> (rows, cols) f32 buffer}, new
+    bucket-keyed residuals, full arrays). Numerics match the manual
     executor: sums over the leading axis are the allreduce; DSAR+QSGD
     replays every (pod, range-owner) quantization on the pod-local sums.
     SSAR algorithms reduce exactly (their wire layout has no numeric
@@ -240,7 +297,7 @@ def execute_plan_spmd(
     scale = 1.0 / replicas if cfg.mean else 1.0
     qsgd = cfg.qsgd()
 
-    new_leaves: list = [None] * plan.num_leaves
+    reduced: dict = {}
     new_residuals: dict = {}
     bucket_idx = 0
     for group in plan.groups:
@@ -253,12 +310,11 @@ def execute_plan_spmd(
         pad = group.cols - buf.shape[2]
         if pad:
             buf = jnp.pad(buf, ((0, 0), (0, 0), (0, pad)))  # (R, rows, cols)
-        out_parts = []
         for b in group.buckets:
             seg = jax.lax.slice_in_dim(buf, b.col_start,
                                        b.col_start + b.cols, axis=2)
             if not b.sparse and b.name not in residuals:
-                out_parts.append(seg.sum(axis=0) * scale)
+                reduced[b.name] = seg.sum(axis=0) * scale
                 bucket_idx += 1
                 continue
             res = residuals[b.name]                           # (R, rows, cols)
@@ -282,16 +338,37 @@ def execute_plan_spmd(
                     qsgd, cfg.impl)
                 dpod = (xq.reshape(p_pod, p_data, rows, shard)
                         .transpose(0, 2, 1, 3).reshape(p_pod, rows, mb))
-            out_parts.append(dpod.sum(axis=0) * scale)
+            reduced[b.name] = dpod.sum(axis=0) * scale
             new_residuals[b.name] = residual.astype(res.dtype)
             bucket_idx += 1
-        out_buf = (out_parts[0] if len(out_parts) == 1
-                   else jnp.concatenate(out_parts, axis=1))
-        # rank-0 slices stand in for per-rank leaves (dtype/shape only)
-        ref_leaves = [l[0] for l in leaves_r]
-        for leaf_id, arr in unpack_group(group, out_buf, ref_leaves):
-            new_leaves[leaf_id] = arr
-    return new_leaves, new_residuals
+    return reduced, new_residuals
+
+
+def apply_buckets_spmd(plan: SyncPlan, reduced: dict,
+                       leaves_r: Sequence[jax.Array]):
+    """APPLY half of the auto-SPMD formulation: unpack name-keyed reduced
+    buffers back to original leaf layouts (replica-replicated). leaves_r
+    carry the (R, *leaf) per-rank layout; rank-0 slices stand in as the
+    shape/dtype references for the unpack."""
+    ref_leaves = [l[0] for l in leaves_r]
+    return apply_buckets(plan, reduced, ref_leaves)
+
+
+def execute_plan_spmd(
+    plan: SyncPlan,
+    leaves_r: Sequence[jax.Array],
+    residuals: dict,
+    key: jax.Array,
+    *,
+    p_data: int,
+    p_pod: int = 1,
+):
+    """Synchronous auto-SPMD sync: :func:`reduce_buckets_spmd` composed
+    immediately with :func:`apply_buckets_spmd` (the staleness=0 path).
+    Returns (synced leaves in original layout, new residuals)."""
+    reduced, new_residuals = reduce_buckets_spmd(
+        plan, leaves_r, residuals, key, p_data=p_data, p_pod=p_pod)
+    return apply_buckets_spmd(plan, reduced, leaves_r), new_residuals
 
 
 def _qsgd_roundtrip_spmd(x2d, rand2d, qsgd, impl: str):

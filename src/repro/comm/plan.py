@@ -142,6 +142,34 @@ class SyncPlan:
         return {k: jnp.zeros(s.shape, s.dtype)
                 for k, s in self.residual_shapes().items()}
 
+    # -- in-flight reduced-bucket state (non-blocking runtime, DESIGN §6) --
+    def inflight_shapes(self) -> dict[str, jax.ShapeDtypeStruct]:
+        """Bucket-name -> ShapeDtypeStruct of the REDUCED (rows, cols) f32
+        buffer held between a superstep's reduce and the next superstep's
+        apply. EVERY bucket has one (dense buckets too — their psum result
+        is equally in flight); only sparse buckets carry residuals."""
+        out = {}
+        for g in self.groups:
+            for b in g.buckets:
+                out[b.name] = jax.ShapeDtypeStruct((g.rows, b.cols),
+                                                   jnp.float32)
+        return out
+
+    def inflight_specs(self) -> dict:
+        """Reduced buffers are dp-replicated (the collective already ran);
+        model-sharded groups keep their row sharding under auto."""
+        from jax.sharding import PartitionSpec as P
+
+        out = {}
+        for g in self.groups:
+            for b in g.buckets:
+                out[b.name] = P("model" if g.model_sharded else None, None)
+        return out
+
+    def init_inflight(self) -> dict[str, jax.Array]:
+        return {k: jnp.zeros(s.shape, s.dtype)
+                for k, s in self.inflight_shapes().items()}
+
     # -- analytic wire traffic (per rank per step) -------------------------
     def wire_bytes(self, p: Optional[int] = None) -> float:
         """Bytes on the wire per rank per step under this plan. Dense

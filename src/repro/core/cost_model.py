@@ -148,3 +148,66 @@ def select_algorithm(
     """Whole-vector auto-selection (single-bucket view of
     :func:`select_bucket_algorithm`; kept as the standalone-library API)."""
     return select_bucket_algorithm(p, k, n, net, value_bits)
+
+
+# ---------------------------------------------------------------------------
+# Overlap-aware step costing (non-blocking runtime, DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def bucket_time(algorithm: str, p: int, k: int, n: int,
+                net: NetworkParams = DEFAULT_NET, value_bits: int = 32) -> float:
+    """Expected collective time of ONE fusion bucket under its resolved
+    algorithm (the per-bucket term the overlap model hides or exposes)."""
+    if algorithm == "dense":
+        return t_dense_allreduce(p, n, net)
+    if algorithm == "ssar_recursive_double":
+        return t_ssar_recursive_double(p, k, n, net)[1]
+    if algorithm == "ssar_split_allgather":
+        return t_ssar_split_allgather(p, k, n, net)[1]
+    if algorithm == "dsar_split_allgather":
+        return sum(t_dsar_split_allgather(p, k, n, net, value_bits)) / 2
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def plan_bucket_times(plan, p: int | None = None,
+                      net: NetworkParams = DEFAULT_NET) -> list[float]:
+    """Expected per-bucket collective times for a comm ``SyncPlan`` (duck-
+    typed — importing repro.comm here would cycle), in plan order: the
+    drain sequence the pipelined superstep overlaps with compute."""
+    p = p or plan.dp_total
+    cfg = plan.cfg
+    vb = cfg.qsgd_bits if cfg.qsgd_bits is not None else 32
+    out = []
+    for g in plan.groups:
+        for b in g.buckets:
+            k = g.rows * (b.cols // cfg.bucket_size) * cfg.k_per_bucket
+            out.append(bucket_time(b.algorithm, p, k, b.n, net, vb))
+    return out
+
+
+def exposed_bucket_times(t_buckets, t_overlap: float) -> list[float]:
+    """Per-bucket EXPOSED comm time when the buckets drain back-to-back
+    under ``t_overlap`` seconds of independent compute (the next step's
+    forward/backward): a bucket fully hidden under compute costs 0, the
+    bucket straddling the compute edge costs only its uncovered tail,
+    every later bucket is fully exposed."""
+    out, cum = [], 0.0
+    for t in t_buckets:
+        hidden = min(t, max(0.0, t_overlap - cum))
+        out.append(t - hidden)
+        cum += t
+    return out
+
+
+def t_step_overlapped(t_compute: float, t_buckets,
+                      staleness: int = 1) -> float:
+    """Modeled steady-state per-step time of the pipelined runtime.
+
+    staleness=0 serializes compute with the whole bucket drain (the
+    synchronous step); staleness>=1 runs the previous step's drain under
+    this step's compute, paying only the exposed fraction — equivalently
+    max(t_compute, sum(t_buckets)). Pipelined is never slower in this
+    model: the exposed sum is <= the full drain."""
+    if staleness == 0:
+        return t_compute + sum(t_buckets)
+    return t_compute + sum(exposed_bucket_times(t_buckets, t_compute))

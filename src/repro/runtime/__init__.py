@@ -1,0 +1,31 @@
+"""Non-blocking sync runtime (DESIGN.md §6).
+
+Two overlap mechanisms on top of the fusion-bucket sync engine:
+
+  pipeline.py  pipelined stale-gradient supersteps: a jitted/scanned
+               K-step loop where step t's forward/backward runs while the
+               bucketed sparse allreduce of step t-1's gradients completes
+               and is applied (one-step-bounded staleness; staleness=0
+               reproduces the synchronous path exactly)
+  driver.py    double-buffered host driver: async dispatch N units deep,
+               background data prefetch, logging/checkpoints that only
+               sync on already-retired steps
+"""
+from repro.runtime.driver import DriverConfig, run_pipelined
+from repro.runtime.pipeline import (
+    attach_inflight,
+    build_pipelined_step,
+    build_superstep,
+    pipelined_state_shapes,
+    resolve_lowering,
+)
+
+__all__ = [
+    "DriverConfig",
+    "attach_inflight",
+    "build_pipelined_step",
+    "build_superstep",
+    "pipelined_state_shapes",
+    "resolve_lowering",
+    "run_pipelined",
+]

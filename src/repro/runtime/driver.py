@@ -1,0 +1,233 @@
+"""Double-buffered non-blocking host driver (DESIGN.md §6).
+
+``Trainer.run`` dispatches one step, then blocks on its loss before
+dispatching the next — the host round-trip serializes with the device.
+This driver replaces that with a dispatch WINDOW:
+
+  * **async dispatch** — up to ``depth`` units (steps, or K-step
+    supersteps) are dispatched before the oldest is retired; JAX's async
+    dispatch turns the returned arrays into futures, so the device queue
+    stays full while the host prepares the next batch;
+  * **data prefetch** — batch generation (the host-side cost) runs in a
+    background thread ``prefetch`` units ahead of dispatch;
+  * **retire-only syncing** — logging reads (loss, step time) block only
+    on the unit leaving the window; checkpoints first drain the window,
+    so the save reads a fully retired state (and the caller strips the
+    in-flight bucket buffers — see TrainState.inflight).
+
+Step times are retire-to-retire wall intervals divided by the unit's step
+count: with the window full, that IS the steady-state per-step cost, with
+dispatch overhead and data generation amortized/overlapped. The
+attribution is exact in aggregate (the intervals tile the run), but
+pipeline fill inflates the first interval and the final drain deflates
+the last ones — consumers should read the MEAN of ``log.step_times``,
+not the median, for short runs.
+
+The driver is state-linear (step functions donate their input state), so
+after a dispatch only the returned state is live; on failure the window
+is discarded and ``restore_fn`` supplies a replayable state (the data
+pipeline is keyed by step, so replayed batches are identical).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from statistics import median
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DriverConfig:
+    depth: int = 2          # dispatched-but-unretired units (double-buffered)
+    prefetch: int = 2       # units of host batches prepared ahead
+    steps_per_unit: int = 1 # K of the scanned superstep fn (1 = plain step)
+
+
+@dataclass
+class DriverLog:
+    """Duck-type-compatible with train.trainer.TrainerLog."""
+    losses: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+    straggler_events: list = field(default_factory=list)
+    restarts: int = 0
+
+
+def record_step(log, step: int, dt: float, loss: float,
+                straggler_factor: float) -> None:
+    """Append one step's (loss, wall time) to the log and run the
+    straggler watchdog (wall time vs the median of the last 50 steps) —
+    the ONE logging policy shared by the synchronous Trainer.run loop and
+    the async driver, so the two loops can never drift apart."""
+    log.losses.append(loss)
+    log.step_times.append(dt)
+    if len(log.step_times) >= 5:
+        med = median(log.step_times[-50:])
+        if dt > straggler_factor * med:
+            log.straggler_events.append((step, dt, med))
+
+
+class _Prefetcher:
+    """Background thread producing HOST batches ahead of dispatch (device
+    transfer stays on the main thread). Restartable after a failure."""
+
+    def __init__(self, batch_fn: Callable[[int], Any], prefetch_units: int,
+                 steps_per_unit: int):
+        self._batch_fn = batch_fn
+        self._k = steps_per_unit
+        self._cap = max(1, prefetch_units) * steps_per_unit
+        self._q: Optional[queue.Queue] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    def start(self, start_step: int, num_steps: int):
+        self.stop()
+        self._stop = threading.Event()
+        self._q = queue.Queue(maxsize=self._cap)
+        stop, q = self._stop, self._q
+
+        def work():
+            for s in range(start_step, num_steps):
+                if stop.is_set():
+                    return
+                try:
+                    item = (s, self._batch_fn(s))
+                except BaseException as e:  # poison-pill: surface in take()
+                    item = (None, e)
+                while not stop.is_set():
+                    try:
+                        q.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if item[0] is None:
+                    return
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def take(self, step: int):
+        assert self._q is not None, "prefetcher not started"
+        s, batch = self._q.get()
+        if s is None:  # producer died — re-raise on the driver thread
+            raise RuntimeError("prefetch batch_fn failed") from batch
+        assert s == step, (s, step)
+        return batch
+
+    def stop(self):
+        if self._thread is not None:
+            self._stop.set()
+            try:  # drain so the producer can observe the stop flag
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=5)
+            self._thread = None
+
+
+def run_pipelined(
+    step_fn: Callable,
+    state,
+    *,
+    start_step: int,
+    num_steps: int,
+    batch_fn: Callable[[int], Any],
+    key_fn: Callable[[int], jax.Array],
+    cfg: DriverConfig = DriverConfig(),
+    log=None,
+    straggler_factor: float = 3.0,
+    ckpt_every: Optional[int] = None,
+    ckpt_fn: Optional[Callable[[Any], None]] = None,
+    restore_fn: Optional[Callable[[], Any]] = None,
+):
+    """Drive ``step_fn`` from ``start_step`` to ``num_steps`` (absolute).
+
+    step_fn: jitted pipelined step ``(state, batch, key)`` when
+    ``cfg.steps_per_unit == 1``, else the scanned superstep taking
+    stacked ``(K, ...)`` batches and ``(K, 2)`` keys. A trailing unit
+    shorter than K is dispatched with the smaller leading axis (one
+    extra compile).
+    batch_fn: step -> HOST batch dict (numpy); called from the prefetch
+    thread, so it must be thread-compatible (the synthetic pipeline is).
+    Returns (final state, log).
+    """
+    if cfg.depth < 1 or cfg.prefetch < 1 or cfg.steps_per_unit < 1:
+        raise ValueError(f"DriverConfig fields must be >= 1: {cfg}")
+    if log is None:
+        log = DriverLog()
+    k_unit = cfg.steps_per_unit
+    prefetcher = _Prefetcher(batch_fn, cfg.prefetch, k_unit)
+    prefetcher.start(start_step, num_steps)
+    window: deque = deque()  # (first_step, n_steps, metrics)
+    step = start_step
+    last_retire_t = time.perf_counter()
+
+    def retire_one():
+        nonlocal last_retire_t
+        s0, k, metrics = window.popleft()
+        jax.block_until_ready(metrics["loss"])          # the ONLY sync point
+        now = time.perf_counter()
+        dt = (now - last_retire_t) / k
+        last_retire_t = now
+        losses = np.atleast_1d(np.asarray(metrics["loss"]))
+        for i in range(k):
+            record_step(log, s0 + i, dt,
+                        float(losses[i] if k > 1 else losses[0]),
+                        straggler_factor)
+
+    def drain():
+        while window:
+            retire_one()
+
+    def dispatch(state, step):
+        k = min(k_unit, num_steps - step)
+        if k_unit == 1:
+            batch = jax.tree.map(jnp.asarray, prefetcher.take(step))
+            key = key_fn(step)
+        else:
+            host = [prefetcher.take(step + i) for i in range(k)]
+            batch = jax.tree.map(
+                lambda *xs: jnp.asarray(np.stack(xs)), *host)
+            key = jnp.stack([key_fn(step + i) for i in range(k)])
+        new_state, metrics = step_fn(state, batch, key)
+        window.append((step, k, metrics))
+        return new_state, step + k
+
+    try:
+        # the final drain runs under the same restore protection as the
+        # loop body: a fault surfacing in the last in-flight units is
+        # survived exactly like one mid-run
+        while step < num_steps or window:
+            try:
+                if step >= num_steps:
+                    retire_one()
+                    continue
+                prev = step
+                state, step = dispatch(state, step)
+                while len(window) >= cfg.depth:  # at most `depth` in flight
+                    retire_one()
+                if (ckpt_every and ckpt_fn is not None and step < num_steps
+                        and step // ckpt_every > prev // ckpt_every):
+                    # a unit crossed a checkpoint boundary — drain the
+                    # window so the save reads a fully retired state
+                    drain()
+                    ckpt_fn(state)
+            except Exception:
+                if restore_fn is None:
+                    raise
+                window.clear()
+                log.restarts += 1
+                state = restore_fn()
+                step = int(state.step)
+                prefetcher.start(step, num_steps)
+                last_retire_t = time.perf_counter()
+    finally:
+        prefetcher.stop()
+    return state, log

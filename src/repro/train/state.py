@@ -17,6 +17,13 @@ class TrainState(NamedTuple):
     residuals: Any       # EF state: bucket-keyed dict {name: (dp, rows,
                          # cols)} from the SyncPlan (sparcml) or None
     step: jax.Array      # i32 scalar
+    inflight: Any = None # non-blocking runtime (DESIGN.md §6): bucket-
+                         # keyed dict {name: (rows, cols)} of REDUCED
+                         # buffers from the previous superstep, applied
+                         # this step (staleness>=1); None when synchronous.
+                         # Stripped before checkpointing — dropping the
+                         # one in-flight gradient on restart is the same
+                         # lossy-accumulator deal as the EF reset (§2.3).
 
 
 @dataclass(frozen=True)

@@ -47,6 +47,31 @@ def dp_total_of(mesh: Mesh) -> int:
     return int(np.prod([mesh.shape[a] for a in dp_axes_of(mesh)]))
 
 
+def _only_dp(s) -> bool:
+    names = s if isinstance(s, tuple) else (s,)
+    return all(n in ("pod", "data") for n in names if n) and any(names)
+
+
+def manual_only(spec):
+    """shard_map in_specs may reference only MANUAL (dp) axes; the 'model'
+    sharding of params/opt rides along under auto."""
+    if spec is None:
+        return None
+    return P(*[(s if _only_dp(s) else None) for s in spec])
+
+
+def manual_only_tree(specs):
+    return jax.tree.map(
+        manual_only, specs, is_leaf=lambda x: x is None or isinstance(x, P))
+
+
+def shardings_tree(mesh: Mesh, specs):
+    """PartitionSpec tree (None = replicated) -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s if s is not None else P()), specs,
+        is_leaf=lambda x: x is None or isinstance(x, P))
+
+
 # --------------------------------------------------------------------------
 # ZeRO-1 canonical chunking (sparcml mode)
 # --------------------------------------------------------------------------
@@ -340,9 +365,7 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
     dp_ax = dp_axes_of(mesh)
     dp_total = dp_total_of(mesh)
     n_micro = tcfg.microbatches
-    sh = lambda t: jax.tree.map(
-        lambda s: NamedSharding(mesh, s if s is not None else P()), t,
-        is_leaf=lambda x: x is None or isinstance(x, P))
+    sh = lambda t: shardings_tree(mesh, t)
 
     if tcfg.sync.mode != "sparcml":
         # ---------------- dense mode: plain auto-SPMD jit ----------------
@@ -473,21 +496,8 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
         new_state = TrainState(new_p, new_opt, new_res, state.step + 1)
         return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
 
-    # shard_map in_specs may reference only MANUAL (dp) axes; the 'model'
-    # sharding of params/opt rides along under auto.
-    def manual_only(spec):
-        if spec is None:
-            return None
-        return P(*[(s if _only_dp(s) else None) for s in spec])
-
-    def _only_dp(s):
-        names = s if isinstance(s, tuple) else (s,)
-        return all(n in ("pod", "data") for n in names if n) and any(n for n in (names if isinstance(names, tuple) else (names,)))
-
-    in_state_specs = jax.tree.map(
-        manual_only, specs, is_leaf=lambda x: x is None or isinstance(x, P))
-    in_batch_specs = jax.tree.map(
-        manual_only, bspecs, is_leaf=lambda x: x is None or isinstance(x, P))
+    in_state_specs = manual_only_tree(specs)
+    in_batch_specs = manual_only_tree(bspecs)
 
     rid_spec = P(tuple(dp_ax))
     mapped = compat.shard_map(

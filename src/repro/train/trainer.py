@@ -10,18 +10,25 @@ Responsibilities beyond the jitted step:
     observability (SPMD has no per-host stragglers to act on),
   * elastic restart: `resume(new_mesh)` re-chunks replica-dependent state
     (see checkpoint.restore(remesh=True)).
+
+Two main loops: :meth:`Trainer.run` (synchronous reference — dispatch one
+step, block on its loss) and :meth:`Trainer.run_pipelined` (non-blocking
+runtime, DESIGN.md §6 — pipelined stale-gradient supersteps driven by the
+double-buffered async driver in ``repro/runtime``). Checkpoints written
+by either loop are interchangeable: the pipelined loop strips the
+in-flight bucket buffers before saving and re-attaches zeros on resume.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from statistics import median
 from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
 from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.runtime.driver import record_step
 from repro.train import checkpoint as ckpt
 from repro.train.state import TrainConfig, TrainState
 from repro.train.train_step import build_train_step, dp_total_of, init_state
@@ -77,6 +84,11 @@ class Trainer:
         """Train for num_steps (absolute). fail_at injects a fault for tests."""
         if self.state is None:
             self.init_or_resume()
+        if self.state.inflight is not None:
+            # hand-off from a pipelined run: drop the in-flight reduction
+            # (one step of gradients — the documented lossy-accumulator
+            # deal, same as the EF reset on elastic restarts)
+            self.state = self.state._replace(inflight=None)
         with self.mesh:
             while int(self.state.step) < num_steps:
                 step = int(self.state.step)
@@ -101,17 +113,78 @@ class Trainer:
                     continue
                 dt = time.perf_counter() - t0
                 self.state = new_state
-                self.log.losses.append(float(metrics["loss"]))
-                self.log.step_times.append(dt)
-                if len(self.log.step_times) >= 5:
-                    med = median(self.log.step_times[-50:])
-                    if dt > self.straggler_factor * med:
-                        self.log.straggler_events.append((step, dt, med))
+                record_step(self.log, step, dt, float(metrics["loss"]),
+                            self.straggler_factor)
                 if self.ckpt_dir and (step + 1) % self.ckpt_every == 0:
                     ckpt.save(self.ckpt_dir, self.state,
                               dp_total=dp_total_of(self.mesh))
         if self.ckpt_dir:
             ckpt.save(self.ckpt_dir, self.state, dp_total=dp_total_of(self.mesh))
+        return self.log
+
+    # -- non-blocking runtime (DESIGN.md §6) -------------------------------
+    def run_pipelined(self, num_steps: int, *, staleness: int = 1,
+                      superstep: int = 4, depth: int = 2,
+                      prefetch: int = 2, unroll: bool = False) -> TrainerLog:
+        """Train for num_steps (absolute) with the pipelined runtime:
+        K-step scanned supersteps (stale-gradient overlap, ``staleness``
+        in {0, 1}) dispatched ``depth`` deep by the async host driver,
+        with background data prefetch. Logging and checkpoints sync only
+        on retired steps; checkpoints store the synchronous state shape
+        (in-flight buffers stripped), so sync and pipelined runs resume
+        from each other's checkpoints."""
+        from repro.data.pipeline import synthetic_batch
+        from repro.runtime import driver as rt_driver
+        from repro.runtime import pipeline as rt_pipeline
+
+        if self.state is None:
+            self.init_or_resume()
+        if superstep > 1:
+            fn, _, plan = rt_pipeline.build_superstep(
+                self.model, self.tcfg, self.mesh, staleness=staleness,
+                steps=superstep, unroll=unroll)
+        else:
+            fn, _, plan = rt_pipeline.build_pipelined_step(
+                self.model, self.tcfg, self.mesh, staleness=staleness)
+        state = self.state
+        if staleness:
+            state = rt_pipeline.attach_inflight(state, plan, self.mesh)
+        elif state.inflight is not None:
+            state = state._replace(inflight=None)
+
+        dp_total = dp_total_of(self.mesh)
+
+        def ckpt_fn(s):
+            ckpt.save(self.ckpt_dir, s._replace(inflight=None),
+                      dp_total=dp_total)
+
+        def restore_fn():
+            restored = ckpt.restore(
+                self.ckpt_dir,
+                self._abstract_like()._replace(inflight=None),
+                dp_total=dp_total)
+            if staleness:
+                restored = rt_pipeline.attach_inflight(restored, plan,
+                                                       self.mesh)
+            return restored
+
+        with self.mesh:
+            state, _ = rt_driver.run_pipelined(
+                fn, state,
+                start_step=int(state.step), num_steps=num_steps,
+                batch_fn=lambda step: synthetic_batch(self.data_cfg, step),
+                key_fn=lambda step: jax.random.fold_in(self._root_key, step),
+                cfg=rt_driver.DriverConfig(depth=depth, prefetch=prefetch,
+                                           steps_per_unit=superstep),
+                log=self.log, straggler_factor=self.straggler_factor,
+                ckpt_every=self.ckpt_every if self.ckpt_dir else None,
+                ckpt_fn=ckpt_fn if self.ckpt_dir else None,
+                restore_fn=restore_fn if self.ckpt_dir else None,
+            )
+        self.state = state
+        if self.ckpt_dir:
+            ckpt.save(self.ckpt_dir, self.state._replace(inflight=None),
+                      dp_total=dp_total)
         return self.log
 
     def _abstract_like(self):

@@ -157,6 +157,41 @@ def test_executor_parity_manual_vs_spmd(mesh8, qsgd_bits):
                                    rtol=1e-5, atol=1e-6)
 
 
+def test_executor_parity_size1_pod_qsgd():
+    """A size-1 pod axis must not perturb the QSGD rounding keys: the
+    manual lowering (which sees pod_rank=0) and the auto-SPMD lowering
+    (which skips the degenerate pod fold) must produce identical bits."""
+    from repro.compat import make_mesh
+
+    cfg, plan, grads_r, res = _toy_setup(qsgd_bits=4)
+    mesh = make_mesh((1, 8), ("pod", "data"))
+    key = jax.random.PRNGKey(9)
+
+    def manual(gr, r):
+        g = jax.tree.map(lambda x: x[0], gr)
+        leaves, tree = jax.tree.flatten(g)
+        out, new_res = comm.execute_plan(
+            plan, leaves, r, key, data_axis="data", p_data=8,
+            pod_axis="pod", p_pod=1)
+        return tree.unflatten(out), new_res
+
+    rspecs = {k: P(("pod", "data"), None, None) for k in res}
+    f = shard_map(manual, mesh=mesh,
+                  in_specs=({k: P(("pod", "data"), None) for k in grads_r},
+                            rspecs),
+                  out_specs=({k: P() for k in grads_r}, rspecs),
+                  check_vma=False)
+    man_out, _ = f(grads_r, res)
+    leaves_r, tree = jax.tree.flatten(grads_r)
+    spmd_leaves, _ = comm.execute_plan_spmd(plan, leaves_r, res, key,
+                                            p_data=8, p_pod=1)
+    spmd_out = tree.unflatten(spmd_leaves)
+    for k in grads_r:
+        np.testing.assert_allclose(np.asarray(man_out[k]),
+                                   np.asarray(spmd_out[k]),
+                                   rtol=1e-5, atol=1e-6)
+
+
 def test_fused_matches_oracle(mesh8):
     """Fused bucket sync == hand-computed pack -> per-rank TopK -> mean."""
     cfg, plan, grads_r, res = _toy_setup()
