@@ -1,0 +1,231 @@
+"""Adaptive re-planning (DESIGN.md §7) on a density-drifting workload.
+
+Three views:
+
+  (a) drift: a real fused-bucket reduction (auto-SPMD executor, 8 ranks)
+      over a gradient stream whose cross-rank TopK overlap DRIFTS mid-run
+      — an EF-warmup-like phase where every rank selects the same hot
+      coordinates (post-reduction nnz ~ k, sparse wins) followed by a
+      steady state of disjoint per-rank supports (nnz ~ P*k >= delta,
+      dense representation forced). The adaptive controller consumes the
+      executor's real telemetry and swaps plans; the total MODELED
+      collective time (alpha-beta at the measured per-step nnz) is
+      compared for static-worst / static-best / adaptive. Acceptance:
+      >= 1 swap, adaptive beats static-worst, ends at static-best's
+      steady-state cost, and stays within tolerance of static-best
+      overall (it pays only the detection windows).
+  (b) telemetry overhead: measured wall time of the pipelined step with
+      the per-bucket stats emitted vs compiled out (<= 5% acceptance).
+  (c) the one-shot alpha-beta calibrator's fitted NetworkParams.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import comm
+from repro.core import cost_model as cm
+from repro.core.compressor import SyncConfig
+from repro.runtime.adapt import AdaptConfig, AdaptiveController
+
+P_RANKS = 8
+N = 1 << 20
+PHASE_STEPS = 40          # per phase; drift happens at the boundary
+
+
+def _drift_setup():
+    from jax.sharding import PartitionSpec as P
+
+    # No QSGD here: the 4-bit gather's stochastic rounding zeroes small
+    # reduced values, which would confound the fill-in telemetry the
+    # drift is meant to exercise (and hide the true union size).
+    cfg = SyncConfig(mode="sparcml", k_per_bucket=16, bucket_size=128,
+                     algorithm="auto", min_sparse_size=1024, impl="ref",
+                     fusion_bucket_bytes=1 << 20)
+    shapes = {"g": jax.ShapeDtypeStruct((N,), jnp.float32)}
+    plan = comm.build_sync_plan(shapes, {"g": P()}, cfg, P_RANKS)
+    return cfg, plan
+
+
+def _drift_grads(cfg, step: int, rng) -> jnp.ndarray:
+    """(P, N) per-rank gradients. Phase A (step < PHASE_STEPS): every
+    rank's TopK hits the SAME hot coordinates -> full overlap. Phase B:
+    disjoint per-rank hot sets -> fill-in ~ P*k >= delta."""
+    base = rng.standard_normal((P_RANKS, N)).astype(np.float32) * 0.01
+    starts = np.arange(N // cfg.bucket_size)[:, None] * cfg.bucket_size
+    per = cfg.k_per_bucket
+    if step < PHASE_STEPS:
+        # every rank's TopK hits the first `per` slots of every bucket
+        cols = (starts + np.arange(per)[None, :]).reshape(-1)
+        base[:, cols] += 5.0
+    else:
+        for r in range(P_RANKS):
+            # rank r owns slots [r*per, (r+1)*per) of every TopK bucket
+            cols = (starts + r * per + np.arange(per)[None, :]).reshape(-1)
+            base[r, cols] += 5.0
+    return jnp.asarray(base)
+
+
+def _modeled_step_cost(plan, densities, net) -> float:
+    return sum(cm.plan_bucket_times(plan, P_RANKS, net, densities))
+
+
+def _run_drift() -> list[tuple[str, float, str]]:
+    cfg, base_plan = _drift_setup()
+    net = cm.DEFAULT_NET
+    acfg = AdaptConfig(window=4, hysteresis=0.1, patience=2,
+                       calibrate=False)
+    ctrl = AdaptiveController(base_plan, net, acfg)
+    rng = np.random.default_rng(0)
+    residuals = {k: jnp.zeros(s.shape, s.dtype)
+                 for k, s in base_plan.residual_shapes().items()}
+    key = jax.random.PRNGKey(0)
+
+    jitted = {}
+
+    def reduce_with(plan):
+        sig = plan.signature()
+        if sig not in jitted:
+            jitted[sig] = jax.jit(partial(
+                comm.reduce_buckets_spmd, plan, p_data=P_RANKS))
+        return jitted[sig]
+
+    steps = 2 * PHASE_STEPS
+    per_step_nnz: list[dict] = []
+    adaptive_cost = 0.0
+    plans_seen = {base_plan.signature(): base_plan}
+    for step in range(steps):
+        plan = ctrl.plan
+        leaves = [_drift_grads(cfg, step, rng)]
+        _, residuals, telem = reduce_with(plan)(
+            leaves, residuals, jax.random.fold_in(key, step))
+        row = {name: float(np.asarray(v)[0]) for name, v in telem.items()}
+        per_step_nnz.append(row)
+        adaptive_cost += _modeled_step_cost(plan, row, net)
+        accepted = ctrl.observe_step(row)
+        if accepted is not None:
+            plans_seen[accepted.signature()] = accepted
+
+    # Static references: every plan the run visited, held fixed. The
+    # best/worst static plan is decided on the same measured trace.
+    static = {
+        sig: sum(_modeled_step_cost(p, row, net) for row in per_step_nnz)
+        for sig, p in plans_seen.items()
+    }
+    best_sig = min(static, key=static.get)
+    worst_sig = max(static, key=static.get)
+    tail = per_step_nnz[-acfg.window:]
+    adaptive_tail = np.mean([_modeled_step_cost(ctrl.plan, r, net)
+                             for r in tail])
+    # "ends at best": the steady-state cost matches the best ANY static
+    # plan could achieve on the final-phase densities
+    best_tail = min(np.mean([_modeled_step_cost(p, r, net) for r in tail])
+                    for p in plans_seen.values())
+    within_tail = bool(adaptive_tail <= best_tail * 1.05)
+    within_total = bool(adaptive_cost <= static[best_sig] * 1.25)
+    beats_worst = bool(adaptive_cost <= static[worst_sig])
+    # On a drift whose phases favor DIFFERENT algorithms, no static plan
+    # is good everywhere — adaptive should beat the best static too,
+    # paying only the detection windows.
+    return [
+        ("adapt_drift_static_worst", static[worst_sig] / steps * 1e6,
+         f"plan={worst_sig.split(',')[0]},steps={steps}"),
+        ("adapt_drift_static_best", static[best_sig] / steps * 1e6,
+         f"plan={best_sig.split(',')[0]}"),
+        ("adapt_drift_adaptive", adaptive_cost / steps * 1e6,
+         f"swaps={ctrl.swaps},ge1_swap={ctrl.swaps >= 1},"
+         f"tail_us={adaptive_tail*1e6:.2f},best_tail_us={best_tail*1e6:.2f},"
+         f"ends_at_best={within_tail},within_total_tol={within_total},"
+         f"beats_worst={beats_worst}"),
+    ]
+
+
+def _telemetry_overhead() -> list[tuple[str, float, str]]:
+    from repro.compat import make_mesh
+    from repro.data.pipeline import DataConfig, synthetic_batch
+    from repro.models.config import ModelConfig
+    from repro.models.model import build_model
+    from repro.optim.optimizers import OptimizerConfig
+    from repro.optim.schedule import ScheduleConfig
+    from repro.runtime import pipeline as rp
+    from repro.train.state import TrainConfig
+    from repro.train.train_step import init_state
+
+    cfg = ModelConfig(name="ta", family="dense", num_layers=1, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                      dtype=jnp.float32, param_dtype=jnp.float32,
+                      max_seq_len=32)
+    sync = SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=128,
+                      algorithm="dsar_split_allgather", min_sparse_size=1024,
+                      impl="ref")
+    tcfg = TrainConfig(sync=sync, optimizer=OptimizerConfig(),
+                       schedule=ScheduleConfig(peak_lr=1e-3, warmup_steps=5,
+                                               total_steps=100000),
+                       zero1=False)
+    dcfg = DataConfig(global_batch=8, seq_len=16, vocab_size=256)
+    model = build_model(cfg)
+    mesh = make_mesh((4, 2), ("data", "model"))
+    steps, rounds = 12, 6
+    key = jax.random.PRNGKey(0)
+
+    with mesh:
+        fns, states = {}, {}
+        for tag, emit in (("with", True), ("without", False)):
+            fn, _, plan = rp.build_pipelined_step(model, tcfg, mesh,
+                                                  staleness=1,
+                                                  telemetry=emit)
+            st, _ = init_state(model, tcfg, mesh)
+            fns[tag] = fn
+            states[tag] = rp.attach_inflight(st, plan, mesh)
+
+        def block(tag, start):
+            t0 = time.perf_counter()
+            st = states[tag]
+            for i in range(start, start + steps):
+                batch = jax.tree.map(jnp.asarray, synthetic_batch(dcfg, i))
+                st, m = fns[tag](st, batch, jax.random.fold_in(key, i))
+                jax.block_until_ready(m["loss"])
+            states[tag] = st
+            return (time.perf_counter() - t0) / steps * 1e6
+
+        block("with", 0), block("without", 0)     # compile + warm
+        t_with, t_without = [], []
+        for r in range(rounds):                   # ABBA-paired rounds
+            start = (r + 1) * steps
+            if r % 2 == 0:
+                a = block("with", start)
+                b = block("without", start)
+            else:
+                b = block("without", start)
+                a = block("with", start)
+            t_with.append(a)
+            t_without.append(b)
+    us_with = min(t_with)                         # best-of: noise-robust
+    us_without = min(t_without)
+    overhead = us_with / us_without - 1.0
+    return [("adapt_telemetry_overhead", us_with,
+             f"without={us_without:.1f}us,overhead={overhead:+.1%},"
+             f"le_5pct={overhead <= 0.05}")]
+
+
+def _calibration() -> list[tuple[str, float, str]]:
+    from repro.compat import make_mesh
+    from repro.utils.calibrate import calibrate
+
+    mesh = make_mesh((8,), ("data",))
+    net = calibrate(mesh, sizes=(1 << 12, 1 << 15, 1 << 18), repeats=3)
+    return [("adapt_calibrated_alpha", net.alpha * 1e6,
+             f"link_GBps={net.link_bytes_per_s/1e9:.2f},"
+             f"default_alpha_us={cm.DEFAULT_NET.alpha*1e6:.2f}")]
+
+
+def run() -> list[tuple[str, float, str]]:
+    return _run_drift() + _telemetry_overhead() + _calibration()

@@ -95,9 +95,13 @@ def _measured() -> list[tuple[str, float, str]]:
         step_fn, _ = build_train_step(model, tcfg, mesh)
         state, _ = init_state(model, tcfg, mesh)
         # unrolled superstep: the emulated-CPU host pays heavy scan-carry
-        # copies, straight-line K steps alias freely (DESIGN.md §6.1)
+        # copies, straight-line K steps alias freely (DESIGN.md §6.1).
+        # telemetry=False: measure the same non-instrumented step the
+        # non-adaptive Trainer.run_pipelined runs, so the CI perf trail
+        # tracks the product path (bench_adapt owns the overhead A/B).
         sfn, _, plan = rp.build_superstep(model, tcfg, mesh, staleness=1,
-                                          steps=k_super, unroll=True)
+                                          steps=k_super, unroll=True,
+                                          telemetry=False)
         pstate, _ = init_state(model, tcfg, mesh)
         pstate = rp.attach_inflight(pstate, plan, mesh)
 

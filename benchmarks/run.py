@@ -30,6 +30,7 @@ MODULES = {
     "volume": "benchmarks.bench_volume",            # §8.3/8.4 bandwidth
     "kernels": "benchmarks.bench_kernels",          # kernel microbench
     "overlap": "benchmarks.bench_overlap",          # §4/§7 non-blocking
+    "adapt": "benchmarks.bench_adapt",              # DESIGN.md §7 re-planning
 }
 
 

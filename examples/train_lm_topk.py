@@ -46,6 +46,11 @@ def main():
                          "supersteps + async driver (DESIGN.md §6)")
     ap.add_argument("--superstep", type=int, default=4,
                     help="steps per scanned superstep (with --pipeline)")
+    ap.add_argument("--adapt", action="store_true",
+                    help="closed-loop re-planning (DESIGN.md §7): measured "
+                         "per-bucket densities + calibrated alpha-beta "
+                         "model re-select collective algorithms at drain "
+                         "barriers (with --pipeline)")
     args = ap.parse_args()
 
     if args.fast:
@@ -100,7 +105,8 @@ def main():
         # printed win strictly conservative.
         sync_times = trainer.log.step_times[1:n_sync]
         log = trainer.run_pipelined(steps, staleness=1,
-                                    superstep=args.superstep, depth=2)
+                                    superstep=args.superstep, depth=2,
+                                    adapt=args.adapt)
         pipe_times = log.step_times[n_sync:]
         if sync_times and pipe_times:
             sync_avg = sum(sync_times) / len(sync_times)
@@ -109,6 +115,11 @@ def main():
                   f"pipelined {pipe_avg*1e3:.0f} ms/step "
                   f"({sync_avg/pipe_avg:.2f}x, staleness=1, "
                   f"superstep={args.superstep}, depth=2)")
+        if args.adapt:
+            print(f"adaptive re-planning: {len(log.plan_swaps)} plan "
+                  f"swap(s)" + "".join(
+                      f"\n  step {s}: {sig.split(',')[0]}..."
+                      for s, sig in log.plan_swaps))
     else:
         log = trainer.run(steps)
     print(f"done: step {steps}, loss {log.losses[0]:.3f} -> {log.losses[-1]:.3f}, "

@@ -65,6 +65,48 @@ def _qsgd_rand(key, bucket_idx: int, coll: CollectiveContext,
     ])
 
 
+def _bucket_telemetry(out, plan, group, b, p_data: int, p_pod: int):
+    """In-graph per-bucket stats (DESIGN.md §7): a (2,) f32 vector of
+    [post-reduction nnz, modeled wire bytes at the measured nnz]. The nnz
+    count runs on the already-materialized reduced buffer — O(n) local
+    work, no collectives — and is replicated across ranks because the
+    buffer is. The adaptive controller windows these on the host.
+    Emitted for EF (compressed) buckets only: raw-dense buckets have no
+    replan freedom, so their stats could never influence a decision."""
+    from repro.core.cost_model import bucket_wire_bytes, pod_wire_bytes
+
+    cfg = plan.cfg
+    nnz = jnp.count_nonzero(out).astype(jnp.float32)
+    k = plan.bucket_k(group, b)
+    vb = cfg.qsgd_bits if cfg.qsgd_bits is not None else 32
+    wire = bucket_wire_bytes(b.algorithm, p_data, k, b.n, nnz=nnz,
+                             value_bits=vb)
+    if p_pod > 1:
+        sparse_pod = b.pod_sparse and group.rows == 1
+        wire = wire + pod_wire_bytes(p_pod, b.n, min(b.n, p_data * k),
+                                     pod_sparse=sparse_pod)
+    return jnp.stack([nnz, jnp.asarray(wire, jnp.float32)])
+
+
+def _pod_sparse_exchange(out, pod_axis: str, cap: int) -> jax.Array:
+    """Cross-pod phase as a sparse stream exchange (DESIGN.md §7): the
+    within-pod reduced (1, n) buffer is re-sparsified (its nnz is bounded
+    by p_data * k, so ``cap`` loses nothing), every pod's (idx,val)
+    stream is all-gathered, and the union scatter-adds back to dense.
+    Exact — the same sum as the dense psum, at p_pod*cap items on the
+    wire instead of the full n-vector. Native collectives only; the
+    emulated lowering keeps the psum (identical numerics)."""
+    from repro.core import sparse_stream as ss
+
+    flat = out[0]
+    stream = ss.from_mask(flat, flat != 0, cap)
+    idx_all = jax.lax.all_gather(stream.idx, pod_axis)    # (p_pod, cap)
+    val_all = jax.lax.all_gather(stream.val, pod_axis)
+    dense = jnp.zeros_like(flat).at[idx_all.reshape(-1)].add(
+        val_all.reshape(-1), mode="drop")                 # SENTINEL drops
+    return dense[None]
+
+
 def _reduce_flat_sparse(u_flat, algorithm: str, *,
                         coll: CollectiveContext) -> jax.Array:
     """SSAR variants for flat (rows==1) buckets; returns the dense (n,)."""
@@ -101,9 +143,14 @@ def reduce_buckets(
     pod_rank: Optional[jax.Array] = None,
 ):
     """The REDUCE half of the bucket pipeline: pack -> EF add -> TopK ->
-    per-bucket collective. Returns (reduced, new_residuals) where
-    ``reduced`` maps bucket name -> the fully reduced, scaled (rows, cols)
-    f32 buffer (replicated over the dp axes once the collective is done).
+    per-bucket collective. Returns (reduced, new_residuals, telemetry)
+    where ``reduced`` maps bucket name -> the fully reduced, scaled
+    (rows, cols) f32 buffer (replicated over the dp axes once the
+    collective is done) and ``telemetry`` maps each EF bucket's name ->
+    the (2,) f32 [post-reduction nnz, wire bytes] stats vector
+    (DESIGN.md §7) — cheap in-graph counts the adaptive controller
+    consumes on the host (raw-dense buckets are not re-plannable and
+    emit none).
 
     Splitting here is what makes the non-blocking runtime possible
     (DESIGN.md §6): the pipelined superstep holds ``reduced`` in flight as
@@ -136,6 +183,7 @@ def reduce_buckets(
 
     reduced: dict = {}
     new_residuals: dict = {}
+    telemetry: dict = {}
     bucket_idx = 0
     for group in plan.groups:
         buf = pack_group(group, leaves, cfg.bucket_size)     # (rows, cols) f32
@@ -143,7 +191,8 @@ def reduce_buckets(
             seg = jax.lax.slice_in_dim(buf, b.col_start,
                                        b.col_start + b.cols, axis=1)
             if not b.sparse and b.name not in residuals:
-                # Fused dense bucket: no feedback state, plain psum.
+                # Fused dense bucket: no feedback state, plain psum —
+                # and no telemetry: nothing a replan could change here.
                 out = safe_psum(seg, data_axis)
                 if pod_axis is not None:
                     out = safe_psum(out, pod_axis)
@@ -189,11 +238,20 @@ def reduce_buckets(
                 flat = UniformStream(u.lidx[0], u.val[0], cfg.bucket_size)
                 out = _reduce_flat_sparse(flat, algorithm, coll=coll)[None, :]
             if pod_axis is not None:
-                out = safe_psum(out, pod_axis)                # hierarchical
+                if b.pod_sparse and native and group.rows == 1:
+                    # Adaptive cross-pod demotion (DESIGN.md §7): the
+                    # within-pod result stayed under delta, so the DCN
+                    # hop rides a sparse stream exchange, not dense psum.
+                    cap = min(b.n, p_data * plan.bucket_k(group, b))
+                    out = _pod_sparse_exchange(out, pod_axis, cap)
+                else:
+                    out = safe_psum(out, pod_axis)            # hierarchical
             reduced[b.name] = out * scale
+            telemetry[b.name] = _bucket_telemetry(out, plan, group, b,
+                                                  p_data, p_pod)
             new_residuals[b.name] = residual.astype(res.dtype)[None]
             bucket_idx += 1
-    return reduced, new_residuals
+    return reduced, new_residuals, telemetry
 
 
 def apply_buckets(plan: SyncPlan, reduced: dict, leaves: Sequence[jax.Array]):
@@ -231,8 +289,9 @@ def execute_plan(
 ):
     """Synchronous sync of the planned leaves: :func:`reduce_buckets`
     composed immediately with :func:`apply_buckets` (the staleness=0
-    path). Returns (new_leaves, new_residuals)."""
-    reduced, new_residuals = reduce_buckets(
+    path). Returns (new_leaves, new_residuals); the telemetry dict is
+    dropped here — callers that want it compose the halves themselves."""
+    reduced, new_residuals, _ = reduce_buckets(
         plan, leaves, residuals, key, data_axis=data_axis, p_data=p_data,
         pod_axis=pod_axis, p_pod=p_pod, native=native,
         data_rank=data_rank, pod_rank=pod_rank)
@@ -283,11 +342,14 @@ def reduce_buckets_spmd(
     residuals: bucket-keyed, FULL (R, rows, cols) arrays (not slices).
 
     Returns (reduced {bucket name -> (rows, cols) f32 buffer}, new
-    bucket-keyed residuals, full arrays). Numerics match the manual
-    executor: sums over the leading axis are the allreduce; DSAR+QSGD
-    replays every (pod, range-owner) quantization on the pod-local sums.
-    SSAR algorithms reduce exactly (their wire layout has no numeric
-    effect), so they fold into the same sum here.
+    bucket-keyed residuals (full arrays), telemetry {name -> (2,) f32
+    [nnz, wire bytes]}). Numerics match the manual executor: sums over
+    the leading axis are the allreduce; DSAR+QSGD replays every (pod,
+    range-owner) quantization on the pod-local sums. SSAR algorithms
+    reduce exactly (their wire layout has no numeric effect), so they
+    fold into the same sum here — as does the sparse pod exchange of
+    ``pod_sparse`` buckets (exact by construction). Telemetry still
+    reports the wire cost of the NATIVE path this formulation models.
     """
     from repro.comm.buckets import to_canonical
     from repro.core import topk as topk_mod
@@ -299,6 +361,7 @@ def reduce_buckets_spmd(
 
     reduced: dict = {}
     new_residuals: dict = {}
+    telemetry: dict = {}
     bucket_idx = 0
     for group in plan.groups:
         segs = [
@@ -314,6 +377,7 @@ def reduce_buckets_spmd(
             seg = jax.lax.slice_in_dim(buf, b.col_start,
                                        b.col_start + b.cols, axis=2)
             if not b.sparse and b.name not in residuals:
+                # raw-dense: no telemetry (see _bucket_telemetry)
                 reduced[b.name] = seg.sum(axis=0) * scale
                 bucket_idx += 1
                 continue
@@ -338,10 +402,13 @@ def reduce_buckets_spmd(
                     qsgd, cfg.impl)
                 dpod = (xq.reshape(p_pod, p_data, rows, shard)
                         .transpose(0, 2, 1, 3).reshape(p_pod, rows, mb))
-            reduced[b.name] = dpod.sum(axis=0) * scale
+            out = dpod.sum(axis=0)
+            reduced[b.name] = out * scale
+            telemetry[b.name] = _bucket_telemetry(out, plan, group, b,
+                                                  p_data, p_pod)
             new_residuals[b.name] = residual.astype(res.dtype)
             bucket_idx += 1
-    return reduced, new_residuals
+    return reduced, new_residuals, telemetry
 
 
 def apply_buckets_spmd(plan: SyncPlan, reduced: dict,
@@ -365,8 +432,9 @@ def execute_plan_spmd(
 ):
     """Synchronous auto-SPMD sync: :func:`reduce_buckets_spmd` composed
     immediately with :func:`apply_buckets_spmd` (the staleness=0 path).
-    Returns (synced leaves in original layout, new residuals)."""
-    reduced, new_residuals = reduce_buckets_spmd(
+    Returns (synced leaves in original layout, new residuals); the
+    telemetry dict is dropped, as in :func:`execute_plan`."""
+    reduced, new_residuals, _ = reduce_buckets_spmd(
         plan, leaves_r, residuals, key, p_data=p_data, p_pod=p_pod)
     return apply_buckets_spmd(plan, reduced, leaves_r), new_residuals
 

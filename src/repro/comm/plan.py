@@ -2,7 +2,11 @@
 
 A :class:`SyncPlan` is built ONCE per train-step configuration from
 ``param_shapes`` + ``param_specs`` + ``SyncConfig`` + the data-parallel
-world size. It decides, entirely at trace time:
+world size — and may then be RE-derived at runtime: ``SyncPlan.replan``
+produces versioned successors with re-selected per-bucket algorithms
+from measured densities (the adaptive engine, DESIGN.md §7), keeping
+the geometry and state layout invariant. The base plan decides, at
+trace time:
 
 * which *group* each leaf belongs to (leaves with the same canonical row
   count fuse together; model-sharded leaves keep their batched row axis,
@@ -68,10 +72,27 @@ class BucketSpec:
     cols: int
     rows: int
     algorithm: str                # resolved: one of SPARSE_ALGORITHMS|'dense'
+    # Adaptive re-planning (DESIGN.md §7): whether this bucket carries
+    # error-feedback state is pinned at BUILD time (None = follow
+    # `sparse`), so a replan that demotes a bucket's wire representation
+    # to 'dense' keeps the residual dict — and therefore the TrainState
+    # tree structure and every checkpoint — layout-invariant.
+    ef: Optional[bool] = None
+    # Route the cross-pod phase as a sparse (idx,val) stream exchange
+    # instead of the dense psum, when the within-pod reduction stays
+    # under the delta threshold. Wire-path only; numerics are exact.
+    pod_sparse: bool = False
 
     @property
     def sparse(self) -> bool:
         return self.algorithm != "dense"
+
+    @property
+    def has_residual(self) -> bool:
+        """Carries EF state: compress-then-reduce, whatever the current
+        wire representation ('dense' here = the compressed stream's dense
+        END-representation, paper §5.3.3 — NOT an uncompressed psum)."""
+        return self.sparse if self.ef is None else self.ef
 
     @property
     def n(self) -> int:
@@ -92,12 +113,18 @@ class GroupSpec:
 
 @dataclass(frozen=True)
 class SyncPlan:
-    """The full fusion plan for one (param tree, SyncConfig, dp) triple."""
+    """The full fusion plan for one (param tree, SyncConfig, dp) triple.
+
+    Plans are VERSIONED and re-derivable (DESIGN.md §7): ``replan``
+    produces a successor with the same geometry (groups, buckets, leaf
+    slots, residual layout) but re-selected per-bucket algorithms — the
+    unit the adaptive runtime swaps at drain barriers."""
 
     cfg: Any                      # SyncConfig (duck-typed)
     dp_total: int
     num_leaves: int
     groups: tuple[GroupSpec, ...]
+    version: int = 0              # bumped by every replan()
 
     # -- summary -----------------------------------------------------------
     @property
@@ -115,14 +142,89 @@ class SyncPlan:
     def covered_leaf_ids(self) -> set[int]:
         return {s.leaf_id for g in self.groups for s in g.slots}
 
+    # -- adaptive re-planning (DESIGN.md §7) -------------------------------
+    def algorithms(self) -> dict[str, str]:
+        """Bucket name -> resolved algorithm (the serializable plan
+        content; checkpoints carry this so restarts resume adapted)."""
+        return {b.name: b.algorithm for b in self.buckets}
+
+    def pod_sparse_flags(self) -> dict[str, bool]:
+        return {b.name: b.pod_sparse for b in self.buckets}
+
+    def signature(self) -> str:
+        """Stable content key for the compiled-step cache and checkpoint
+        meta: per-bucket algorithm (+pod-sparse marker), geometry-ordered."""
+        return ",".join(
+            f"{b.name}={b.algorithm}{'+ps' if b.pod_sparse else ''}"
+            for b in self.buckets)
+
+    def bucket_k(self, group: "GroupSpec", b: "BucketSpec") -> int:
+        """TOTAL selected items of one bucket per rank per step."""
+        return group.rows * (b.cols // self.cfg.bucket_size) * \
+            self.cfg.k_per_bucket
+
+    def replan(self, densities: Optional[dict] = None, net=None, *,
+               algorithms: Optional[dict] = None,
+               pod_sparse: Optional[dict] = None) -> "SyncPlan":
+        """A successor plan with re-selected bucket algorithms.
+
+        Either re-run the cost model with MEASURED post-reduction nnz per
+        bucket (``densities``: name -> nnz, from the telemetry window)
+        and calibrated ``net`` params, or apply explicit ``algorithms``
+        overrides (checkpoint resume). Structural invariants:
+
+        * buckets without EF state (raw-dense at build: under
+          ``min_sparse_size`` or never planned sparse) stay raw-dense —
+          they have no compression stats and no residual buffer to carry;
+        * EF-bearing buckets keep their residual whatever the new wire
+          representation (``ef`` pinned), so TrainState layout and
+          checkpoints are invariant under every replan;
+        * batched (rows > 1) buckets stay within BATCHED_ALGORITHMS.
+        """
+        from repro.core.cost_model import DEFAULT_NET, select_bucket_algorithm
+
+        net = net or DEFAULT_NET
+        cfg = self.cfg
+        vb = cfg.qsgd_bits if cfg.qsgd_bits is not None else 32
+        new_groups = []
+        for g in self.groups:
+            new_buckets = []
+            for b in g.buckets:
+                if not b.has_residual:
+                    new_buckets.append(b)        # permanently raw-dense
+                    continue
+                allow = (SPARSE_ALGORITHMS + ("dense",) if g.rows == 1
+                         else BATCHED_ALGORITHMS)
+                if algorithms is not None:
+                    algo = algorithms.get(b.name, b.algorithm)
+                else:
+                    nnz = None if densities is None else densities.get(b.name)
+                    algo = select_bucket_algorithm(
+                        self.dp_total, self.bucket_k(g, b), b.n, net,
+                        value_bits=vb, allow=allow, reduced_nnz=nnz)
+                if algo not in allow:
+                    algo = "dsar_split_allgather"
+                ps = b.pod_sparse if pod_sparse is None else \
+                    bool(pod_sparse.get(b.name, b.pod_sparse))
+                new_buckets.append(BucketSpec(
+                    b.name, b.col_start, b.cols, b.rows, algo,
+                    ef=b.has_residual, pod_sparse=ps and g.rows == 1))
+            new_groups.append(GroupSpec(g.gid, g.rows, g.model_sharded,
+                                        g.cols, g.slots, tuple(new_buckets)))
+        import dataclasses
+
+        return dataclasses.replace(self, groups=tuple(new_groups),
+                                   version=self.version + 1)
+
     # -- error-feedback residual state (keyed by bucket) -------------------
     def residual_shapes(self) -> dict[str, jax.ShapeDtypeStruct]:
         """Bucket-name -> ShapeDtypeStruct (leading per-replica axis).
-        Dense buckets carry no feedback state and are skipped."""
+        Raw-dense buckets carry no feedback state and are skipped; a
+        replan-demoted bucket (``ef`` pinned True) keeps its residual."""
         out = {}
         for g in self.groups:
             for b in g.buckets:
-                if b.sparse:
+                if b.has_residual:
                     out[b.name] = jax.ShapeDtypeStruct(
                         (self.dp_total, g.rows, b.cols), self.cfg.ef_dtype)
         return out
@@ -133,7 +235,7 @@ class SyncPlan:
         out = {}
         for g in self.groups:
             for b in g.buckets:
-                if b.sparse:
+                if b.has_residual:
                     out[b.name] = P(dp_axes,
                                     "model" if g.model_sharded else None, None)
         return out

@@ -42,36 +42,51 @@ def t_dense_allreduce(p: int, n: int, net: NetworkParams = DEFAULT_NET) -> float
 
 
 def t_ssar_recursive_double(
-    p: int, k: int, n: int, net: NetworkParams = DEFAULT_NET, expected: bool = True
+    p: int, k: int, n: int, net: NetworkParams = DEFAULT_NET,
+    expected: bool = True, reduced_nnz: float | None = None,
 ) -> tuple[float, float, float]:
     """(lower, expected, upper) for SSAR_Recursive_double.
 
     lower: full index overlap (k items per round);
     upper: zero overlap (2^t k items in round t, sums to (P-1)k);
-    expected: per-round fill-in from the uniform model (App. B).
+    expected: per-round fill-in from the uniform model (App. B), or — when
+    ``reduced_nnz`` (a MEASURED final fill-in, adaptive telemetry) is given
+    — the uniform per-round curve rescaled so it lands on the measurement.
     """
     lat = math.log2(p) * net.alpha
     lo = lat + math.log2(p) * k * net.beta_s
     hi = lat + (p - 1) * k * net.beta_s
+    scale = 1.0
+    if reduced_nnz is not None:
+        uniform_final = expected_nnz(k, n, p)
+        if uniform_final > 0:
+            scale = reduced_nnz / uniform_final
+    # Round t carries at most 2^t * k items (zero overlap) and at most n;
+    # the measured rescale must respect both, or 'expected' could exceed
+    # its own upper bound and over-penalize this algorithm in selection.
     exp_items = sum(
-        expected_nnz(k, n, 2**t) for t in range(int(math.log2(p)))
+        min(expected_nnz(k, n, 2**t) * scale, (2**t) * k, n)
+        for t in range(int(math.log2(p)))
     )
     exp = lat + exp_items * net.beta_s
     return lo, exp, hi
 
 
 def t_ssar_split_allgather(
-    p: int, k: int, n: int, net: NetworkParams = DEFAULT_NET
+    p: int, k: int, n: int, net: NetworkParams = DEFAULT_NET,
+    reduced_nnz: float | None = None,
 ) -> tuple[float, float, float]:
     """(lower, expected, upper) for SSAR_Split_allgather (paper §5.3.2).
 
     Latency L2 = (P-1) alpha + log2(P) alpha (direct split sends + allgather).
-    Bandwidth between 2 (P-1)/P k beta_s and P k beta_s.
+    Bandwidth between 2 (P-1)/P k beta_s and P k beta_s. ``reduced_nnz``
+    replaces the uniform-model expected reduced size with a measurement.
     """
     lat = (p - 1) * net.alpha + math.log2(p) * net.alpha
     lo = lat + 2 * (p - 1) / p * k * net.beta_s
     hi = lat + p * k * net.beta_s
-    kk = expected_nnz(k, n, p)  # expected reduced size
+    kk = (reduced_nnz if reduced_nnz is not None
+          else expected_nnz(k, n, p))  # reduced size: measured or expected
     exp = lat + ((p - 1) / p * k + (p - 1) / p * kk) * net.beta_s
     return lo, exp, hi
 
@@ -102,30 +117,41 @@ ALL_ALGORITHMS = ("ssar_recursive_double", "ssar_split_allgather",
                   "dsar_split_allgather", "dense")
 
 
-def select_bucket_algorithm(
+def select_algorithm(
     p: int,
     k: int,
     n: int,
     net: NetworkParams = DEFAULT_NET,
     value_bits: int = 32,
     allow: tuple = ALL_ALGORITHMS,
+    reduced_nnz: float | None = None,
 ) -> str:
-    """Per-bucket trace-time auto-selection by expected cost (DESIGN.md
-    §3.3). ``k`` is the bucket's TOTAL selected items (rows x buckets-per-
-    row x k_per_bucket), ``n`` its total canonical length.
+    """THE auto-selection entry point: pick the cheapest algorithm by
+    expected alpha-beta cost (paper §5.3, DESIGN.md §3.3). ``k`` is the
+    per-rank selected item count, ``n`` the vector's canonical length.
 
     Mirrors the paper's guidance: recursive doubling for small data
     (latency-bound), split_allgather for large sparse results, DSAR once
-    the expected result exceeds the delta threshold. ``allow`` restricts
-    the candidate set — the batched (model-sharded rows) pipeline only
+    the result exceeds the delta threshold. ``allow`` restricts the
+    candidate set — the batched (model-sharded rows) pipeline only
     implements DSAR/dense, and the fusion planner passes that in.
+
+    ``reduced_nnz`` closes the loop (DESIGN.md §7): a MEASURED
+    post-reduction nnz (adaptive telemetry) replaces the uniform-model
+    ``expected_nnz`` everywhere — both in the sparse-vs-dense delta
+    decision and in the gather-phase cost terms — so fill-in growth and
+    EF-residual densification feed back into the choice.
     """
     delta = delta_threshold(n, net.isize)
-    exp_k = expected_nnz(k, n, p)
+    exp_k = (reduced_nnz if reduced_nnz is not None
+             else expected_nnz(k, n, p))
     candidates = {
-        "ssar_recursive_double": t_ssar_recursive_double(p, k, n, net)[1],
-        "ssar_split_allgather": t_ssar_split_allgather(p, k, n, net)[1],
-        "dsar_split_allgather": sum(t_dsar_split_allgather(p, k, n, net, value_bits)) / 2,
+        "ssar_recursive_double":
+            t_ssar_recursive_double(p, k, n, net, reduced_nnz=reduced_nnz)[1],
+        "ssar_split_allgather":
+            t_ssar_split_allgather(p, k, n, net, reduced_nnz=reduced_nnz)[1],
+        "dsar_split_allgather":
+            sum(t_dsar_split_allgather(p, k, n, net, value_bits)) / 2,
     }
     if exp_k >= delta:
         # Sparse end-representation no longer pays (paper §5.3.3).
@@ -138,16 +164,20 @@ def select_bucket_algorithm(
     return min(candidates, key=candidates.get)
 
 
-def select_algorithm(
+def select_bucket_algorithm(
     p: int,
     k: int,
     n: int,
     net: NetworkParams = DEFAULT_NET,
     value_bits: int = 32,
+    allow: tuple = ALL_ALGORITHMS,
+    reduced_nnz: float | None = None,
 ) -> str:
-    """Whole-vector auto-selection (single-bucket view of
-    :func:`select_bucket_algorithm`; kept as the standalone-library API)."""
-    return select_bucket_algorithm(p, k, n, net, value_bits)
+    """Per-fusion-bucket view of :func:`select_algorithm` (``k`` = the
+    bucket's TOTAL selected items: rows x buckets-per-row x k_per_bucket,
+    ``n`` its total canonical length). Thin wrapper — the one selection
+    implementation lives in :func:`select_algorithm`."""
+    return select_algorithm(p, k, n, net, value_bits, allow, reduced_nnz)
 
 
 # ---------------------------------------------------------------------------
@@ -155,33 +185,84 @@ def select_algorithm(
 # ---------------------------------------------------------------------------
 
 def bucket_time(algorithm: str, p: int, k: int, n: int,
-                net: NetworkParams = DEFAULT_NET, value_bits: int = 32) -> float:
+                net: NetworkParams = DEFAULT_NET, value_bits: int = 32,
+                reduced_nnz: float | None = None) -> float:
     """Expected collective time of ONE fusion bucket under its resolved
-    algorithm (the per-bucket term the overlap model hides or exposes)."""
+    algorithm (the per-bucket term the overlap model hides or exposes).
+    ``reduced_nnz`` substitutes a measured post-reduction fill-in for the
+    uniform model, exactly as in :func:`select_algorithm`."""
     if algorithm == "dense":
         return t_dense_allreduce(p, n, net)
     if algorithm == "ssar_recursive_double":
-        return t_ssar_recursive_double(p, k, n, net)[1]
+        return t_ssar_recursive_double(p, k, n, net,
+                                       reduced_nnz=reduced_nnz)[1]
     if algorithm == "ssar_split_allgather":
-        return t_ssar_split_allgather(p, k, n, net)[1]
+        return t_ssar_split_allgather(p, k, n, net,
+                                      reduced_nnz=reduced_nnz)[1]
     if algorithm == "dsar_split_allgather":
         return sum(t_dsar_split_allgather(p, k, n, net, value_bits)) / 2
     raise ValueError(f"unknown algorithm {algorithm!r}")
 
 
+def bucket_wire_bytes(algorithm: str, p: int, k: int, n: int,
+                      nnz=None, value_bits: int = 32, isize: int = 4):
+    """Per-rank data-axis wire bytes of one bucket for one step. Pure
+    arithmetic in ``nnz`` (a traced scalar inside the telemetry emitter,
+    or a float on the host), so the executor can report measured wire
+    volume in-graph. ``nnz`` defaults to the worst case (p*k)."""
+    item = isize + INDEX_BYTES
+    if algorithm == "dense":
+        # compressed-dense end-representation OR raw psum: one dense
+        # allreduce of the n-vector (Rabenseifner accounting).
+        return 2 * (p - 1) / p * n * isize
+    if nnz is None:
+        nnz = float(min(n, p * k))
+    if algorithm == "ssar_recursive_double":
+        # log2(P) rounds; round t carries ~fill-in-many items. Charged at
+        # the measured final fill per round (upper-bounds early rounds).
+        return math.log2(p) * nnz * item
+    if algorithm == "ssar_split_allgather":
+        return (p - 1) / p * k * item + (p - 1) / p * nnz * item
+    if algorithm == "dsar_split_allgather":
+        # value_bits < 32 also adds one fp32 scale per QSGD bucket; the
+        # exact figure lives in plan.wire_bytes — telemetry keeps the
+        # dominant terms only.
+        return (p - 1) / p * k * item + (p - 1) / p * n * value_bits / 8
+    raise ValueError(f"unknown algorithm {algorithm!r}")
+
+
+def pod_wire_bytes(p_pod: int, n: int, cap: int,
+                   pod_sparse: bool = False, isize: int = 4) -> float:
+    """Per-rank CROSS-POD wire bytes of one bucket: the dense psum
+    (Rabenseifner accounting) or the sparse (idx,val) stream exchange of
+    ``pod_sparse`` buckets at stream capacity ``cap`` (DESIGN.md §7.2).
+    The ONE accounting both the executor's telemetry and the adaptive
+    controller's demotion rule use — they must never diverge."""
+    if p_pod <= 1:
+        return 0.0
+    if pod_sparse:
+        return p_pod * cap * float(isize + INDEX_BYTES)
+    return 2.0 * (p_pod - 1) / p_pod * n * isize
+
+
 def plan_bucket_times(plan, p: int | None = None,
-                      net: NetworkParams = DEFAULT_NET) -> list[float]:
+                      net: NetworkParams = DEFAULT_NET,
+                      densities: dict | None = None) -> list[float]:
     """Expected per-bucket collective times for a comm ``SyncPlan`` (duck-
     typed — importing repro.comm here would cycle), in plan order: the
-    drain sequence the pipelined superstep overlaps with compute."""
+    drain sequence the pipelined superstep overlaps with compute.
+    ``densities`` maps bucket name -> measured post-reduction nnz (the
+    adaptive telemetry window), overriding the uniform fill-in model."""
     p = p or plan.dp_total
     cfg = plan.cfg
     vb = cfg.qsgd_bits if cfg.qsgd_bits is not None else 32
     out = []
     for g in plan.groups:
         for b in g.buckets:
-            k = g.rows * (b.cols // cfg.bucket_size) * cfg.k_per_bucket
-            out.append(bucket_time(b.algorithm, p, k, b.n, net, vb))
+            k = plan.bucket_k(g, b)
+            nnz = None if densities is None else densities.get(b.name)
+            out.append(bucket_time(b.algorithm, p, k, b.n, net, vb,
+                                   reduced_nnz=nnz))
     return out
 
 

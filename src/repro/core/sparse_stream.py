@@ -116,13 +116,20 @@ def merge(a: SparseStream, b: SparseStream, cap_out: int) -> SparseStream:
 
 def concat(streams: list[SparseStream], cap_out: int | None = None) -> SparseStream:
     """Concatenate streams with *disjoint* index ranges (paper §5.1: the sum
-    of dimension-partitioned vectors is plain concatenation)."""
+    of dimension-partitioned vectors is plain concatenation).
+
+    A ``cap_out`` below the true union size keeps the cap_out smallest
+    indices (sort moves padding behind every valid entry) and the ``nnz``
+    count saturates at the capacity — the same overflow contract as
+    :func:`merge`. Callers size capacities from the |H1|+|H2| bound so
+    overflow cannot occur on the collective paths."""
     idx = jnp.concatenate([s.idx for s in streams])
     val = jnp.concatenate([s.val for s in streams])
     nnz = sum(s.nnz for s in streams)
     if cap_out is not None and cap_out != idx.shape[0]:
         idx, val = jax.lax.sort((idx, val), num_keys=1)
         idx, val = idx[:cap_out], val[:cap_out]
+        nnz = jnp.minimum(jnp.asarray(nnz, jnp.int32), cap_out)
     return SparseStream(idx, val, jnp.asarray(nnz, jnp.int32))
 
 

@@ -1,6 +1,6 @@
-"""Non-blocking sync runtime (DESIGN.md §6).
+"""Non-blocking sync runtime (DESIGN.md §6) + adaptive re-planning (§7).
 
-Two overlap mechanisms on top of the fusion-bucket sync engine:
+Three mechanisms on top of the fusion-bucket sync engine:
 
   pipeline.py  pipelined stale-gradient supersteps: a jitted/scanned
                K-step loop where step t's forward/backward runs while the
@@ -10,7 +10,18 @@ Two overlap mechanisms on top of the fusion-bucket sync engine:
   driver.py    double-buffered host driver: async dispatch N units deep,
                background data prefetch, logging/checkpoints that only
                sync on already-retired steps
+  adapt.py     closed-loop re-planning: windowed measured-density
+               telemetry + calibrated alpha-beta cost model re-select
+               each bucket's algorithm; accepted replans swap the
+               compiled superstep at drain barriers (hysteresis +
+               patience damp flapping)
 """
+from repro.runtime.adapt import (
+    AdaptConfig,
+    AdaptiveController,
+    AdaptiveRuntime,
+    TelemetryWindow,
+)
 from repro.runtime.driver import DriverConfig, run_pipelined
 from repro.runtime.pipeline import (
     attach_inflight,
@@ -21,7 +32,11 @@ from repro.runtime.pipeline import (
 )
 
 __all__ = [
+    "AdaptConfig",
+    "AdaptiveController",
+    "AdaptiveRuntime",
     "DriverConfig",
+    "TelemetryWindow",
     "attach_inflight",
     "build_pipelined_step",
     "build_superstep",

@@ -1,0 +1,284 @@
+"""Adaptive re-planning: measured-density telemetry -> plan swaps
+(DESIGN.md §7).
+
+The trace-time ``SyncPlan`` freezes every per-bucket algorithm choice at
+the ASSUMED TopK density; fill-in growth, EF-residual densification and
+real wire costs never feed back. This module closes the loop:
+
+  TelemetryWindow      windows the executor's per-bucket post-reduction
+                       nnz stats (host-side, retired steps only)
+  AdaptiveController   re-runs the cost model with measured densities and
+                       calibrated NetworkParams, applies hysteresis so
+                       plans don't flap, and emits an accepted replan
+  AdaptiveRuntime      driver-facing adapter: controller + a
+                       plan-signature-keyed compiled-step cache; the
+                       driver drains its dispatch window, swaps the
+                       compiled superstep, and keeps going
+
+Replans are layout-invariant (``BucketSpec.ef`` pins the residual set),
+so a swap never migrates TrainState — the in-flight reduced buffers and
+EF residuals carry straight across, and checkpoints written under any
+plan version restore under any other (the active plan's algorithm map is
+carried in checkpoint meta so restarts RESUME the adapted plan instead
+of re-warming from the static one).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import numpy as np
+
+from repro.core.cost_model import DEFAULT_NET, NetworkParams, bucket_time
+from repro.core.sparse_stream import delta_threshold
+
+
+@dataclass(frozen=True)
+class AdaptConfig:
+    """Knobs of the adaptive controller."""
+
+    window: int = 8          # retired steps of telemetry per decision
+    hysteresis: float = 0.2  # min fractional modeled win to switch a bucket
+    patience: int = 2        # consecutive windows agreeing before a swap
+    calibrate: bool = True   # fit NetworkParams from measured timings once
+    pod_sparse: bool = True  # allow demoting the cross-pod dense psum
+
+
+class TelemetryWindow:
+    """Fixed-size window of per-step, per-bucket post-reduction nnz."""
+
+    def __init__(self, window: int):
+        self.window = max(1, int(window))
+        self._rows: list[dict] = []
+
+    def push(self, nnz_by_bucket: dict) -> None:
+        self._rows.append(dict(nnz_by_bucket))
+        if len(self._rows) > self.window:
+            self._rows = self._rows[-self.window:]
+
+    @property
+    def full(self) -> bool:
+        return len(self._rows) >= self.window
+
+    def mean_nnz(self) -> dict:
+        out: dict = {}
+        for row in self._rows:
+            for name, nnz in row.items():
+                out.setdefault(name, []).append(float(nnz))
+        return {name: float(np.mean(v)) for name, v in out.items()}
+
+    def clear(self) -> None:
+        self._rows = []
+
+
+class AdaptiveController:
+    """Pure decision logic: windowed telemetry in, accepted replans out.
+
+    Decision rule (DESIGN.md §7): every full window, re-run
+    ``SyncPlan.replan`` with the window's mean measured nnz and the
+    calibrated net params; a bucket's algorithm actually changes only if
+    the cost model predicts at least ``hysteresis`` fractional win AT THE
+    MEASURED DENSITY (flap damping #1), and the resulting plan must win
+    ``patience`` consecutive windows before it is emitted (flap damping
+    #2). Cross-pod demotion (``pod_sparse``) additionally requires the
+    measured fill-in to stay under the delta threshold."""
+
+    def __init__(self, plan, net: NetworkParams = DEFAULT_NET,
+                 cfg: AdaptConfig = AdaptConfig(), p_pod: int = 1):
+        self.plan = plan
+        self.net = net
+        self.cfg = cfg
+        self.p_pod = max(1, int(p_pod))
+        self.window = TelemetryWindow(cfg.window)
+        self._pending_sig: Optional[str] = None
+        self._pending_plan = None
+        self._pending_count = 0
+        self.swaps = 0
+
+    # -- telemetry ingest --------------------------------------------------
+    def observe_step(self, nnz_by_bucket: dict):
+        """Feed one retired step's stats; returns an accepted new plan
+        when a swap is due, else None."""
+        self.window.push(nnz_by_bucket)
+        if not self.window.full:
+            return None
+        decision = self._decide(self.window.mean_nnz())
+        self.window.clear()    # non-overlapping windows
+        return decision
+
+    # -- decision ----------------------------------------------------------
+    def _bucket_ctx(self):
+        for g in self.plan.groups:
+            for b in g.buckets:
+                yield g, b, self.plan.bucket_k(g, b)
+
+    def _pod_flags(self, densities: dict) -> dict:
+        """Cross-pod demotion decisions, WITH the hysteresis damper: the
+        byte comparison must win by the hysteresis margin to set a flag,
+        and an already-set flag is only cleared when the measured fill-in
+        actually crosses delta — a bucket hovering at the boundary keeps
+        its current wire path instead of flapping (each flip costs a full
+        dispatch-window drain)."""
+        from repro.core.cost_model import pod_wire_bytes
+
+        flags = {}
+        if self.p_pod <= 1 or not self.cfg.pod_sparse:
+            return flags
+        p_data = self.plan.dp_total // self.p_pod
+        for g, b, k in self._bucket_ctx():
+            if g.rows != 1 or not b.has_residual:
+                continue
+            cap = min(b.n, p_data * k)
+            sparse_bytes = pod_wire_bytes(self.p_pod, b.n, cap,
+                                          pod_sparse=True)
+            dense_bytes = pod_wire_bytes(self.p_pod, b.n, cap,
+                                         pod_sparse=False)
+            nnz = densities.get(b.name)
+            delta = delta_threshold(b.n, self.net.isize)
+            if b.pod_sparse:
+                # sticky: clear only on a real delta crossing
+                flags[b.name] = bool(nnz is None or nnz < delta)
+            else:
+                margin = 1.0 - self.cfg.hysteresis
+                flags[b.name] = bool(
+                    sparse_bytes <= margin * dense_bytes
+                    and nnz is not None and nnz < margin * delta)
+        return flags
+
+    def _decide(self, densities: dict):
+        cfg = self.plan.cfg
+        vb = cfg.qsgd_bits if cfg.qsgd_bits is not None else 32
+        p = self.plan.dp_total
+        candidate = self.plan.replan(densities, self.net,
+                                     pod_sparse=self._pod_flags(densities))
+        # Hysteresis: revert any per-bucket change whose modeled win at
+        # the measured density is under the threshold. Exception: when
+        # the measured fill-in crossed the delta threshold, the sparse
+        # end-representation can no longer win (Lemma 5.2) — the paper's
+        # delta switchover is a rule, not a perf heuristic, so it is
+        # never vetoed by hysteresis.
+        cur_algo = self.plan.algorithms()
+        keep: dict = {}
+        for g, b, k in ((g, b, candidate.bucket_k(g, b))
+                        for g in candidate.groups for b in g.buckets):
+            old = cur_algo[b.name]
+            if b.algorithm == old:
+                continue
+            nnz = densities.get(b.name)
+            delta_forced = (old.startswith("ssar") and nnz is not None
+                            and nnz >= delta_threshold(b.n, self.net.isize))
+            if delta_forced:
+                continue
+            t_old = bucket_time(old, p, k, b.n, self.net, vb,
+                                reduced_nnz=nnz)
+            t_new = bucket_time(b.algorithm, p, k, b.n, self.net, vb,
+                                reduced_nnz=nnz)
+            keep[b.name] = (b.algorithm
+                            if t_new <= (1.0 - self.cfg.hysteresis) * t_old
+                            else old)
+        if keep:
+            # revert ONLY the vetoed buckets; delta-forced and clear-win
+            # changes keep the candidate's choice (replan defaults every
+            # unnamed bucket to its current algorithm). One accepted swap
+            # = one version step, whatever the internal passes did.
+            import dataclasses
+
+            candidate = dataclasses.replace(
+                candidate.replan(algorithms=keep),
+                version=self.plan.version + 1)
+        if candidate.signature() == self.plan.signature():
+            self._pending_sig, self._pending_count = None, 0
+            return None
+        # Patience: the same proposal must win consecutive windows.
+        sig = candidate.signature()
+        if sig == self._pending_sig:
+            self._pending_count += 1
+        else:
+            self._pending_sig, self._pending_plan = sig, candidate
+            self._pending_count = 1
+        if self._pending_count < self.cfg.patience:
+            return None
+        accepted = self._pending_plan
+        self.plan = accepted
+        self._pending_sig, self._pending_count = None, 0
+        self.swaps += 1
+        return accepted
+
+
+class AdaptiveRuntime:
+    """What ``runtime.driver.run_pipelined(adapt=...)`` drives: consumes
+    retired metrics, and hands back a freshly compiled superstep (from a
+    plan-signature-keyed cache) whenever the controller accepts a replan.
+    Swaps happen only at drain barriers — the driver empties its dispatch
+    window first — so at most one compiled program is ever in flight."""
+
+    def __init__(self, model, tcfg, mesh, *, plan,
+                 net: NetworkParams = DEFAULT_NET,
+                 cfg: AdaptConfig = AdaptConfig(),
+                 staleness: int = 1, superstep: int = 1,
+                 unroll: bool = False,
+                 build_fn: Optional[Callable] = None):
+        from repro.train.train_step import dp_axes_of
+
+        self.model, self.tcfg, self.mesh = model, tcfg, mesh
+        self.staleness, self.superstep, self.unroll = (staleness, superstep,
+                                                       unroll)
+        dp_ax = dp_axes_of(mesh)
+        p_pod = mesh.shape[dp_ax[0]] if len(dp_ax) > 1 else 1
+        self.controller = AdaptiveController(plan, net, cfg, p_pod=p_pod)
+        self._build_fn = build_fn or self._default_build
+        self._cache: dict = {}
+        self._swap_to = None
+
+    # -- compiled-step cache ----------------------------------------------
+    def _default_build(self, plan):
+        from repro.runtime import pipeline as rt_pipeline
+
+        if self.superstep > 1:
+            fn, _, _ = rt_pipeline.build_superstep(
+                self.model, self.tcfg, self.mesh, staleness=self.staleness,
+                steps=self.superstep, unroll=self.unroll, plan=plan)
+        else:
+            fn, _, _ = rt_pipeline.build_pipelined_step(
+                self.model, self.tcfg, self.mesh, staleness=self.staleness,
+                plan=plan)
+        return fn
+
+    def step_fn_for(self, plan):
+        sig = plan.signature()
+        if sig not in self._cache:
+            self._cache[sig] = self._build_fn(plan)
+        return self._cache[sig]
+
+    @property
+    def current_plan(self):
+        return self.controller.plan
+
+    def current_fn(self):
+        return self.step_fn_for(self.current_plan)
+
+    # -- driver hooks ------------------------------------------------------
+    def observe(self, first_step: int, n_steps: int, metrics) -> None:
+        """Retire hook: pull per-bucket telemetry off a retired unit's
+        metrics (already host-synced by the driver) and feed the
+        controller, one row per step of the unit."""
+        telem = metrics.get("telemetry") if hasattr(metrics, "get") else None
+        if not telem:
+            return
+        arrs = {name: np.atleast_2d(np.asarray(v)) for name, v in
+                telem.items()}            # (k, 2) rows of [nnz, wire]
+        k = min(a.shape[0] for a in arrs.values())
+        for i in range(k):
+            row = {name: float(a[i, 0]) for name, a in arrs.items()}
+            accepted = self.controller.observe_step(row)
+            if accepted is not None:
+                self._swap_to = accepted
+
+    def maybe_swap(self):
+        """Returns (new_step_fn, new_plan) once after each accepted
+        replan, else None. The driver calls this between dispatches and
+        drains its window before installing the new function."""
+        if self._swap_to is None:
+            return None
+        plan, self._swap_to = self._swap_to, None
+        return self.step_fn_for(plan), plan

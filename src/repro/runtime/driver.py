@@ -57,6 +57,7 @@ class DriverLog:
     step_times: list = field(default_factory=list)
     straggler_events: list = field(default_factory=list)
     restarts: int = 0
+    plan_swaps: list = field(default_factory=list)  # (step, plan signature)
 
 
 def record_step(log, step: int, dt: float, loss: float,
@@ -146,6 +147,7 @@ def run_pipelined(
     ckpt_every: Optional[int] = None,
     ckpt_fn: Optional[Callable[[Any], None]] = None,
     restore_fn: Optional[Callable[[], Any]] = None,
+    adapt=None,
 ):
     """Drive ``step_fn`` from ``start_step`` to ``num_steps`` (absolute).
 
@@ -156,6 +158,12 @@ def run_pipelined(
     extra compile).
     batch_fn: step -> HOST batch dict (numpy); called from the prefetch
     thread, so it must be thread-compatible (the synthetic pipeline is).
+    adapt: an ``runtime.adapt.AdaptiveRuntime`` (duck-typed: ``observe``
+    + ``maybe_swap``). Retired units feed it telemetry; when it accepts a
+    replan the window is DRAINED (every in-flight unit retired) and the
+    compiled step function is swapped at that barrier — TrainState rides
+    across unchanged (replans are layout-invariant, DESIGN.md §7), and
+    the swap is recorded in ``log.plan_swaps``.
     Returns (final state, log).
     """
     if cfg.depth < 1 or cfg.prefetch < 1 or cfg.steps_per_unit < 1:
@@ -181,10 +189,32 @@ def run_pipelined(
             record_step(log, s0 + i, dt,
                         float(losses[i] if k > 1 else losses[0]),
                         straggler_factor)
+        if adapt is not None:
+            adapt.observe(s0, k, metrics)
 
     def drain():
         while window:
             retire_one()
+
+    def check_swap():
+        """Install a controller-accepted replan (DESIGN.md §7). Called
+        wherever retires may have fed the controller — after dispatches,
+        after checkpoint drains, and on the tail drain — so the active
+        plan recorded in checkpoint meta is always one that has actually
+        been installed (and logged), never a pending acceptance."""
+        nonlocal step_fn
+        if adapt is None:
+            return
+        swap = adapt.maybe_swap()
+        if swap is None:
+            return
+        # Plan-swap barrier: drain every in-flight unit, then install
+        # the re-planned compiled step. State needs no migration —
+        # replans are layout-invariant.
+        drain()
+        step_fn, new_plan = swap
+        if hasattr(log, "plan_swaps"):
+            log.plan_swaps.append((step, new_plan.signature()))
 
     def dispatch(state, step):
         k = min(k_unit, num_steps - step)
@@ -208,16 +238,21 @@ def run_pipelined(
             try:
                 if step >= num_steps:
                     retire_one()
+                    check_swap()  # keep meta/log consistent on the tail
                     continue
                 prev = step
                 state, step = dispatch(state, step)
                 while len(window) >= cfg.depth:  # at most `depth` in flight
                     retire_one()
+                check_swap()
                 if (ckpt_every and ckpt_fn is not None and step < num_steps
                         and step // ckpt_every > prev // ckpt_every):
                     # a unit crossed a checkpoint boundary — drain the
                     # window so the save reads a fully retired state
+                    # (the drain's retires may accept a replan: install
+                    # it before the save records the active plan)
                     drain()
+                    check_swap()
                     ckpt_fn(state)
             except Exception:
                 if restore_fn is None:

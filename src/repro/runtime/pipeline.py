@@ -73,11 +73,16 @@ def resolve_lowering(mesh: Mesh, lowering: Optional[str] = None) -> str:
 
 
 def pipelined_state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh, *,
-                           staleness: int = 1):
+                           staleness: int = 1, plan=None):
     """(abstract TrainState, spec TrainState, SyncPlan) for the pipelined
     step: the synchronous state plus — when staleness > 0 — the in-flight
     reduced-bucket buffers (``TrainState.inflight``, keyed like residuals
-    by bucket name)."""
+    by bucket name).
+
+    ``plan`` substitutes a REPLANNED SyncPlan (DESIGN.md §7) for the
+    freshly derived one. Replans are layout-invariant by construction
+    (``BucketSpec.ef`` pins the residual set), so the returned shapes are
+    identical for every version of one base plan — asserted here."""
     if tcfg.sync.mode != "sparcml":
         raise ValueError(
             "the pipelined runtime overlaps the planned sparse collectives "
@@ -85,7 +90,20 @@ def pipelined_state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh, *,
             "reduce to defer — XLA owns its collectives)")
     if staleness not in (0, 1):
         raise ValueError(f"staleness is bounded at 1, got {staleness}")
-    shapes, specs, plan = ts.state_shapes(model, tcfg, mesh, return_plan=True)
+    shapes, specs, built = ts.state_shapes(model, tcfg, mesh,
+                                           return_plan=True)
+    if plan is None:
+        plan = built
+    elif (plan.residual_shapes() != built.residual_shapes()
+          or plan.inflight_shapes() != built.inflight_shapes()):
+        # full name->shape dicts, not just key sets: a plan from another
+        # (dp, bucket-size) configuration can reuse the generic g<i>b<j>
+        # names and would otherwise die later inside jit with an opaque
+        # XLA shape error instead of this one
+        raise ValueError(
+            "plan override changes the residual/in-flight layout — replans "
+            "must come from SyncPlan.replan() of this configuration's base "
+            "plan")
     if staleness:
         shapes = shapes._replace(inflight={
             **plan.inflight_shapes(),
@@ -119,19 +137,26 @@ def attach_inflight(state: TrainState, plan, mesh: Mesh) -> TrainState:
 # --------------------------------------------------------------------------
 
 def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
-                   staleness: int, lowering: Optional[str]):
+                   staleness: int, lowering: Optional[str],
+                   plan=None, telemetry: bool = True):
     """Un-jitted pipelined step (state, batch, key) -> (state, metrics),
     plus (shapes, specs, plan). The body mirrors build_train_step's
     sparcml branches with the sync split at the staleness boundary —
     kept as a twin on purpose (folding them would put the runtime on the
     synchronous hot path); tests/test_runtime.py compares the two
     implementations output-for-output on every lowering, so any silent
-    divergence between the twins fails CI."""
+    divergence between the twins fails CI.
+
+    ``plan`` runs a replanned SyncPlan (adaptive runtime, DESIGN.md §7)
+    instead of the derived base plan. ``telemetry=False`` drops the
+    per-bucket stats from the metrics dict, letting XLA dead-code the
+    counts away (the overhead A/B in benchmarks/bench_adapt.py)."""
     cfg = model.cfg
     sched = make_schedule(tcfg.schedule)
     lowering = resolve_lowering(mesh, lowering)
     shapes, specs, plan = pipelined_state_shapes(model, tcfg, mesh,
-                                                 staleness=staleness)
+                                                 staleness=staleness,
+                                                 plan=plan)
     pspecs = specs.params
     dp_ax = ts.dp_axes_of(mesh)
     dp_total = ts.dp_total_of(mesh)
@@ -142,7 +167,7 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
     p_pod = mesh.shape[pod_axis] if pod_axis else 1
     grad_clip = tcfg.optimizer.grad_clip
 
-    def _finish(state, applied, loss, lr, new_res, new_inflight, *,
+    def _finish(state, applied, loss, lr, new_res, new_inflight, telem, *,
                 zero1_update):
         """Clip + optimizer update + state assembly (lowering-agnostic).
         zero1_update: callable(params, grads, opt, lr) for this lowering."""
@@ -158,7 +183,10 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                                         lr_eff, tcfg.optimizer)
         new_state = TrainState(new_p, new_opt, new_res, state.step + 1,
                                new_inflight)
-        return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr_eff}
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr_eff}
+        if telemetry:
+            metrics["telemetry"] = telem
+        return new_state, metrics
 
     if lowering == "spmd":
         # ----- auto-SPMD: replica axis is a real leading axis (§4.2) -----
@@ -186,20 +214,24 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                 for g, s in zip(leaves_r, leaves_spec)
             ]
             if staleness == 0:
-                applied_leaves, new_res = comm.execute_plan_spmd(
+                # execute_plan_spmd minus the telemetry drop: same ops,
+                # same order (the staleness=0 == synchronous invariant).
+                reduced, new_res, telem = comm.reduce_buckets_spmd(
                     plan, leaves_r, state.residuals, key,
                     p_data=p_data, p_pod=p_pod)
+                applied_leaves = comm.apply_buckets_spmd(
+                    plan, reduced, leaves_r)
                 new_inflight = None
             else:
                 applied_leaves = comm.apply_buckets_spmd(
                     plan, state.inflight, leaves_r)
-                new_inflight, new_res = comm.reduce_buckets_spmd(
+                new_inflight, new_res, telem = comm.reduce_buckets_spmd(
                     plan, leaves_r, state.residuals, key,
                     p_data=p_data, p_pod=p_pod)
                 new_inflight[VALID_KEY] = jnp.ones((), jnp.float32)
             applied = gtree.unflatten(applied_leaves)
             return _finish(
-                state, applied, loss, lr, new_res, new_inflight,
+                state, applied, loss, lr, new_res, new_inflight, telem,
                 zero1_update=lambda p, g, o, l: ts._zero1_update_spmd(
                     p, g, o, l, tcfg, pspecs, dp_total))
 
@@ -224,13 +256,15 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
             p_pod=p_pod, native=native, data_rank=data_rank,
             pod_rank=pod_rank)
         if staleness == 0:
-            applied_leaves, new_res = comm.execute_plan(
+            # execute_plan minus the telemetry drop (same ops, same order).
+            reduced, new_res, telem = comm.reduce_buckets(
                 plan, leaves_g, state.residuals, key, **coll_kwargs)
+            applied_leaves = comm.apply_buckets(plan, reduced, leaves_g)
             new_inflight = None
         else:
             applied_leaves = comm.apply_buckets(plan, state.inflight,
                                                 leaves_g)
-            new_inflight, new_res = comm.reduce_buckets(
+            new_inflight, new_res, telem = comm.reduce_buckets(
                 plan, leaves_g, state.residuals, key, **coll_kwargs)
             new_inflight[VALID_KEY] = jnp.ones((), jnp.float32)
         applied = gtree.unflatten(applied_leaves)
@@ -246,7 +280,7 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                                     dp_ax, dp_index, dp_total, gather_ctxs)
 
         return _finish(state, applied, loss, lr, new_res, new_inflight,
-                       zero1_update=zero1_update)
+                       telem, zero1_update=zero1_update)
 
     in_state_specs = ts.manual_only_tree(specs)
     in_batch_specs = ts.manual_only_tree(ts.batch_specs(cfg, mesh))
@@ -274,12 +308,15 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
 
 def build_pipelined_step(model: Model, tcfg: TrainConfig, mesh: Mesh, *,
                          staleness: int = 1, lowering: Optional[str] = None,
-                         donate: bool = True):
+                         donate: bool = True, plan=None,
+                         telemetry: bool = True):
     """Single pipelined step, jitted. Returns
     (step_fn(state, batch, key) -> (state, metrics), (shapes, specs), plan).
+    ``plan``/``telemetry``: see :func:`_make_raw_step`.
     """
     raw_step, shapes, specs, plan = _make_raw_step(model, tcfg, mesh,
-                                                   staleness, lowering)
+                                                   staleness, lowering,
+                                                   plan, telemetry)
     bspecs = ts.batch_specs(model.cfg, mesh)
     sh = lambda t: ts.shardings_tree(mesh, t)
     jitted = jax.jit(
@@ -294,7 +331,8 @@ def build_pipelined_step(model: Model, tcfg: TrainConfig, mesh: Mesh, *,
 def build_superstep(model: Model, tcfg: TrainConfig, mesh: Mesh, *,
                     staleness: int = 1, steps: int = 4,
                     lowering: Optional[str] = None, donate: bool = True,
-                    unroll: bool = False):
+                    unroll: bool = False, plan=None,
+                    telemetry: bool = True):
     """K-step superstep: one jitted K-step loop over the pipelined step.
     Returns (superstep_fn, (shapes, specs), plan) where
     ``superstep_fn(state, batches, keys) -> (state, metrics)`` takes
@@ -313,7 +351,8 @@ def build_superstep(model: Model, tcfg: TrainConfig, mesh: Mesh, *,
     if steps < 1:
         raise ValueError(f"superstep needs steps >= 1, got {steps}")
     raw_step, shapes, specs, plan = _make_raw_step(model, tcfg, mesh,
-                                                   staleness, lowering)
+                                                   staleness, lowering,
+                                                   plan, telemetry)
     bspecs = ts.batch_specs(model.cfg, mesh)
     stacked_bspecs = jax.tree.map(lambda s: P(None, *s), bspecs,
                                   is_leaf=lambda x: isinstance(x, P))

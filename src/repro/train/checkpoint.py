@@ -40,7 +40,12 @@ def _flatten_with_paths(tree):
 
 
 def save(directory: str, state: TrainState, *, dp_total: int,
-         keep_last: int = 3, async_save: bool = False) -> str:
+         keep_last: int = 3, async_save: bool = False,
+         extra_meta: Optional[dict] = None) -> str:
+    """``extra_meta`` is merged into meta.json (JSON-serializable only) —
+    the adaptive runtime stores the ACTIVE plan's signature and per-bucket
+    algorithm map there, so a restart resumes onto the adapted plan
+    (DESIGN.md §7) instead of re-warming from the static one."""
     step = int(state.step)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -57,6 +62,8 @@ def save(directory: str, state: TrainState, *, dp_total: int,
             "paths": paths,
             "none_leaves": [i for i, a in enumerate(host_leaves) if a is None],
         }
+        if extra_meta:
+            meta.update(extra_meta)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
             json.dump(meta, f)
         if os.path.exists(final):
@@ -79,6 +86,17 @@ def _gc(directory: str, keep_last: int):
     )
     for d in ckpts[:-keep_last]:
         shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def load_meta(directory: str, step: Optional[int] = None) -> dict:
+    """The meta.json of one checkpoint (latest by default) — including
+    any ``extra_meta`` the writer attached (e.g. the adaptive plan)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    with open(os.path.join(directory, f"step_{step:08d}", "meta.json")) as f:
+        return json.load(f)
 
 
 def latest_step(directory: str) -> Optional[int]:

@@ -40,6 +40,7 @@ class TrainerLog:
     step_times: list = field(default_factory=list)
     straggler_events: list = field(default_factory=list)
     restarts: int = 0
+    plan_swaps: list = field(default_factory=list)  # (step, plan signature)
 
 
 class Trainer:
@@ -57,6 +58,10 @@ class Trainer:
         self.step_fn, (self.shapes, self.specs) = build_train_step(model, tcfg, mesh)
         self.state: Optional[TrainState] = None
         self._root_key = jax.random.PRNGKey(tcfg.seed)
+        # the AdaptiveRuntime of the most recent run_pipelined(adapt=...)
+        # call (None otherwise) — exposes the active plan for
+        # inspection/tests; the checkpoint meta is the durable record
+        self.last_adapt_runtime = None
 
     # -- lifecycle ---------------------------------------------------------
     def init_or_resume(self):
@@ -122,30 +127,68 @@ class Trainer:
             ckpt.save(self.ckpt_dir, self.state, dp_total=dp_total_of(self.mesh))
         return self.log
 
-    # -- non-blocking runtime (DESIGN.md §6) -------------------------------
+    # -- non-blocking runtime (DESIGN.md §6/§7) ----------------------------
     def run_pipelined(self, num_steps: int, *, staleness: int = 1,
                       superstep: int = 4, depth: int = 2,
-                      prefetch: int = 2, unroll: bool = False) -> TrainerLog:
+                      prefetch: int = 2, unroll: bool = False,
+                      adapt=False) -> TrainerLog:
         """Train for num_steps (absolute) with the pipelined runtime:
         K-step scanned supersteps (stale-gradient overlap, ``staleness``
         in {0, 1}) dispatched ``depth`` deep by the async host driver,
         with background data prefetch. Logging and checkpoints sync only
         on retired steps; checkpoints store the synchronous state shape
         (in-flight buffers stripped), so sync and pipelined runs resume
-        from each other's checkpoints."""
+        from each other's checkpoints.
+
+        ``adapt`` (False | True | runtime.adapt.AdaptConfig) turns on
+        closed-loop re-planning (DESIGN.md §7): per-bucket measured
+        densities feed the calibrated cost model, and accepted replans
+        swap the compiled superstep at drain barriers. Checkpoints then
+        carry the active plan signature + algorithm map, so a restart
+        resumes the ADAPTED plan."""
         from repro.data.pipeline import synthetic_batch
         from repro.runtime import driver as rt_driver
         from repro.runtime import pipeline as rt_pipeline
 
         if self.state is None:
             self.init_or_resume()
-        if superstep > 1:
+
+        runtime = None
+        plan0 = None
+        if adapt:
+            from repro.runtime import adapt as rt_adapt
+            from repro.train import train_step as ts
+
+            if staleness < 1:
+                raise ValueError("adaptive re-planning rides the pipelined "
+                                 "runtime: needs staleness >= 1")
+            acfg = (adapt if isinstance(adapt, rt_adapt.AdaptConfig)
+                    else rt_adapt.AdaptConfig())
+            _, _, base_plan = ts.state_shapes(self.model, self.tcfg,
+                                              self.mesh, return_plan=True)
+            plan0 = base_plan
+            if self.ckpt_dir and ckpt.latest_step(self.ckpt_dir) is not None:
+                meta = ckpt.load_meta(self.ckpt_dir)
+                algos = meta.get("plan_algorithms")
+                if algos:
+                    plan0 = base_plan.replan(
+                        algorithms=algos,
+                        pod_sparse=meta.get("plan_pod_sparse"))
+            runtime = rt_adapt.AdaptiveRuntime(
+                self.model, self.tcfg, self.mesh, plan=plan0,
+                net=self._calibrated_net(acfg), cfg=acfg,
+                staleness=staleness, superstep=superstep, unroll=unroll)
+            self.last_adapt_runtime = runtime
+            fn, plan = runtime.current_fn(), runtime.current_plan
+        elif superstep > 1:
+            # no controller to consume stats: compile the telemetry out
             fn, _, plan = rt_pipeline.build_superstep(
                 self.model, self.tcfg, self.mesh, staleness=staleness,
-                steps=superstep, unroll=unroll)
+                steps=superstep, unroll=unroll, telemetry=False)
         else:
             fn, _, plan = rt_pipeline.build_pipelined_step(
-                self.model, self.tcfg, self.mesh, staleness=staleness)
+                self.model, self.tcfg, self.mesh, staleness=staleness,
+                telemetry=False)
         state = self.state
         if staleness:
             state = rt_pipeline.attach_inflight(state, plan, self.mesh)
@@ -155,8 +198,15 @@ class Trainer:
         dp_total = dp_total_of(self.mesh)
 
         def ckpt_fn(s):
+            extra = None
+            if runtime is not None:
+                active = runtime.current_plan
+                extra = {"plan_signature": active.signature(),
+                         "plan_version": active.version,
+                         "plan_algorithms": active.algorithms(),
+                         "plan_pod_sparse": active.pod_sparse_flags()}
             ckpt.save(self.ckpt_dir, s._replace(inflight=None),
-                      dp_total=dp_total)
+                      dp_total=dp_total, extra_meta=extra)
 
         def restore_fn():
             restored = ckpt.restore(
@@ -180,12 +230,25 @@ class Trainer:
                 ckpt_every=self.ckpt_every if self.ckpt_dir else None,
                 ckpt_fn=ckpt_fn if self.ckpt_dir else None,
                 restore_fn=restore_fn if self.ckpt_dir else None,
+                adapt=runtime,
             )
         self.state = state
         if self.ckpt_dir:
-            ckpt.save(self.ckpt_dir, self.state._replace(inflight=None),
-                      dp_total=dp_total)
+            ckpt_fn(self.state)
         return self.log
+
+    def _calibrated_net(self, acfg):
+        """One-shot alpha-beta calibration, cached per Trainer (the fit is
+        cheap but not free; the network does not change mid-process)."""
+        from repro.core.cost_model import DEFAULT_NET
+
+        if not acfg.calibrate:
+            return DEFAULT_NET
+        if getattr(self, "_net_cal", None) is None:
+            from repro.utils.calibrate import calibrate
+
+            self._net_cal = calibrate(self.mesh)
+        return self._net_cal
 
     def _abstract_like(self):
         if self.state is not None:

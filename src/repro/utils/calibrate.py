@@ -1,0 +1,124 @@
+"""One-shot alpha-beta network calibration (DESIGN.md §7).
+
+The cost model ships TPU-v5e constants (`core.cost_model.DEFAULT_NET`),
+but the paper's point (§5.3) is that algorithm selection should use the
+*machine's* alpha and beta, fitted from ping-pong/allreduce timings. This
+module measures dense allreduce wall times over the mesh's data axis at
+a ladder of message sizes and least-squares fits
+
+    T(L) = alpha' + L * beta'   =>   NetworkParams(alpha, link_bytes_per_s)
+
+where the Rabenseifner accounting (2 log2(P) alpha + 2 (P-1)/P N beta_d)
+is inverted so the fitted per-hop alpha / per-byte beta plug straight
+into the existing ``t_*`` formulas. Measurements are best-of-R jitted
+calls (compile excluded), so the fit is one-shot cheap (~a second on the
+emulated-CPU host) and cached by the callers that run it per process.
+
+On hosts whose timings are too noisy to fit (negative slope, zero
+bandwidth), the fit falls back to DEFAULT_NET rather than returning a
+degenerate model — calibration must never make selection worse than the
+shipped constants.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.cost_model import DEFAULT_NET, NetworkParams
+
+DEFAULT_SIZES = (1 << 12, 1 << 14, 1 << 16, 1 << 18, 1 << 20)
+
+
+def fit_network_params(sizes_bytes: Sequence[float],
+                       times_s: Sequence[float],
+                       p: int = 2,
+                       isize: int = 4) -> NetworkParams:
+    """Least-squares fit of measured dense-allreduce times to the
+    Rabenseifner alpha-beta form; returns calibrated ``NetworkParams``.
+
+    sizes_bytes: payload sizes N*isize of each measurement;
+    times_s: matching wall times;
+    p: world size the measurements ran at (fixes the latency/bandwidth
+    prefactors so alpha/beta come out per-hop / per-byte).
+    """
+    import math
+
+    sizes = np.asarray(sizes_bytes, dtype=np.float64)
+    times = np.asarray(times_s, dtype=np.float64)
+    if sizes.size < 2:
+        return DEFAULT_NET
+    # T = 2 log2(P) * alpha + 2 (P-1)/P * bytes * beta_byte
+    lat_pref = 2.0 * math.log2(max(2, p))
+    bw_pref = 2.0 * (p - 1) / p
+    a = np.stack([np.full_like(sizes, lat_pref), bw_pref * sizes], axis=1)
+    coef, *_ = np.linalg.lstsq(a, times, rcond=None)
+    alpha, beta_byte = float(coef[0]), float(coef[1])
+    if beta_byte <= 0.0 or not np.isfinite(beta_byte):
+        return DEFAULT_NET        # too noisy to trust (see module docstring)
+    alpha = max(alpha, 1e-9)      # intercepts can fit slightly negative
+    return NetworkParams(alpha=alpha, link_bytes_per_s=1.0 / beta_byte,
+                         isize=isize)
+
+
+def measure_allreduce_times(mesh, axis: str = "data",
+                            sizes: Sequence[int] = DEFAULT_SIZES,
+                            repeats: int = 5) -> list[tuple[int, float]]:
+    """Best-of-``repeats`` wall time of a jitted dense psum-allreduce over
+    ``axis`` at each element count in ``sizes``. Returns
+    [(payload_bytes, seconds), ...] ready for :func:`fit_network_params`.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro import compat
+
+    p = mesh.shape[axis]
+
+    out = []
+    with mesh:
+        for n in sizes:
+            n = max(int(n), p)
+            n -= n % p
+
+            def allreduce(x):
+                # REPLICATED operand: every rank contributes a full
+                # n-vector, so the timed psum is an allreduce of N
+                # elements — the same N that t_dense_allreduce's
+                # Rabenseifner accounting (and the recorded payload
+                # n*isize below) refers to. A P(axis)-sharded operand
+                # would reduce only n/p elements per rank and overstate
+                # the fitted bandwidth by a factor of p.
+                f = compat.shard_map(
+                    lambda s: jax.lax.psum(s, axis), mesh=mesh,
+                    in_specs=P(), out_specs=P(),
+                    check_vma=False, axis_names={axis})
+                return f(x)
+
+            x = jax.device_put(
+                jnp.ones((n,), jnp.float32),
+                NamedSharding(mesh, P()))
+            fn = jax.jit(allreduce)
+            jax.block_until_ready(fn(x))          # compile outside timing
+            best = float("inf")
+            for _ in range(max(1, repeats)):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(x))
+                best = min(best, time.perf_counter() - t0)
+            out.append((n * 4, best))
+    return out
+
+
+def calibrate(mesh, axis: Optional[str] = None,
+              sizes: Sequence[int] = DEFAULT_SIZES,
+              repeats: int = 5, isize: int = 4) -> NetworkParams:
+    """One-shot calibration: measure + fit. ``axis`` defaults to the
+    innermost data-parallel axis present on the mesh."""
+    if axis is None:
+        axis = next((a for a in ("data", "pod") if a in mesh.axis_names),
+                    mesh.axis_names[0])
+    meas = measure_allreduce_times(mesh, axis, sizes, repeats)
+    return fit_network_params([b for b, _ in meas], [t for _, t in meas],
+                              p=mesh.shape[axis], isize=isize)

@@ -1,0 +1,427 @@
+"""Adaptive re-planning (DESIGN.md §7): telemetry correctness, replan
+layout-invariance, controller hysteresis/patience/delta rules, the
+driver's swap-at-drain-barrier protocol, pod-sparse exchange parity,
+checkpoint plan-signature round-trip, and the calibrator fit."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import comm
+from repro.compat import make_mesh, shard_map
+from repro.core import cost_model as cm
+from repro.core.compressor import SyncConfig
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.optim.optimizers import OptimizerConfig
+from repro.optim.schedule import ScheduleConfig
+from repro.runtime import adapt as rt_adapt
+from repro.runtime import driver as rt_driver
+from repro.runtime import pipeline as rt_pipeline
+from repro.train.state import TrainConfig
+
+from test_comm_plan import _count_prims
+
+MODEL_CFG = ModelConfig(name="ad", family="dense", num_layers=2, d_model=64,
+                        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                        dtype=jnp.float32, param_dtype=jnp.float32,
+                        max_seq_len=64)
+SYNC = SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=128,
+                  algorithm="dsar_split_allgather", min_sparse_size=1024,
+                  impl="ref", fusion_bucket_bytes=1 << 18)
+TCFG = TrainConfig(sync=SYNC, optimizer=OptimizerConfig(),
+                   schedule=ScheduleConfig(peak_lr=3e-3, warmup_steps=5,
+                                           total_steps=100),
+                   zero1=True)
+DCFG = DataConfig(global_batch=8, seq_len=32, vocab_size=256)
+KEY = jax.random.PRNGKey(0)
+NO_CAL = rt_adapt.AdaptConfig(calibrate=False)
+
+
+def _toy_plan(dp=8, algorithm="dsar_split_allgather", n=3000):
+    cfg = SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=128,
+                     algorithm=algorithm, min_sparse_size=1024, impl="ref",
+                     fusion_bucket_bytes=1 << 14)
+    shapes = {"a": jax.ShapeDtypeStruct((n,), jnp.float32),
+              "b": jax.ShapeDtypeStruct((77,), jnp.float32)}
+    specs = {"a": P(), "b": P()}
+    return cfg, comm.build_sync_plan(shapes, specs, cfg, dp)
+
+
+# --------------------------------------------------------------------------
+# replan: versioning, signatures, layout invariance
+# --------------------------------------------------------------------------
+
+def test_replan_layout_invariant_and_versioned():
+    _, plan = _toy_plan()
+    assert plan.version == 0
+    sparse_names = [b.name for b in plan.buckets if b.sparse]
+    assert sparse_names
+    # demote every sparse bucket's wire representation to dense
+    demoted = plan.replan(algorithms={n: "dense" for n in sparse_names})
+    assert demoted.version == 1
+    assert demoted.signature() != plan.signature()
+    # ...but the residual layout (and thus TrainState) is untouched
+    assert set(demoted.residual_shapes()) == set(plan.residual_shapes())
+    assert demoted.num_sparse_buckets == 0
+    for b in demoted.buckets:
+        if b.name in sparse_names:
+            assert b.has_residual and not b.sparse
+    # inflight layout is bucket-universal and identical too
+    assert set(demoted.inflight_shapes()) == set(plan.inflight_shapes())
+    # a second replan can promote them back
+    back = demoted.replan(algorithms={n: "ssar_recursive_double"
+                                      for n in sparse_names})
+    assert back.version == 2
+    assert [b.algorithm for b in back.buckets if b.name in sparse_names] == \
+        ["ssar_recursive_double"] * len(sparse_names)
+
+
+def test_replan_raw_dense_buckets_never_promote():
+    # min_sparse_size above the tail bucket's n -> a genuine raw-dense
+    # bucket with no EF state
+    cfg = SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=128,
+                     algorithm="dsar_split_allgather", min_sparse_size=2048,
+                     impl="ref", fusion_bucket_bytes=1 << 14)
+    shapes = {"a": jax.ShapeDtypeStruct((4096,), jnp.float32),
+              "b": jax.ShapeDtypeStruct((512,), jnp.float32)}
+    plan = comm.build_sync_plan(shapes, {"a": P(), "b": P()}, cfg, 8)
+    raw = [b.name for b in plan.buckets if not b.has_residual]
+    assert raw, plan.describe()
+    promoted = plan.replan(algorithms={n: "ssar_recursive_double"
+                                       for n in raw})
+    for b in promoted.buckets:
+        if b.name in raw:
+            assert b.algorithm == "dense" and not b.has_residual
+
+
+def test_replan_measured_density_follows_delta():
+    """Measured fill-in over delta forces the dense end-representation;
+    far under delta the sparse representations come back."""
+    from repro.core.sparse_stream import delta_threshold
+
+    _, plan = _toy_plan(algorithm="ssar_split_allgather")
+    b = next(b for b in plan.buckets if b.sparse)
+    dense_plan = plan.replan({b.name: float(delta_threshold(b.n))})
+    assert dict(dense_plan.algorithms())[b.name] in (
+        "dsar_split_allgather", "dense")
+    sparse_plan = plan.replan({b.name: 8.0})
+    assert dict(sparse_plan.algorithms())[b.name].startswith("ssar")
+
+
+# --------------------------------------------------------------------------
+# telemetry: in-graph nnz is the true post-reduction count
+# --------------------------------------------------------------------------
+
+def test_spmd_telemetry_counts_true_union():
+    cfg, plan = _toy_plan(n=4096)
+    sparse_b = [b for b in plan.buckets if b.sparse]
+    assert sparse_b
+    rng = np.random.default_rng(0)
+    # disjoint hot slots per rank -> union is exactly 8 * k_per_bucket
+    # per TopK bucket of the covered range
+    grads = []
+    for name, n in (("a", 4096), ("b", 77)):
+        g = rng.standard_normal((8, n)).astype(np.float32) * 0.01
+        grads.append(g)
+    a = grads[0]
+    starts = np.arange(4096 // cfg.bucket_size)[:, None] * cfg.bucket_size
+    for r in range(8):
+        cols = (starts + r * cfg.k_per_bucket
+                + np.arange(cfg.k_per_bucket)[None, :]).reshape(-1)
+        a[r, cols] += 10.0
+    leaves = [jnp.asarray(g) for g in grads]
+    res = plan.init_residuals()
+    _, _, telem = comm.reduce_buckets_spmd(plan, leaves, res, KEY, p_data=8)
+    # telemetry covers exactly the EF (re-plannable) buckets
+    assert set(telem) == {b.name for b in plan.buckets if b.has_residual}
+    # every bucket reports [nnz, wire]; check the covered 'a' range
+    total_sparse_nnz = sum(float(np.asarray(telem[b.name])[0])
+                           for b in sparse_b)
+    expect = 4096 // cfg.bucket_size * cfg.k_per_bucket * 8
+    # padding tail of 'b' rides the same group; allow its contribution
+    assert expect <= total_sparse_nnz <= expect + 77
+    for b in plan.buckets:
+        assert float(np.asarray(telem[b.name])[1]) > 0  # wire bytes
+
+
+# --------------------------------------------------------------------------
+# controller: hysteresis, patience, flap damping
+# --------------------------------------------------------------------------
+
+def _controller(plan, **kw):
+    defaults = dict(window=2, hysteresis=0.2, patience=2, calibrate=False)
+    defaults.update(kw)
+    return rt_adapt.AdaptiveController(plan, cm.DEFAULT_NET,
+                                       rt_adapt.AdaptConfig(**defaults))
+
+
+def test_controller_patience_and_swap():
+    _, plan = _toy_plan(n=1 << 15)
+    ctrl = _controller(plan)
+    b = next(b for b in plan.buckets if b.sparse)
+    low = {b.name: 16.0}     # tiny measured fill: latency-bound -> SSAR rd
+    # window=2, patience=2: three windows before the plan may swap
+    assert ctrl.observe_step(low) is None
+    assert ctrl.observe_step(low) is None      # window 1 full: pending
+    assert ctrl.observe_step(low) is None
+    accepted = ctrl.observe_step(low)          # window 2 agrees: accept
+    assert accepted is not None and ctrl.swaps == 1
+    assert dict(accepted.algorithms())[b.name] == "ssar_recursive_double"
+    assert accepted.version == 1   # one accepted swap = one version step
+    # steady telemetry at the new optimum: no further swaps
+    for _ in range(6):
+        assert ctrl.observe_step(low) is None
+    assert ctrl.swaps == 1
+
+
+def test_controller_hysteresis_blocks_marginal_wins():
+    """A proposed switch whose modeled win is under the hysteresis
+    threshold is vetoed (no flapping on near-ties)."""
+    _, plan = _toy_plan(n=1 << 15)
+    ctrl = _controller(plan, hysteresis=0.99, patience=1)
+    b = next(b for b in plan.buckets if b.sparse)
+    low = {b.name: 16.0}
+    for _ in range(8):
+        assert ctrl.observe_step(low) is None  # 99% win required: vetoed
+    assert ctrl.swaps == 0
+
+
+def test_controller_delta_forced_switch_bypasses_hysteresis():
+    from repro.core.sparse_stream import delta_threshold
+
+    _, plan = _toy_plan(n=1 << 15, algorithm="ssar_split_allgather")
+    ctrl = _controller(plan, hysteresis=0.99, patience=1)
+    b = next(b for b in plan.buckets if b.sparse)
+    over = {b.name: float(delta_threshold(b.n) + 1)}
+    accepted = None
+    for _ in range(4):
+        accepted = ctrl.observe_step(over) or accepted
+    assert accepted is not None, "delta switchover must not be vetoed"
+    assert not dict(accepted.algorithms())[b.name].startswith("ssar")
+
+
+# --------------------------------------------------------------------------
+# driver swap protocol + collective counts after a swap
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh8x1():
+    return make_mesh((8, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_model(MODEL_CFG)
+
+
+def test_driver_swaps_plan_at_drain_barrier(mesh8x1, model):
+    """A forced replan mid-run: the driver drains, swaps the compiled
+    superstep, training continues, numerics stay valid (loss finite,
+    step count exact) and the swap is logged."""
+    from repro.train import train_step as ts
+    from repro.train.train_step import init_state
+
+    with mesh8x1:
+        _, _, base_plan = ts.state_shapes(model, TCFG, mesh8x1,
+                                          return_plan=True)
+        runtime = rt_adapt.AdaptiveRuntime(
+            model, TCFG, mesh8x1, plan=base_plan, cfg=NO_CAL,
+            staleness=1, superstep=2)
+        sparse_names = [b.name for b in base_plan.buckets if b.sparse]
+        new_plan = base_plan.replan(
+            algorithms={n: "ssar_recursive_double" for n in sparse_names})
+        runtime._swap_to = new_plan          # force: swap on next check
+        state, _ = init_state(model, TCFG, mesh8x1)
+        state = rt_pipeline.attach_inflight(state, base_plan, mesh8x1)
+        state, log = rt_driver.run_pipelined(
+            runtime.current_fn(), state, start_step=0, num_steps=8,
+            batch_fn=lambda s: synthetic_batch(DCFG, s),
+            key_fn=lambda s: jax.random.fold_in(KEY, s),
+            cfg=rt_driver.DriverConfig(depth=2, prefetch=2,
+                                       steps_per_unit=2),
+            adapt=runtime)
+    assert len(log.plan_swaps) == 1
+    assert log.plan_swaps[0][1] == new_plan.signature()
+    assert int(state.step) == 8 and len(log.losses) == 8
+    assert all(np.isfinite(log.losses))
+    # the swapped-in fn came from the signature-keyed cache
+    assert new_plan.signature() in runtime._cache
+
+
+def test_collective_count_stays_bucket_bounded_after_swap(mesh8x1, model):
+    """Per-step collective count stays O(num_buckets) under a replanned
+    mixed-algorithm plan (the acceptance bound: <= buckets * (2 log2 P
+    + 4) data-axis collectives; DSAR buckets keep exactly one a2a)."""
+    from repro.train import train_step as ts
+
+    with mesh8x1:
+        _, _, base_plan = ts.state_shapes(model, TCFG, mesh8x1,
+                                          return_plan=True)
+        # flat sparse buckets swap to recursive doubling, batched (rows>1)
+        # buckets stay DSAR — a genuinely mixed post-swap plan
+        algos = {b.name: ("ssar_recursive_double" if g.rows == 1
+                          else "dsar_split_allgather")
+                 for g in base_plan.groups for b in g.buckets if b.sparse}
+        assert len(algos) >= 2
+        assert any(a == "ssar_recursive_double" for a in algos.values())
+        swapped = base_plan.replan(algorithms=algos)
+        assert "ssar_recursive_double" in swapped.algorithms().values()
+        fn, (shapes, _), plan = rt_pipeline.build_pipelined_step(
+            model, TCFG, mesh8x1, staleness=1, lowering="manual",
+            plan=swapped)
+        b = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+        key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        jaxpr = jax.make_jaxpr(fn)(shapes, b, key).jaxpr
+    # count from the RESOLVED plan: replan forces batched (rows>1)
+    # buckets back to DSAR whatever the override asked for
+    n_dsar = sum(1 for bk in plan.buckets
+                 if bk.algorithm == "dsar_split_allgather")
+    assert _count_prims(jaxpr, {"all_to_all"}) == n_dsar
+    total = _count_prims(jaxpr, {"all_to_all", "all_gather", "ppermute"})
+    p = 8
+    assert total <= plan.num_buckets * (2 * math.log2(p) + 4)
+    n_leaves = len(jax.tree.leaves(shapes.params))
+    assert plan.num_buckets < n_leaves
+
+
+def test_adaptive_trainer_converges_like_static(tmp_path, mesh8x1, model):
+    """Acceptance: the adaptive run's losses match the static pipelined
+    run (allclose-or-better final loss). Without QSGD every wire
+    representation reduces to the same values, so even a mid-run swap
+    cannot perturb the trajectory."""
+    from repro.train.trainer import Trainer
+
+    n = 12
+    tr_s = Trainer(model, TCFG, mesh8x1, DCFG)
+    log_s = tr_s.run_pipelined(n, staleness=1, superstep=2)
+    tr_a = Trainer(model, TCFG, mesh8x1, DCFG)
+    log_a = tr_a.run_pipelined(
+        n, staleness=1, superstep=2,
+        adapt=rt_adapt.AdaptConfig(window=3, patience=1, calibrate=False))
+    assert len(log_a.losses) == n == len(log_s.losses)
+    assert (np.allclose(log_a.losses, log_s.losses, rtol=2e-4, atol=1e-5)
+            or log_a.losses[-1] <= log_s.losses[-1] + 1e-5)
+
+
+# --------------------------------------------------------------------------
+# checkpoint: plan signature round-trip; resume onto the adapted plan
+# --------------------------------------------------------------------------
+
+def test_checkpoint_resumes_adapted_plan(tmp_path, mesh8x1, model):
+    from repro.train import checkpoint as ckpt
+    from repro.train import train_step as ts
+    from repro.train.trainer import Trainer
+
+    ckpt_dir = str(tmp_path / "ck")
+    tr = Trainer(model, TCFG, mesh8x1, DCFG, ckpt_dir=ckpt_dir,
+                 ckpt_every=4)
+    tr.run_pipelined(4, staleness=1, superstep=2, adapt=NO_CAL)
+    with mesh8x1:
+        _, _, base_plan = ts.state_shapes(model, TCFG, mesh8x1,
+                                          return_plan=True)
+    sparse_names = [b.name for b in base_plan.buckets if b.sparse]
+    adapted = base_plan.replan(
+        algorithms={n: "ssar_recursive_double" for n in sparse_names})
+    # simulate a mid-adaptation checkpoint: same arrays, adapted meta
+    ckpt.save(ckpt_dir, tr.state._replace(inflight=None), dp_total=8,
+              extra_meta={"plan_signature": adapted.signature(),
+                          "plan_version": adapted.version,
+                          "plan_algorithms": adapted.algorithms(),
+                          "plan_pod_sparse": adapted.pod_sparse_flags()})
+    meta = ckpt.load_meta(ckpt_dir)
+    assert meta["plan_signature"] == adapted.signature()
+
+    tr2 = Trainer(model, TCFG, mesh8x1, DCFG, ckpt_dir=ckpt_dir,
+                  ckpt_every=4)
+    log2 = tr2.run_pipelined(
+        8, staleness=1, superstep=2,
+        adapt=rt_adapt.AdaptConfig(window=64, calibrate=False))
+    # the run RESUMED on the adapted plan (no swap needed: window=64
+    # guarantees the controller stayed silent)
+    assert tr2.last_adapt_runtime is not None
+    assert (tr2.last_adapt_runtime.current_plan.signature()
+            == adapted.signature())
+    assert log2.plan_swaps == []
+    assert int(tr2.state.step) == 8
+    # and the follow-up checkpoint still carries the adapted signature
+    assert ckpt.load_meta(ckpt_dir)["plan_signature"] == adapted.signature()
+
+
+# --------------------------------------------------------------------------
+# pod_sparse exchange: exactness under a real pod axis
+# --------------------------------------------------------------------------
+
+def test_pod_sparse_exchange_matches_dense_psum():
+    mesh = make_mesh((2, 4), ("pod", "data"))
+    cfg, plan = _toy_plan(dp=8, n=4096)
+    sparse_names = [b.name for b in plan.buckets if b.sparse]
+    ps_plan = plan.replan(algorithms=plan.algorithms(),
+                          pod_sparse={n: True for n in sparse_names})
+    assert any(b.pod_sparse for b in ps_plan.buckets)
+    rng = np.random.default_rng(3)
+    grads_r = {"a": jnp.asarray(rng.standard_normal((8, 4096)).astype(np.float32)),
+               "b": jnp.asarray(rng.standard_normal((8, 77)).astype(np.float32))}
+    res = plan.init_residuals()
+    rspecs = {k: P(("pod", "data"), None, None) for k in res}
+
+    def run(p):
+        def inner(gr, r):
+            g = jax.tree.map(lambda x: x[0], gr)
+            leaves, tree = jax.tree.flatten(g)
+            out, _ = comm.execute_plan(
+                plan=p, leaves=leaves, residuals=r, key=KEY,
+                data_axis="data", p_data=4, pod_axis="pod", p_pod=2)
+            return tree.unflatten(out)
+
+        f = shard_map(inner, mesh=mesh,
+                      in_specs=({k: P(("pod", "data"), None)
+                                 for k in grads_r}, rspecs),
+                      out_specs={k: P() for k in grads_r},
+                      check_vma=False)
+        return f(grads_r, res)
+
+    base_out = run(plan)
+    ps_out = run(ps_plan)
+    for k in grads_r:
+        np.testing.assert_allclose(np.asarray(base_out[k]),
+                                   np.asarray(ps_out[k]),
+                                   rtol=1e-6, atol=1e-7)
+
+
+# --------------------------------------------------------------------------
+# calibrator
+# --------------------------------------------------------------------------
+
+def test_calibrator_fit_recovers_known_params():
+    from repro.utils.calibrate import fit_network_params
+
+    true = cm.NetworkParams(alpha=2e-6, link_bytes_per_s=10e9)
+    p = 8
+    sizes = [1 << 12, 1 << 15, 1 << 18, 1 << 20]
+    times = [2 * math.log2(p) * true.alpha
+             + 2 * (p - 1) / p * s / true.link_bytes_per_s for s in sizes]
+    fit = fit_network_params(sizes, times, p=p)
+    np.testing.assert_allclose(fit.alpha, true.alpha, rtol=1e-6)
+    np.testing.assert_allclose(fit.link_bytes_per_s,
+                               true.link_bytes_per_s, rtol=1e-6)
+
+
+def test_calibrator_rejects_degenerate_fit():
+    from repro.utils.calibrate import fit_network_params
+
+    # decreasing times with size: negative bandwidth -> fall back
+    fit = fit_network_params([1e3, 1e6], [1e-3, 1e-6], p=8)
+    assert fit is cm.DEFAULT_NET
+
+
+def test_calibrate_measures_on_mesh(mesh8x1):
+    from repro.utils.calibrate import calibrate
+
+    net = calibrate(mesh8x1, sizes=(1 << 10, 1 << 14), repeats=1)
+    assert net.alpha > 0 and net.link_bytes_per_s > 0

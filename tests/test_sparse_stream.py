@@ -76,3 +76,85 @@ def test_from_dense_topk():
     x = jnp.asarray(np.array([0.1, -5.0, 0.0, 3.0, -0.2], np.float32))
     s = ss.from_dense_topk(x, 2)
     assert set(np.asarray(s.idx).tolist()) == {1, 3}
+
+
+# -- capacity-overflow behavior (merge / concat) -----------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.sampled_from([256, 1024]), k1=st.integers(8, 64),
+       k2=st.integers(8, 64), cap=st.integers(1, 48),
+       seed=st.integers(0, 2**16))
+def test_merge_overflow_keeps_smallest_indices(n, k1, k2, cap, seed):
+    """cap_out below the union size: merge keeps the cap_out SMALLEST
+    indices (streams are index-sorted), sums them exactly, saturates nnz
+    at the capacity, and pads the rest with SENTINEL."""
+    k1, k2 = min(k1, n // 4), min(k2, n // 4)
+    s1, i1, v1 = _random_stream(seed, n, k1)
+    s2, i2, v2 = _random_stream(seed + 1, n, k2)
+    union = np.union1d(i1, i2)
+    m = ss.merge(s1, s2, cap_out=cap)
+    keep = min(cap, len(union))
+    assert int(m.nnz) == keep
+    mi, mv = np.asarray(m.idx), np.asarray(m.val)
+    np.testing.assert_array_equal(mi[:keep], union[:keep])
+    assert np.all(mi[keep:] == ss.SENTINEL)
+    dense = np.zeros(n, np.float32)
+    np.add.at(dense, i1, v1)
+    np.add.at(dense, i2, v2)
+    np.testing.assert_allclose(mv[:keep], dense[union[:keep]],
+                               rtol=1e-6, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_parts=st.integers(2, 4), k=st.integers(4, 16),
+       cap=st.integers(1, 40), seed=st.integers(0, 2**16))
+def test_concat_overflow_clamps_nnz(n_parts, k, cap, seed):
+    """concat with disjoint ranges: under capacity pressure the smallest
+    indices survive and nnz saturates at cap_out (it must never report
+    more items than the stream can hold)."""
+    rng = np.random.default_rng(seed)
+    streams, all_idx = [], []
+    for part in range(n_parts):
+        base = part * 1000
+        idx = base + np.sort(rng.choice(1000, size=k, replace=False))
+        val = rng.standard_normal(k).astype(np.float32)
+        streams.append(ss.SparseStream(
+            jnp.asarray(idx.astype(np.int32)), jnp.asarray(val),
+            jnp.asarray(k, jnp.int32)))
+        all_idx.append(idx)
+    total = n_parts * k
+    out = ss.concat(streams, cap_out=cap)
+    # shrinks to cap; a cap above the concat length is a no-op slice
+    # (callers grow capacity explicitly via pad_to)
+    assert out.capacity == min(cap, total)
+    assert int(out.nnz) == min(total, cap)      # clamped, never overstated
+    expect = np.concatenate(all_idx)
+    np.testing.assert_array_equal(np.asarray(out.idx)[:min(total, cap)],
+                                  np.sort(expect)[:cap][:min(total, cap)])
+    # no-cap concat keeps everything and the true count
+    full = ss.concat(streams)
+    assert int(full.nnz) == total
+
+
+# -- delta threshold <-> cost-model switchover consistency -------------------
+
+@settings(max_examples=40, deadline=None)
+@given(n=st.sampled_from([1 << 12, 1 << 16, 1 << 20]),
+       p=st.sampled_from([2, 8, 64]),
+       frac=st.integers(1, 100))
+def test_delta_threshold_is_the_cost_model_switchover(n, p, frac):
+    """The cost model's sparse->dense switchover happens EXACTLY at
+    delta = N*isize/(c+isize) (paper §5.1 / §5.3.3) when the measured
+    fill-in is supplied: any reduced_nnz under delta keeps the sparse
+    end-representation available, any at/over delta removes it."""
+    from repro.core.cost_model import select_algorithm
+
+    delta = ss.delta_threshold(n, isize=4)
+    nnz = max(1, delta * frac // 50)            # sweeps both sides of delta
+    choice = select_algorithm(
+        p, k=max(1, n // 100), n=n, reduced_nnz=float(nnz),
+        allow=("ssar_split_allgather", "dense"))
+    if nnz >= delta:
+        assert choice == "dense"
+    else:
+        assert choice == "ssar_split_allgather"
