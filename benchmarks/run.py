@@ -31,6 +31,7 @@ MODULES = {
     "kernels": "benchmarks.bench_kernels",          # kernel microbench
     "overlap": "benchmarks.bench_overlap",          # §4/§7 non-blocking
     "adapt": "benchmarks.bench_adapt",              # DESIGN.md §7 re-planning
+    "bench_serve": "benchmarks.bench_serve",        # DESIGN.md §8 serving
 }
 
 

@@ -1,12 +1,20 @@
-"""Batched serving demo: prefill a batch of prompts, decode greedily with
-the sharded KV cache (TP over heads, DP over request slots).
+"""Serving demo: static batched decode (the PR-0 reference engine) or —
+with ``--continuous`` — the continuous-batching scheduler driving the
+slot decode engine with plan-driven sparse MoE dispatch (DESIGN.md §8).
 
-    PYTHONPATH=src python examples/serve_decode.py
+    PYTHONPATH=src python examples/serve_decode.py                # static
+    PYTHONPATH=src python examples/serve_decode.py --continuous   # scheduler
+    PYTHONPATH=src python examples/serve_decode.py --fast --continuous
+
+``--continuous`` runs a Poisson arrival trace of ragged-prompt requests
+through the adaptive engine and prints throughput, wire bytes, and the
+sparse<->dense dispatch swaps the telemetry drove.
 """
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
+import argparse
 import time
 
 import jax
@@ -15,32 +23,85 @@ import numpy as np
 from repro.launch.mesh import make_host_mesh
 from repro.models.config import ModelConfig
 from repro.models.model import build_model
-from repro.serve.engine import ServeEngine
+from repro.serve import (
+    ContinuousServeEngine,
+    Request,
+    ServeEngine,
+    poisson_trace,
+)
 
 import jax.numpy as jnp
 
 
-def main():
+def build(fast: bool):
     mesh = make_host_mesh(data=4, model=2)
-    cfg = ModelConfig(name="serve-demo", family="dense", num_layers=4,
-                      d_model=256, num_heads=8, num_kv_heads=4, d_ff=512,
-                      vocab_size=2048, dtype=jnp.float32,
-                      param_dtype=jnp.float32, max_seq_len=256)
+    kw = dict(num_layers=2, d_model=128, d_ff=256) if fast else \
+        dict(num_layers=4, d_model=256, d_ff=512)
+    cfg = ModelConfig(name="serve-demo", family="moe", num_heads=8,
+                      num_kv_heads=4, vocab_size=2048, dtype=jnp.float32,
+                      param_dtype=jnp.float32, max_seq_len=256,
+                      num_experts=4, experts_per_token=2,
+                      moe_d_ff=kw["d_ff"] // 2, capacity_factor=4.0, **kw)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, mesh, params, cache_len=128, batch_size=8)
+    return mesh, model, params
 
-    prompts = np.random.default_rng(0).integers(0, 2048, (8, 16)).astype(np.int32)
+
+def run_static(mesh, model, params, batch: int, tokens: int):
+    engine = ServeEngine(model, mesh, params, cache_len=128, batch_size=batch)
+    prompts = np.random.default_rng(0).integers(
+        0, 2048, (batch, 16)).astype(np.int32)
     t0 = time.perf_counter()
-    out = engine.generate(prompts, max_new_tokens=24)
+    out = engine.generate(prompts, max_new_tokens=tokens)
     dt = time.perf_counter() - t0
-    print(f"generated {out.shape} tokens for 8 requests in {dt:.2f}s "
-          f"({out.size/dt:.0f} tok/s on emulated CPU devices)")
+    print(f"static: {out.shape} tokens for {batch} requests in {dt:.2f}s "
+          f"({out.size / dt:.0f} tok/s on emulated CPU devices)")
     print("first request:", out[0].tolist())
-    # deterministic greedy decode
-    out2 = engine.generate(prompts, max_new_tokens=24)
+    out2 = engine.generate(prompts, max_new_tokens=tokens)
     assert np.array_equal(out, out2)
     print("greedy decode is deterministic: OK")
+
+
+def run_continuous(mesh, model, params, batch: int, tokens: int):
+    rng = np.random.default_rng(0)
+    n_req = 2 * batch
+    arrivals = poisson_trace(n_req, rate=0.5, seed=0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, 2048, int(rng.integers(4, 20))),
+                    max_new_tokens=int(rng.integers(tokens // 2, tokens + 1)),
+                    arrival=float(arrivals[i]))
+            for i in range(n_req)]
+    engine = ContinuousServeEngine(model, mesh, params, cache_len=128,
+                                   batch_size=batch, dispatch="adaptive")
+    res = engine.run(reqs)
+    occ = [r["active"] for r in res.step_log]
+    print(f"continuous: {len(reqs)} requests, {res.tokens} tokens in "
+          f"{res.decode_steps} decode steps / {res.wall_s:.2f}s "
+          f"({res.tok_per_s:.0f} tok/s; occupancy {min(occ)}..{max(occ)} "
+          f"of {batch} slots)")
+    print(f"dispatch wire: {res.wire_bytes / 1e3:.1f} kB modeled; "
+          f"plan swaps: {[(s['step'], s['reason'], s['signature']) for s in res.swap_log]}")
+    assert len(res.outputs) == n_req
+    print("all requests completed: OK")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller model + fewer tokens (CI smoke)")
+    ap.add_argument("--batch", type=int, default=8,
+                    help="decode slots (continuous) / batch size (static)")
+    ap.add_argument("--tokens", type=int, default=None,
+                    help="max new tokens per request")
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching + adaptive sparse dispatch")
+    args = ap.parse_args()
+    tokens = args.tokens if args.tokens is not None else (8 if args.fast else 24)
+    mesh, model, params = build(args.fast)
+    if args.continuous:
+        run_continuous(mesh, model, params, args.batch, tokens)
+    else:
+        run_static(mesh, model, params, args.batch, tokens)
 
 
 if __name__ == "__main__":

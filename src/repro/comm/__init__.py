@@ -24,30 +24,40 @@ from repro.comm.collectives import CollectiveContext
 from repro.comm.executor import (
     apply_buckets,
     apply_buckets_spmd,
+    exchange_activation,
+    exchange_activation_spmd,
     execute_plan,
     execute_plan_spmd,
     reduce_buckets,
     reduce_buckets_spmd,
 )
 from repro.comm.plan import (
+    ActivationBucketSpec,
     BucketSpec,
     GroupSpec,
     LeafSlot,
+    ServePlan,
     SyncPlan,
     build_per_leaf_plan,
+    build_serve_plan,
     build_sync_plan,
 )
 
 __all__ = [
+    "ActivationBucketSpec",
     "BucketSpec",
     "CollectiveContext",
     "GroupSpec",
     "LeafSlot",
+    "ServePlan",
     "SyncPlan",
     "apply_buckets",
     "apply_buckets_spmd",
     "build_per_leaf_plan",
+    "build_serve_plan",
     "build_sync_plan",
+    "exchange_activation",
+    "exchange_activation_spmd",
     "execute_plan",
     "execute_plan_spmd",
     "pack_group",

@@ -443,3 +443,85 @@ def _qsgd_roundtrip_spmd(x2d, rand2d, qsgd, impl: str):
     from repro.core.allreduce import _qsgd_roundtrip
 
     return _qsgd_roundtrip(x2d, rand2d, qsgd, impl, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Serve-time activation exchange (DESIGN.md §8)
+# --------------------------------------------------------------------------
+#
+# The decode-time MoE combine is an allreduce of a (T, d) buffer over the
+# expert/model axis whose per-shard partial is ROW-sparse: token row t is
+# nonzero only when token t is active AND routed one of its experts to
+# this shard. The ServePlan (comm/plan.py) picks the wire representation
+# per compiled decode step; these two functions are its executor.
+#
+# Exactness contract (the serve analogue of the pod_sparse exchange): the
+# stream path computes THE SAME SUM as the dense psum, bit for bit, as
+# long as every shard's nonzero row count stays under the stream capacity
+# — which the engine's occupancy guard enforces before dispatching a
+# sparse-plan step.
+
+
+def _row_stream_roundtrip(partial: jax.Array, cap: int) -> jax.Array:
+    """(T, d) partial -> row stream at capacity ``cap`` -> dense again.
+    Identity (bit-for-bit) while nonzero rows <= cap; materializing the
+    round-trip in-graph is what makes the emulated/SPMD lowerings of the
+    stream path numerically IDENTICAL to the dense reference — and makes
+    a capacity overflow visible as a parity break instead of silence."""
+    from repro.core import sparse_stream as ss
+
+    mask = jnp.any(partial != 0, axis=1)
+    return ss.densify_rows(ss.from_row_mask(partial, mask, cap),
+                           partial.shape[0])
+
+
+def exchange_activation(
+    partial: jax.Array,
+    algorithm: str,
+    *,
+    coll: CollectiveContext,
+):
+    """One shard's (T, d) combine partial -> the fully-summed (T, d),
+    INSIDE a shard_map manual over the expert/model axis.
+
+    'dense': the reference psum. 'stream_gather@C': the planned (idx,val)
+    row-stream exchange — native lowerings all-gather each rank's stream
+    and scatter every foreign stream back to dense before the sum;
+    emulated (psum-only) lowerings round-trip the partial through the
+    stream locally and ride the psum wire, exactly like the pod_sparse
+    demotion (DESIGN.md §7.2): modeled stream wire, identical numerics.
+    """
+    from repro.core import sparse_stream as ss
+
+    if algorithm == "dense":
+        return coll.psum(partial)
+    from repro.core.cost_model import parse_stream_cap
+
+    cap = parse_stream_cap(algorithm)
+    if not coll.native:
+        return coll.psum(_row_stream_roundtrip(partial, cap))
+    t = partial.shape[0]
+    stream = ss.from_row_mask(partial, jnp.any(partial != 0, axis=1), cap)
+    idx_all = coll.all_gather(stream.idx[None], axis=0)     # (p, cap)
+    val_all = coll.all_gather(stream.val[None], axis=0)     # (p, cap, d)
+    dense_all = jax.vmap(
+        lambda i, v: ss.densify_rows(
+            ss.RowStream(i, v, jnp.asarray(0, jnp.int32)), t)
+    )(idx_all, val_all)                                     # (p, T, d)
+    return dense_all.sum(axis=0)
+
+
+def exchange_activation_spmd(partials: jax.Array, algorithm: str):
+    """The auto-SPMD formulation of :func:`exchange_activation`: the
+    shard axis is a real leading axis (p, T, d) — shard s's partial IS
+    the s-th slice — and the sum over it lowers to XLA's own all-reduce
+    over the sharded axis (DESIGN.md §4.2). The stream path round-trips
+    each shard's partial through its row stream first: bitwise the same
+    summands as the dense path while under capacity, so sparse == dense
+    exactly, whatever reduction order the backend picks."""
+    from repro.core.cost_model import parse_stream_cap
+
+    if algorithm != "dense":
+        cap = parse_stream_cap(algorithm)
+        partials = jax.vmap(lambda x: _row_stream_roundtrip(x, cap))(partials)
+    return partials.sum(axis=0)

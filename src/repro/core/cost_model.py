@@ -106,6 +106,33 @@ def t_dsar_split_allgather(
     return lo, hi
 
 
+def t_stream_allgather(p: int, cap_rows: int, d: int,
+                       net: NetworkParams = DEFAULT_NET) -> float:
+    """Row-stream all-gather: the serve-side activation exchange
+    (DESIGN.md §8). Every rank broadcasts a fixed-capacity stream of
+    ``cap_rows`` (row index, d-vector) items — one item per active token
+    routed to a local expert — and receives the other P-1 streams."""
+    row_bytes = d * net.isize + INDEX_BYTES
+    return (math.log2(p) * net.alpha
+            + (p - 1) * cap_rows * row_bytes / net.link_bytes_per_s)
+
+
+def stream_wire_bytes(p: int, cap_rows: int, d: int, isize: int = 4) -> float:
+    """Per-rank wire bytes of one row-stream all-gather step (receive
+    side: P-1 foreign streams of cap_rows rows). The ONE accounting the
+    serve executor's telemetry and the ServePlan selection rule share —
+    they must never diverge (same contract as :func:`pod_wire_bytes`)."""
+    if p <= 1:
+        return 0.0
+    return (p - 1) * cap_rows * float(d * isize + INDEX_BYTES)
+
+
+def parse_stream_cap(algorithm: str) -> int:
+    """Row capacity of a ``stream_gather@<cap>`` serve algorithm tag (the
+    capacity is part of the plan signature, so it rides the string)."""
+    return int(algorithm.split("@", 1)[1])
+
+
 def dsar_speedup_cap(n: int, isize: int = 4) -> float:
     """Lemma 5.2: once the result is dense, sparsity alone buys at most
     2/kappa versus a bandwidth-optimal dense allreduce, kappa = delta/N."""
@@ -190,9 +217,16 @@ def bucket_time(algorithm: str, p: int, k: int, n: int,
     """Expected collective time of ONE fusion bucket under its resolved
     algorithm (the per-bucket term the overlap model hides or exposes).
     ``reduced_nnz`` substitutes a measured post-reduction fill-in for the
-    uniform model, exactly as in :func:`select_algorithm`."""
+    uniform model, exactly as in :func:`select_algorithm`.
+
+    Serve-side activation buckets (DESIGN.md §8) use the
+    ``stream_gather@<cap>`` algorithm family, where ``k`` is the ROW
+    width (d) and the row capacity rides the tag: the cost is capacity-
+    bound, not nnz-bound, because the stream ships at fixed cap."""
     if algorithm == "dense":
         return t_dense_allreduce(p, n, net)
+    if algorithm.startswith("stream_gather"):
+        return t_stream_allgather(p, parse_stream_cap(algorithm), k, net)
     if algorithm == "ssar_recursive_double":
         return t_ssar_recursive_double(p, k, n, net,
                                        reduced_nnz=reduced_nnz)[1]
@@ -215,6 +249,9 @@ def bucket_wire_bytes(algorithm: str, p: int, k: int, n: int,
         # compressed-dense end-representation OR raw psum: one dense
         # allreduce of the n-vector (Rabenseifner accounting).
         return 2 * (p - 1) / p * n * isize
+    if algorithm.startswith("stream_gather"):
+        # serve activation exchange: capacity-bound, k is the row width
+        return stream_wire_bytes(p, parse_stream_cap(algorithm), k, isize)
     if nnz is None:
         nnz = float(min(n, p * k))
     if algorithm == "ssar_recursive_double":

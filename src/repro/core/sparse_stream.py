@@ -133,6 +133,48 @@ def concat(streams: list[SparseStream], cap_out: int | None = None) -> SparseStr
     return SparseStream(idx, val, jnp.asarray(nnz, jnp.int32))
 
 
+class RowStream(NamedTuple):
+    """Fixed-capacity ROW-sparse matrix: up to ``cap`` (row index, row
+    vector) pairs of a (T, d) buffer. The serve-side activation exchange
+    (DESIGN.md §8) ships whole token rows — an (idx, val) stream whose
+    value is a d-vector — because MoE combine partials are row-sparse:
+    a token row is nonzero only where the token routed to a local expert.
+    Padding rows carry ``idx == SENTINEL`` and all-zero vectors."""
+
+    idx: jax.Array                 # i32[cap]
+    val: jax.Array                 # dtype[cap, d]
+    nnz: jax.Array                 # i32[]
+
+    @property
+    def capacity(self) -> int:
+        return self.idx.shape[-1]
+
+
+def from_row_mask(x: jax.Array, mask: jax.Array, cap: int) -> RowStream:
+    """Compact the masked ROWS of ``x`` (T, d) into a RowStream.
+
+    Rows where mask is False are dropped. Exactness contract: when
+    popcount(mask) <= cap AND every unmasked row of ``x`` is all-zero,
+    ``densify_rows`` inverts this bit-for-bit (the serve engine's
+    occupancy guard enforces the capacity side)."""
+    t = x.shape[0]
+    idx = jnp.where(mask, jnp.arange(t, dtype=jnp.int32), SENTINEL)
+    order = jnp.argsort(idx)            # valid rows first, index-ascending
+    idx_s = idx[order][:cap]
+    val_s = jnp.where((idx_s != SENTINEL)[:, None], x[order][:cap], 0)
+    return RowStream(
+        idx=idx_s, val=val_s,
+        nnz=jnp.minimum(jnp.sum(mask).astype(jnp.int32), cap))
+
+
+def densify_rows(s: RowStream, t: int) -> jax.Array:
+    """Scatter the row stream back into a dense (t, d) buffer. Padding
+    rows (idx == SENTINEL) are out of bounds and dropped; valid row
+    indices are unique within a stream, so the scatter-add is a set."""
+    out = jnp.zeros((t,) + s.val.shape[1:], s.val.dtype)
+    return out.at[s.idx].add(s.val, mode="drop")
+
+
 def pad_to(s: SparseStream, cap: int) -> SparseStream:
     """Grow capacity (padding stays at the back because streams are sorted)."""
     if cap == s.capacity:

@@ -344,7 +344,9 @@ def attention_prefill(p, cfg: ModelConfig, x, positions, cache_len: int):
 
 
 def attention_decode(p, cfg: ModelConfig, x, cache: KVCache, pos):
-    """One-token decode. x: (B, 1, d), pos: scalar current position.
+    """One-token decode. x: (B, 1, d); pos: scalar current position, or a
+    (B,) vector of PER-SLOT positions (continuous batching, DESIGN.md §8
+    — each request slot is at its own depth in its own cache rows).
 
     Full-attention: cache slot = pos (cache width >= seq_len).
     Sliding-window: ring buffer, slot = pos % window.
@@ -358,20 +360,41 @@ def attention_decode(p, cfg: ModelConfig, x, cache: KVCache, pos):
     if cfg.qk_norm:
         q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
         k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
-    posv = jnp.full((1,), pos, jnp.int32)
-    q = rope(q, posv, cfg.rope_theta)
-    k = rope(k, posv, cfg.rope_theta)
-    slot = pos % w if cfg.sliding_window else pos
-    kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
-    # valid slots: those holding positions <= pos and within window
     slot_ids = jnp.arange(w)
-    if cfg.sliding_window:
-        age = (slot - slot_ids) % w  # how many steps ago the slot was written
-        valid = (age < jnp.minimum(pos + 1, w))
+    if getattr(pos, "ndim", 0) == 1:
+        # Per-slot path: same math per batch row as the scalar path —
+        # rope at each row's own position, per-row cache slot write,
+        # per-row validity mask. Inactive slots may sit past the cache
+        # end; the write clamps (their rows are garbage by contract and
+        # overwritten at admission).
+        posv = pos[:, None]                                  # (B, 1)
+        q = rope(q, posv, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_theta)
+        slot = pos % w if cfg.sliding_window else jnp.minimum(pos, w - 1)
+        bidx = jnp.arange(b)
+        kc = cache.k.at[bidx, slot].set(k[:, 0])
+        vc = cache.v.at[bidx, slot].set(v[:, 0])
+        if cfg.sliding_window:
+            age = (slot[:, None] - slot_ids[None, :]) % w
+            valid = age < jnp.minimum(pos + 1, w)[:, None]
+        else:
+            valid = slot_ids[None, :] <= pos[:, None]        # (B, W)
+        mask = valid[:, None, None, None, :]
     else:
-        valid = slot_ids <= pos
-    mask = jnp.broadcast_to(valid[None, None, None, None, :], (b, 1, 1, 1, w))
+        posv = jnp.full((1,), pos, jnp.int32)
+        q = rope(q, posv, cfg.rope_theta)
+        k = rope(k, posv, cfg.rope_theta)
+        slot = pos % w if cfg.sliding_window else pos
+        kc = jax.lax.dynamic_update_slice_in_dim(cache.k, k, slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache.v, v, slot, axis=1)
+        # valid slots: those holding positions <= pos and within window
+        if cfg.sliding_window:
+            age = (slot - slot_ids) % w  # steps since the slot was written
+            valid = (age < jnp.minimum(pos + 1, w))
+        else:
+            valid = slot_ids <= pos
+        mask = jnp.broadcast_to(valid[None, None, None, None, :],
+                                (b, 1, 1, 1, w))
     out = _sdpa(q, kc, vc, mask, hd) @ p["wo"]
     return out, KVCache(kc, vc)
 

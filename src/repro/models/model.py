@@ -468,8 +468,16 @@ def init_decode_state(cfg: ModelConfig, batch_size: int, cache_len: int,
                        cross_kv=cross_kv, conv=conv, ssm=ssm_states)
 
 
-def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens: jax.Array):
-    """One autoregressive step. tokens: (B, 1) -> (logits (B,V), state')."""
+def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens: jax.Array,
+                moe_serve=None):
+    """One autoregressive step. tokens: (B, 1) -> (logits (B,V), state').
+
+    ``state.pos`` may be a scalar (batch-synchronous decode) or a (B,)
+    per-slot position vector (continuous batching — see attention_decode).
+    ``moe_serve``: an optional :class:`repro.models.moe.ServeDispatch`;
+    when given, MoE layers route through the serve-time dispatch (active-
+    slot masking + planned combine exchange, DESIGN.md §8) instead of the
+    training-style :func:`moe_apply`."""
     fam = cfg.family
     assert cfg.is_decoder, "encoder-only archs have no decode step"
     x = params["embed"][tokens].astype(cfg.dtype)
@@ -485,7 +493,12 @@ def decode_step(params, cfg: ModelConfig, state: DecodeState, tokens: jax.Array)
             z = L.rmsnorm(lp["ln2"], h, cfg.norm_eps)
             if cfg.family == "moe":
                 bb, ss, dd = z.shape
-                f = moe_mod.moe_apply(lp["moe"], cfg, z.reshape(bb * ss, dd)).reshape(bb, ss, dd)
+                z2 = z.reshape(bb * ss, dd)
+                if moe_serve is not None:
+                    f = moe_mod.moe_apply_serve(lp["moe"], cfg, z2, moe_serve)
+                else:
+                    f = moe_mod.moe_apply(lp["moe"], cfg, z2)
+                f = f.reshape(bb, ss, dd)
             else:
                 f = L.mlp(lp["mlp"], cfg, z)
             return h + f, cache
@@ -593,8 +606,9 @@ class Model:
     def prefill(self, params, batch, cache_len: int):
         return prefill(params, self.cfg, batch, cache_len)
 
-    def decode_step(self, params, state, tokens):
-        return decode_step(params, self.cfg, state, tokens)
+    def decode_step(self, params, state, tokens, moe_serve=None):
+        return decode_step(params, self.cfg, state, tokens,
+                           moe_serve=moe_serve)
 
     def init_decode_state(self, batch_size: int, cache_len: int, prefix_len: int = 0):
         return init_decode_state(self.cfg, batch_size, cache_len, prefix_len)

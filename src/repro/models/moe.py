@@ -10,6 +10,7 @@ sharded over 'model' (expert parallelism).
 from __future__ import annotations
 
 import math
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -103,6 +104,100 @@ def moe_apply(p, cfg: ModelConfig, x: jax.Array) -> jax.Array:
     # per expert shard + one (T,d) all-reduce — the cheap direction).
     upd = out.reshape(e * c, d) * slot_w[:, None]
     y = jnp.zeros((t + 1, d), x.dtype).at[slot_token].add(upd, mode="drop")[:t]
+
+    if cfg.moe_shared_ff:
+        from repro.models.layers import mlp
+        y = y + mlp(p["shared"], cfg, x)
+    return y
+
+
+# --------------------------------------------------------------------------
+# Serve-time dispatch (continuous batching, DESIGN.md §8)
+# --------------------------------------------------------------------------
+
+class ServeDispatch(NamedTuple):
+    """How a decode step's expert dispatch crosses devices at serve time.
+
+    ``exchange`` is the planned combine exchange (built by the serve
+    engine from the ServePlan + comm executor — models/ stays ignorant of
+    comm/): (p_shards, T, d) stacked per-expert-shard combine partials ->
+    the fully-summed (T, d). ``active`` masks the live request slots out
+    of routing so retired/empty slots never consume expert capacity or
+    touch the wire."""
+
+    active: jax.Array             # (T,) bool — live decode slots
+    exchange: Any                 # callable (p_shards, T, d) -> (T, d)
+    p_shards: int                 # expert-parallel world size
+
+
+def moe_apply_serve(p, cfg: ModelConfig, x: jax.Array,
+                    dispatch: ServeDispatch) -> jax.Array:
+    """Serve-time variant of :func:`moe_apply` for one decode step.
+
+    Differences from the training path, both required for continuous
+    batching to reproduce per-request decode token-for-token:
+
+    * drop-free capacity ``c = T``: top-k experts per token are distinct,
+      so no expert ever sees more than T rows — an active token's output
+      can never depend on which OTHER requests share the batch;
+    * inactive slots are routed to a sentinel expert id (dropped before
+      packing), so they neither consume capacity nor contribute rows;
+    * the combine is materialized as PER-EXPERT-SHARD partials (shard s
+      owns the contiguous expert range [s*e/p, (s+1)*e/p)) and summed
+      through the planned ``dispatch.exchange`` — the seam where the
+      ServePlan chooses dense psum vs the (idx,val) row-stream wire.
+    """
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.experts_per_token
+    c = t                                          # drop-free serve capacity
+    x = _constrain(x, (None, None))
+
+    gates = jax.nn.softmax((x @ p["router"].astype(x.dtype)).astype(jnp.float32))
+    w, eidx = jax.lax.top_k(gates, k)                      # (T, k)
+    w = (w / (w.sum(-1, keepdims=True) + 1e-9)).astype(x.dtype)
+
+    flat_e = eidx.reshape(-1).astype(jnp.int32)            # (T*k,)
+    # Inactive slots -> sentinel expert e: sorts after every real expert,
+    # so it shifts no seg_start and lands outside the (e*c,) buffers.
+    flat_e = jnp.where(jnp.repeat(dispatch.active, k), flat_e, e)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(e, dtype=jnp.int32))
+    pos_in_seg = jnp.arange(t * k, dtype=jnp.int32) - \
+        seg_start[jnp.minimum(sorted_e, e - 1)]
+    keep = (pos_in_seg < c) & (sorted_e < e)
+    slot = jnp.where(keep, sorted_e * c + pos_in_seg, e * c)  # OOB sentinel
+    token_of = (order // k).astype(jnp.int32)
+
+    slot_token = jnp.full((e * c,), t, jnp.int32).at[slot].set(
+        token_of, mode="drop")                                 # T = empty
+    slot_w = jnp.zeros((e * c,), x.dtype).at[slot].set(
+        w.reshape(-1)[order], mode="drop")
+    x_pad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)])   # sentinel row
+    xin = _constrain(x_pad[slot_token].reshape(e, c, d), ("model", None, None))
+    h = jnp.einsum("ecd,edf->ecf", xin, p["wi"].astype(x.dtype))
+    g = jnp.einsum("ecd,edf->ecf", xin, p["wg"].astype(x.dtype))
+    out = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h, p["wo"].astype(x.dtype))
+
+    # Per-shard combine partials: shard s scatter-adds ONLY its own
+    # experts' rows -> row-sparse (T, d) partial (nonzero rows are the
+    # active tokens routed here). The planned exchange owns the sum.
+    upd = out.reshape(e * c, d) * slot_w[:, None]
+    p_sh = dispatch.p_shards
+    assert e % p_sh == 0, (e, p_sh)
+    span = (e // p_sh) * c
+    parts = []
+    for s in range(p_sh):
+        st = jax.lax.slice_in_dim(slot_token, s * span, (s + 1) * span)
+        su = jax.lax.slice_in_dim(upd, s * span, (s + 1) * span)
+        parts.append(jnp.zeros((t + 1, d), x.dtype).at[st].add(
+            su, mode="drop")[:t])
+    # NO sharding constraint on the stacked partials: a ("model",None,None)
+    # constraint here — scatter output, inside the decode layer scan —
+    # SILENTLY miscompiles on the pinned XLA-CPU partitioner (active-row
+    # values change by O(1); found via the serve parity tests, DESIGN.md
+    # §5.4). The exchange owns any resharding it needs.
+    y = dispatch.exchange(jnp.stack(parts))
 
     if cfg.moe_shared_ff:
         from repro.models.layers import mlp

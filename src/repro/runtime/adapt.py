@@ -165,9 +165,16 @@ class AdaptiveController:
             if b.algorithm == old:
                 continue
             nnz = densities.get(b.name)
-            delta_forced = (old.startswith("ssar") and nnz is not None
-                            and nnz >= delta_threshold(b.n, self.net.isize))
-            if delta_forced:
+            forced = (old.startswith("ssar") and nnz is not None
+                      and nnz >= delta_threshold(b.n, self.net.isize))
+            # Plans may carry their own forced-switch rule (same principle
+            # as the delta crossing — a correctness boundary, not a perf
+            # heuristic): the serve ServePlan forces a stream off its
+            # capacity once the measured occupancy reaches it.
+            hook = getattr(self.plan, "switch_forced", None)
+            if not forced and hook is not None:
+                forced = bool(hook(b.name, old, b.algorithm, nnz))
+            if forced:
                 continue
             t_old = bucket_time(old, p, k, b.n, self.net, vb,
                                 reduced_nnz=nnz)
@@ -203,6 +210,19 @@ class AdaptiveController:
         self._pending_sig, self._pending_count = None, 0
         self.swaps += 1
         return accepted
+
+    def force(self, plan) -> None:
+        """Install an externally-forced plan NOW, bypassing hysteresis
+        and patience — the caller hit a correctness boundary (the serve
+        engine's occupancy guard crossing a stream capacity before the
+        windowed controller could react). Pending proposals and the
+        half-full telemetry window are dropped: they described the plan
+        that was just invalidated."""
+        self.plan = plan
+        self._pending_sig, self._pending_plan = None, None
+        self._pending_count = 0
+        self.window.clear()
+        self.swaps += 1
 
 
 class AdaptiveRuntime:

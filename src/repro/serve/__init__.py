@@ -1,1 +1,15 @@
+"""Serving subsystem (DESIGN.md §8): the static-batch reference engine
+plus the continuous-batching scheduler + plan-driven sparse decode."""
 from repro.serve.engine import ServeEngine, build_serve_step  # noqa: F401
+from repro.serve.scheduler import (  # noqa: F401
+    ContinuousScheduler,
+    Request,
+    poisson_trace,
+    truncate_at_eos,
+)
+from repro.serve.sparse_decode import (  # noqa: F401
+    ContinuousServeEngine,
+    ServeResult,
+    build_slot_decode_step,
+    insert_slot_state,
+)

@@ -2,8 +2,9 @@
 
 ``build_serve_step`` returns the jitted one-token decode function — the
 object the dry-run lowers for decode_32k / long_500k cells. The engine
-wraps it with a minimal batching loop (fixed slots, batch-synchronous;
-continuous batching is a documented extension point, DESIGN.md §2.3).
+wraps it with a minimal batching loop (fixed slots, batch-synchronous);
+it is the per-request EXACTNESS REFERENCE for the continuous-batching
+engine in ``serve/sparse_decode.py`` (DESIGN.md §8).
 
 Cache sharding is divisibility-aware (found via the 40-cell dry-run):
   * batch over dp only when global_batch divides dp (long_500k has B=1:
@@ -146,8 +147,11 @@ class ServeEngine:
         self.mesh = mesh
         self.params = params
         self.cache_len = cache_len
-        self.decode_fn, _ = build_serve_step(
+        self.decode_fn, (_, sspecs) = build_serve_step(
             model, mesh, batch_size=batch_size, cache_len=cache_len)
+        self._state_sh = _sh(mesh)(sspecs)
+        dp = dp_axes_of(mesh) if _div(batch_size, dp_total_of(mesh)) else None
+        self._tok_sh = NamedSharding(mesh, P(dp, None))
 
     def generate(self, prompts: np.ndarray, max_new_tokens: int = 16,
                  image_embeds: Optional[np.ndarray] = None) -> np.ndarray:
@@ -157,10 +161,17 @@ class ServeEngine:
             batch["image_embeds"] = jnp.asarray(image_embeds)
         with self.mesh:
             logits, state = self.model.prefill(self.params, batch, self.cache_len)
+            # The eager prefill may COMMIT cache shardings (models with
+            # internal sharding constraints, e.g. MoE dispatch); the
+            # jitted step's donated state arg needs its own layout.
+            state = jax.device_put(state, self._state_sh)
             toks = []
             cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             for _ in range(max_new_tokens):
                 toks.append(np.asarray(cur))
+                # argmax of committed logits is itself committed (with a
+                # replicated layout); re-lay it out for the decode step
+                cur = jax.device_put(cur, self._tok_sh)
                 logits, state = self.decode_fn(self.params, state, cur)
                 cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         return np.concatenate(toks, axis=1)

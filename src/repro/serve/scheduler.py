@@ -1,0 +1,152 @@
+"""Continuous-batching request scheduler (DESIGN.md §8.1).
+
+Pure host-side bookkeeping — no device code, no model knowledge. The
+decode engine (serve/sparse_decode.py) asks three questions each step:
+
+  admit_ready()     which waiting requests go into which free slots NOW
+                    (FIFO by arrival; ragged prompt lengths are the
+                    engine's problem — admission is per-request prefill)
+  record(slot, tok) one decoded token landed in a slot; retire the slot
+                    when the token is the EOS id (early-EOS retirement)
+                    or the request's own max_new_tokens is reached
+  advance()/skip()  move the step clock (skip fast-forwards an idle
+                    engine to the next arrival instead of spinning)
+
+The clock is counted in DECODE STEPS, not seconds: arrivals are given in
+step units so runs are exactly reproducible and independent of host
+speed. ``poisson_trace`` generates such arrivals from a seeded Poisson
+process (exponential inter-arrival gaps at a given rate per step).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    """One generation request. ``arrival`` is in decode-step units."""
+
+    rid: int
+    prompt: np.ndarray                 # (S,) int32 token ids
+    max_new_tokens: int
+    arrival: float = 0.0
+
+    def __post_init__(self):
+        self.prompt = np.asarray(self.prompt, np.int32).reshape(-1)
+        assert self.prompt.size >= 1, "empty prompt"
+        assert self.max_new_tokens >= 1
+
+
+@dataclass
+class Slot:
+    """One occupied decode slot (engine-facing view)."""
+
+    rid: int
+    next_token: int                    # token the next decode step consumes
+    emitted: list = field(default_factory=list)
+    max_new: int = 0
+
+
+def poisson_trace(n: int, rate: float, seed: int = 0,
+                  start: float = 0.0) -> np.ndarray:
+    """n Poisson arrival times (decode-step units) at ``rate`` requests
+    per step: cumulative sum of seeded exponential gaps."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate, 1e-9), size=n)
+    return start + np.cumsum(gaps)
+
+
+class ContinuousScheduler:
+    """Slot lifecycle over a fixed pool of ``num_slots`` decode slots.
+
+    Requests wait in arrival order; a request is admissible once the
+    step clock has passed its arrival AND a slot is free. Retirement
+    frees the slot the same step, so the next waiting request can be
+    admitted at the following boundary (continuous batching)."""
+
+    def __init__(self, num_slots: int, requests: list[Request],
+                 eos_id: Optional[int] = None):
+        self.num_slots = int(num_slots)
+        self.eos_id = eos_id
+        self.waiting: deque[Request] = deque(
+            sorted(requests, key=lambda r: (r.arrival, r.rid)))
+        self.slots: list[Optional[Slot]] = [None] * self.num_slots
+        self.clock = 0.0
+        self.completed: dict[int, np.ndarray] = {}
+        self.retirements: list[tuple[float, int]] = []   # (clock, rid)
+
+    # -- state queries -----------------------------------------------------
+    @property
+    def active_count(self) -> int:
+        return sum(1 for s in self.slots if s is not None)
+
+    @property
+    def active_mask(self) -> np.ndarray:
+        return np.array([s is not None for s in self.slots], bool)
+
+    @property
+    def done(self) -> bool:
+        return not self.waiting and self.active_count == 0
+
+    def slot(self, i: int) -> Optional[Slot]:
+        return self.slots[i]
+
+    # -- admission ---------------------------------------------------------
+    def admit_ready(self) -> list[tuple[int, Request]]:
+        """(slot index, request) pairs to admit at this step boundary:
+        FIFO over arrived requests, lowest free slot first. The caller
+        (the engine) prefills each and then calls :meth:`install`."""
+        out = []
+        free = [i for i, s in enumerate(self.slots) if s is None]
+        while free and self.waiting and self.waiting[0].arrival <= self.clock:
+            out.append((free.pop(0), self.waiting.popleft()))
+        return out
+
+    def install(self, slot_idx: int, req: Request, first_token: int) -> bool:
+        """Occupy a slot with a freshly prefilled request. The prefill's
+        argmax IS the first emitted token (exactly as ServeEngine.generate
+        counts it); a 1-token request (or an immediate EOS) retires on
+        the spot. Returns True when the slot retired immediately."""
+        assert self.slots[slot_idx] is None, slot_idx
+        self.slots[slot_idx] = Slot(rid=req.rid, next_token=int(first_token),
+                                    max_new=req.max_new_tokens)
+        return self.record(slot_idx, int(first_token))
+
+    # -- decode-step bookkeeping -------------------------------------------
+    def record(self, slot_idx: int, token: int) -> bool:
+        """One emitted token for an occupied slot; retires the slot on
+        EOS or when max_new_tokens is reached. Returns True on retire."""
+        s = self.slots[slot_idx]
+        assert s is not None, slot_idx
+        s.emitted.append(int(token))
+        s.next_token = int(token)
+        if (self.eos_id is not None and token == self.eos_id) \
+                or len(s.emitted) >= s.max_new:
+            self.completed[s.rid] = np.asarray(s.emitted, np.int32)
+            self.retirements.append((self.clock, s.rid))
+            self.slots[slot_idx] = None
+            return True
+        return False
+
+    def advance(self) -> None:
+        self.clock += 1.0
+
+    def skip_to_next_arrival(self) -> None:
+        """Idle engine (no active slots, nothing admissible): jump the
+        clock to the next arrival instead of decoding empty batches."""
+        if self.waiting:
+            self.clock = max(self.clock, self.waiting[0].arrival)
+
+
+def truncate_at_eos(tokens: np.ndarray, eos_id: Optional[int]) -> np.ndarray:
+    """Reference-side helper: cut a greedy decode at (and including) the
+    first EOS — what early-EOS retirement makes the scheduler emit."""
+    tokens = np.asarray(tokens)
+    if eos_id is None:
+        return tokens
+    hits = np.nonzero(tokens == eos_id)[0]
+    return tokens[: hits[0] + 1] if hits.size else tokens

@@ -1,0 +1,338 @@
+"""Slot-based decode engine with plan-driven sparse expert dispatch
+(DESIGN.md §8).
+
+``build_slot_decode_step`` compiles ONE decode superstep for a fixed
+(batch slots, cache length, ServePlan signature) triple: per-slot
+positions (each request at its own depth), active-slot masking, and —
+for MoE families — the combine exchange lowered through the comm plan
+(``exchange_activation_spmd``: dense psum reference or the (idx,val)
+row-stream wire, bit-identical while under stream capacity).
+
+``ContinuousServeEngine`` is the host loop: a ContinuousScheduler admits
+ragged prompts into free slots (per-request prefill inserted into the
+slot's cache rows), every step decodes one token for all active slots,
+early-EOS/maxed slots retire and free their slot, and — in adaptive
+dispatch mode — the step's telemetry ([active-token nnz, wire bytes],
+same shape as the training executor's) feeds the PR-3
+``AdaptiveController``; accepted replans swap the compiled decode step
+via the signature-keyed cache at step barriers, and the occupancy guard
+force-demotes a stream plan whose capacity the admitted batch just
+crossed (correctness rule, bypasses hysteresis/patience).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.comm.plan import ServePlan, build_serve_plan
+from repro.core.cost_model import DEFAULT_NET, NetworkParams
+from repro.models.model import Model
+from repro.models.moe import ServeDispatch
+from repro.models.specs import param_specs
+from repro.runtime.adapt import AdaptConfig, AdaptiveRuntime
+from repro.serve.engine import _div, _logit_spec, _sh, decode_state_specs
+from repro.serve.scheduler import ContinuousScheduler, Request
+from repro.train.train_step import dp_axes_of, dp_total_of
+
+
+# --------------------------------------------------------------------------
+# Compiled slot decode step
+# --------------------------------------------------------------------------
+
+def build_slot_decode_step(model: Model, mesh: Mesh,
+                           plan: Optional[ServePlan],
+                           batch_size: int, cache_len: int,
+                           shardings: Optional[tuple] = None):
+    """Jitted fn(params, state, tokens, active) -> (logits, state', telem).
+
+    ``state.pos`` is the (B,) per-slot position vector; ``active`` the
+    (B,) live-slot mask. ``plan`` (MoE families) pins the combine
+    exchange's wire representation — the plan SIGNATURE is the compile
+    key, so each accepted replan is its own cached program. ``telem``
+    maps the activation bucket to a (2,) f32 [active nnz, modeled wire
+    bytes] vector, the exact shape the adaptive controller consumes.
+    ``shardings``: precomputed (param, state) NamedSharding trees — the
+    engine passes its own so plan swaps don't re-derive specs."""
+    cfg = model.cfg
+    sh = _sh(mesh)
+    if shardings is not None:
+        param_sh, state_sh = shardings
+    else:
+        param_sh = sh(param_specs(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0)), cfg, None))
+        state_sh = sh(decode_state_specs(model, mesh, batch_size, cache_len))
+    dp = dp_axes_of(mesh) if _div(batch_size, dp_total_of(mesh)) else None
+    p_model = mesh.shape["model"]
+
+    if plan is not None:
+        bucket = plan.buckets[0]
+        algorithm, bname = bucket.algorithm, bucket.name
+        wire = plan.wire_bytes()
+
+    def step(params, state, tokens, active):
+        md = None
+        if plan is not None:
+            from repro.comm.executor import exchange_activation_spmd
+
+            md = ServeDispatch(
+                active=active,
+                exchange=lambda parts: exchange_activation_spmd(
+                    parts, algorithm),
+                p_shards=p_model)
+        logits, st = model.decode_step(params, state, tokens, moe_serve=md)
+        telem = {}
+        if plan is not None:
+            nnz = jnp.sum(active).astype(jnp.float32)
+            telem[bname] = jnp.stack(
+                [nnz, jnp.asarray(wire, jnp.float32)])
+        return logits, st, telem
+
+    telem_sh = {plan.buckets[0].name: NamedSharding(mesh, P())} \
+        if plan is not None else {}
+    return jax.jit(
+        step,
+        in_shardings=(param_sh, state_sh,
+                      NamedSharding(mesh, P(dp, None)),
+                      NamedSharding(mesh, P())),
+        out_shardings=(NamedSharding(mesh, _logit_spec(cfg, mesh, batch_size)),
+                       state_sh, telem_sh),
+        donate_argnums=(1,),
+    )
+
+
+def insert_slot_state(cfg, state, sub, slot_idx):
+    """Write a B=1 prefill's caches into slot ``slot_idx`` (static or
+    traced) of the batch decode state (and its per-slot position). The
+    slot's previous content — a retired request's garbage — is fully
+    overwritten; nothing else moves. The batch axis sits at axis 1 of
+    every stacked cache for the supported families (vlm's nested
+    self-attn cache would sit at 2)."""
+    if cfg.family == "vlm":
+        raise NotImplementedError("continuous batching: vlm caches")
+
+    def ins(dst, src):
+        return dst if dst is None else dst.at[:, slot_idx].set(src[:, 0])
+
+    new = {}
+    for name in ("kv", "cross_kv", "conv", "ssm"):
+        dst, src = getattr(state, name), getattr(sub, name)
+        new[name] = jax.tree.map(ins, dst, src) if dst is not None else None
+    pos = state.pos.at[slot_idx].set(sub.pos.astype(jnp.int32))
+    return state._replace(pos=pos, **new)
+
+
+# --------------------------------------------------------------------------
+# The continuous-batching engine
+# --------------------------------------------------------------------------
+
+@dataclass
+class ServeResult:
+    """What one ``ContinuousServeEngine.run`` produced."""
+
+    outputs: dict                      # rid -> np.int32 emitted tokens
+    decode_steps: int = 0
+    tokens: int = 0                    # total emitted (incl. prefill argmax)
+    wall_s: float = 0.0
+    wire_bytes: float = 0.0            # modeled per-rank dispatch bytes, total
+    swap_log: list = field(default_factory=list)
+    step_log: list = field(default_factory=list)
+
+    @property
+    def tok_per_s(self) -> float:
+        return self.tokens / self.wall_s if self.wall_s > 0 else 0.0
+
+
+class ContinuousServeEngine:
+    """Continuous-batching greedy decoding over ``batch_size`` slots.
+
+    dispatch='dense'     the exact reference: every step's MoE combine
+                         is the dense psum, whatever the occupancy.
+    dispatch='adaptive'  plan-driven: starts dense (exact at any
+                         occupancy), the controller demotes to the
+                         row-stream wire as the telemetry window shows
+                         occupancy draining, and back up as it rises —
+                         swapping compiled decode steps by plan
+                         signature. Output is bit-identical to 'dense'
+                         (the stream exchange is exact under its
+                         capacity, which the occupancy guard enforces).
+
+    Non-MoE families serve with the same scheduler and per-slot decode;
+    there is no cross-device dispatch to plan, so no controller runs.
+    """
+
+    def __init__(self, model: Model, mesh: Mesh, params,
+                 cache_len: int = 128, batch_size: int = 8,
+                 dispatch: str = "adaptive", eos_id: Optional[int] = None,
+                 adapt: Optional[AdaptConfig] = None,
+                 net: NetworkParams = DEFAULT_NET,
+                 min_cap: int = 4, headroom: float = 2.0):
+        assert dispatch in ("dense", "adaptive"), dispatch
+        cfg = model.cfg
+        if cfg.family == "vlm" or not cfg.is_decoder:
+            raise NotImplementedError(
+                f"continuous batching: family {cfg.family!r}")
+        self.model, self.mesh, self.params = model, mesh, params
+        self.cache_len, self.batch_size = cache_len, batch_size
+        self.eos_id = eos_id
+        self._state_sh = _sh(mesh)(
+            decode_state_specs(model, mesh, batch_size, cache_len))
+        self._param_sh = _sh(mesh)(param_specs(
+            jax.eval_shape(model.init, jax.random.PRNGKey(0)), model.cfg,
+            None))
+        self._admit_fns: dict = {}
+        self.runtime = None
+        self._plan = None
+        self.swap_log: list = []
+        if cfg.family == "moe":
+            base = build_serve_plan(mesh.shape["model"], batch_size,
+                                    cfg.d_model, algorithm="dense",
+                                    min_cap=min_cap, headroom=headroom)
+            if dispatch == "dense":
+                self._plan = base
+                self._fn = self._build(base)
+            else:
+                acfg = adapt or AdaptConfig(window=4, hysteresis=0.2,
+                                            patience=1, calibrate=False,
+                                            pod_sparse=False)
+                self.runtime = AdaptiveRuntime(
+                    model, None, mesh, plan=base, net=net, cfg=acfg,
+                    build_fn=self._build)
+                self._plan = self.runtime.current_plan
+                self._fn = self.runtime.current_fn()
+        else:
+            self._fn = self._build(None)
+
+    def _build(self, plan):
+        return build_slot_decode_step(
+            self.model, self.mesh, plan, self.batch_size, self.cache_len,
+            shardings=(self._param_sh, self._state_sh))
+
+    # -- slot admission ----------------------------------------------------
+    def _admit_fn(self, prompt_len: int):
+        """One jitted admission program per distinct prompt length
+        (ragged admission: prefill B=1 at the prompt's own length +
+        cache splice + first-token argmax, state donated). Compiled
+        once per length, cached for the engine's lifetime."""
+        if prompt_len not in self._admit_fns:
+            cfg = self.model.cfg
+
+            def admit(params, state, toks, slot_idx):
+                logits, sub = self.model.prefill(
+                    params, {"tokens": toks}, self.cache_len)
+                state = insert_slot_state(cfg, state, sub, slot_idx)
+                return state, jnp.argmax(logits[0]).astype(jnp.int32)
+
+            from jax.sharding import NamedSharding as NS
+
+            self._admit_fns[prompt_len] = jax.jit(
+                admit,
+                in_shardings=(self._param_sh, self._state_sh,
+                              NS(self.mesh, P()), NS(self.mesh, P())),
+                out_shardings=(self._state_sh, NS(self.mesh, P())),
+                donate_argnums=(1,),
+            )
+        return self._admit_fns[prompt_len]
+
+    def _admit(self, state, slot_idx: int, req: Request):
+        """Per-request ragged prefill: run the prompt at its own length
+        (B=1), take the first greedy token from the prefill logits —
+        exactly as ServeEngine.generate does — and splice the caches
+        into the slot's rows."""
+        assert req.prompt.size + req.max_new_tokens <= self.cache_len, \
+            (req.rid, req.prompt.size, req.max_new_tokens, self.cache_len)
+        state, first = self._admit_fn(req.prompt.size)(
+            self.params, state, jnp.asarray(req.prompt[None, :]),
+            jnp.asarray(slot_idx, jnp.int32))
+        return state, int(first)
+
+    # -- plan swaps --------------------------------------------------------
+    def _install(self, fn, plan, clock: float, reason: str):
+        self._fn, self._plan = fn, plan
+        self.swap_log.append({"step": clock, "reason": reason,
+                              "signature": plan.signature(),
+                              "version": plan.version})
+
+    def _occupancy_guard(self, active_count: int, clock: float):
+        """Force-demote a stream plan the admitted batch just outgrew —
+        the stream would silently drop rows above its capacity. Runs
+        BEFORE dispatch (the controller's windowed view lags by design);
+        bypasses hysteresis and patience, like the delta rule."""
+        plan = self._plan
+        if plan is None:
+            return
+        b = plan.buckets[0]
+        if b.sparse and active_count > b.cap:
+            forced = plan.replan(algorithms={b.name: "dense"})
+            if self.runtime is not None:
+                self.runtime.controller.force(forced)
+                fn = self.runtime.step_fn_for(forced)
+            else:
+                fn = self._build(forced)
+            self._install(fn, forced, clock, "occupancy-guard")
+
+    # -- the serving loop --------------------------------------------------
+    def run(self, requests: list[Request],
+            max_steps: int = 100_000) -> ServeResult:
+        sched = ContinuousScheduler(self.batch_size, requests,
+                                    eos_id=self.eos_id)
+        self.swap_log = []             # per-run log (the engine and its
+        # compiled-plan cache are reusable across runs; a re-run starts
+        # from the PREVIOUS run's adapted plan — steady-state serving)
+        state = self.model.init_decode_state(self.batch_size, self.cache_len)
+        state = state._replace(
+            pos=jnp.zeros((self.batch_size,), jnp.int32))
+        next_tok = np.zeros((self.batch_size,), np.int32)
+        res = ServeResult(outputs=sched.completed, swap_log=self.swap_log)
+        t0 = time.perf_counter()
+        with self.mesh:
+            while not sched.done and res.decode_steps < max_steps:
+                for slot_idx, req in sched.admit_ready():
+                    state, first = self._admit(state, slot_idx, req)
+                    sched.install(slot_idx, req, first)
+                    res.tokens += 1
+                active = sched.active_mask
+                n_active = int(active.sum())
+                if n_active == 0:
+                    sched.skip_to_next_arrival()
+                    continue
+                self._occupancy_guard(n_active, sched.clock)
+                for i, s in enumerate(sched.slots):
+                    if s is not None:
+                        next_tok[i] = s.next_token
+                logits, state, telem = self._fn(
+                    self.params, state, jnp.asarray(next_tok[:, None]),
+                    jnp.asarray(active))
+                lg = np.asarray(logits)
+                for i in np.nonzero(active)[0]:
+                    tok = int(np.argmax(lg[i]))
+                    sched.record(int(i), tok)
+                    res.tokens += 1
+                wire = float(np.asarray(telem[self._plan.buckets[0].name])[1]) \
+                    if telem else 0.0
+                res.wire_bytes += wire
+                res.step_log.append({
+                    "step": sched.clock, "active": n_active,
+                    "wire_bytes": wire,
+                    "signature": (self._plan.signature()
+                                  if self._plan is not None else "-")})
+                if self.runtime is not None and telem:
+                    self.runtime.observe(
+                        res.decode_steps, 1,
+                        {"telemetry": {k: np.asarray(v)
+                                       for k, v in telem.items()}})
+                    sw = self.runtime.maybe_swap()
+                    if sw is not None:
+                        # every step boundary of this synchronous host
+                        # loop is a drain barrier: nothing is in flight
+                        # when the compiled step is swapped (§8.3)
+                        self._install(sw[0], sw[1], sched.clock, "telemetry")
+                sched.advance()
+                res.decode_steps += 1
+        res.wall_s = time.perf_counter() - t0
+        return res
