@@ -87,6 +87,14 @@ def _run_drift() -> list[tuple[str, float, str]]:
     rng = np.random.default_rng(0)
     residuals = {k: jnp.zeros(s.shape, s.dtype)
                  for k, s in base_plan.residual_shapes().items()}
+    # Static dense reference, run in lockstep on the SAME grad trace:
+    # on the auto-SPMD lowering every algorithm folds into the exact
+    # sum, so the adaptive run must match it bit for bit even across
+    # plan swaps onto the capacity-clamped portfolio (DESIGN.md §9).
+    dense_plan = base_plan.replan(
+        algorithms={b.name: "dense" for b in base_plan.buckets if b.sparse})
+    dense_res = {k: jnp.zeros(s.shape, s.dtype)
+                 for k, s in base_plan.residual_shapes().items()}
     key = jax.random.PRNGKey(0)
 
     jitted = {}
@@ -101,12 +109,20 @@ def _run_drift() -> list[tuple[str, float, str]]:
     steps = 2 * PHASE_STEPS
     per_step_nnz: list[dict] = []
     adaptive_cost = 0.0
+    spmd_equals_dense = True
     plans_seen = {base_plan.signature(): base_plan}
     for step in range(steps):
         plan = ctrl.plan
         leaves = [_drift_grads(cfg, step, rng)]
-        _, residuals, telem = reduce_with(plan)(
-            leaves, residuals, jax.random.fold_in(key, step))
+        skey = jax.random.fold_in(key, step)
+        reduced, residuals, telem = reduce_with(plan)(
+            leaves, residuals, skey)
+        red_ref, dense_res, _ = reduce_with(dense_plan)(
+            leaves, dense_res, skey)
+        spmd_equals_dense &= all(
+            np.array_equal(np.asarray(reduced[name]),
+                           np.asarray(red_ref[name]))
+            for name in red_ref)
         row = {name: float(np.asarray(v)[0]) for name, v in telem.items()}
         per_step_nnz.append(row)
         adaptive_cost += _modeled_step_cost(plan, row, net)
@@ -132,6 +148,10 @@ def _run_drift() -> list[tuple[str, float, str]]:
     within_tail = bool(adaptive_tail <= best_tail * 1.05)
     within_total = bool(adaptive_cost <= static[best_sig] * 1.25)
     beats_worst = bool(adaptive_cost <= static[worst_sig])
+    portfolio = ("ssar_balanced_split", "ssar_rearranged_rs")
+    selects_portfolio = any(a in portfolio
+                            for p in plans_seen.values()
+                            for a in p.algorithms().values())
     # On a drift whose phases favor DIFFERENT algorithms, no static plan
     # is good everywhere — adaptive should beat the best static too,
     # paying only the detection windows.
@@ -144,8 +164,53 @@ def _run_drift() -> list[tuple[str, float, str]]:
          f"swaps={ctrl.swaps},ge1_swap={ctrl.swaps >= 1},"
          f"tail_us={adaptive_tail*1e6:.2f},best_tail_us={best_tail*1e6:.2f},"
          f"ends_at_best={within_tail},within_total_tol={within_total},"
-         f"beats_worst={beats_worst}"),
+         f"beats_worst={beats_worst},selects_portfolio={selects_portfolio},"
+         f"spmd_equals_dense={spmd_equals_dense}"),
     ]
+
+
+def _emulated_parity() -> list[tuple[str, float, str]]:
+    """Single-step probe of the psum-emulated lowering: a plan on each
+    portfolio algorithm must reduce bit-identically to the static dense
+    reference (the emulated executor reroutes every SSAR family to the
+    exact DSAR path — DESIGN.md §4)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
+
+    mesh = make_mesh((8,), ("data",))
+    n = 1 << 15
+    cfg = SyncConfig(mode="sparcml", k_per_bucket=16, bucket_size=128,
+                     algorithm="dsar_split_allgather", min_sparse_size=1024,
+                     impl="ref", fusion_bucket_bytes=1 << 16)
+    shapes = {"g": jax.ShapeDtypeStruct((n,), jnp.float32)}
+    base = comm.build_sync_plan(shapes, {"g": P()}, cfg, 8)
+    sparse = [b.name for b in base.buckets if b.sparse]
+    rng = np.random.default_rng(5)
+    g = jnp.asarray(rng.standard_normal((8, n)).astype(np.float32))
+    rid = jnp.arange(8, dtype=jnp.int32)
+    key = jax.random.PRNGKey(0)
+
+    def run(plan):
+        res = plan.init_residuals()
+        rspecs = {k: P("data", None, None) for k in res}
+
+        def inner(gr, r, rid):
+            out, _ = comm.execute_plan(
+                plan, [gr[0]], r, key, data_axis="data", p_data=8,
+                native=False, data_rank=rid[0])
+            return out[0]
+
+        f = shard_map(inner, mesh=mesh,
+                      in_specs=(P("data", None), rspecs, P("data")),
+                      out_specs=P(), check_vma=False)
+        return np.asarray(f(g, res, rid))
+
+    ref = run(base.replan(algorithms={nm: "dense" for nm in sparse}))
+    flags = []
+    for algo in ("ssar_balanced_split", "ssar_rearranged_rs"):
+        out = run(base.replan(algorithms={nm: algo for nm in sparse}))
+        flags.append(f"{algo}_equal={bool(np.array_equal(out, ref))}")
+    return [("adapt_emulated_parity", 0.0, ",".join(flags))]
 
 
 def _telemetry_overhead() -> list[tuple[str, float, str]]:
@@ -228,4 +293,5 @@ def _calibration() -> list[tuple[str, float, str]]:
 
 
 def run() -> list[tuple[str, float, str]]:
-    return _run_drift() + _telemetry_overhead() + _calibration()
+    return (_run_drift() + _emulated_parity() + _telemetry_overhead()
+            + _calibration())

@@ -130,5 +130,52 @@ def _fused_vs_per_leaf() -> list[tuple[str, float, str]]:
     ]
 
 
+def _portfolio() -> list[tuple[str, float, str]]:
+    """Full algorithm-portfolio sweep (DESIGN.md §9): every registered
+    algorithm x density grid at the acceptance-cell geometry (P=8
+    emulated devices, N=2^18). Emits per-algorithm rows (modeled time,
+    modeled wire bytes, measured wall time of the real shard_map
+    collectives) plus per-density win flags of the two capacity-clamped
+    portfolio algorithms vs BOTH classic SSAR variants."""
+    from repro.compat import make_mesh
+
+    mesh = make_mesh((8,), ("data",))
+    p, n, b = 8, 1 << 18, 512
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (8, n))
+    rows = []
+    for dens in (0.001, 0.01, 0.05):
+        kpb = max(1, int(dens * b))
+        k = kpb * (n // b)            # realizable per-bucket geometry
+        stats = {}
+        for algo in cm.ALL_ALGORITHMS:
+            t_model = cm.bucket_time(algo, p, k, n)
+            wire = cm.bucket_wire_bytes(algo, p, k, n)
+            f = make_sparse_allreduce(mesh, "data", n, kpb, b,
+                                      algorithm=algo)
+            out = f(x.reshape(-1), None)
+            jax.block_until_ready(out)
+            t0 = time.perf_counter()
+            reps = 5
+            for _ in range(reps):
+                out = f(x.reshape(-1), None)
+            jax.block_until_ready(out)
+            us = (time.perf_counter() - t0) / reps * 1e6
+            stats[algo] = (t_model, wire, us)
+            rows.append((f"portfolio_{algo}_d{dens:g}", us,
+                         f"P={p},N={n},k={k},model_us={t_model*1e6:.2f},"
+                         f"wire_bytes={wire:.0f}"))
+        classic = ("ssar_recursive_double", "ssar_split_allgather")
+        for new in ("ssar_balanced_split", "ssar_rearranged_rs"):
+            model_win = all(stats[new][0] < stats[c][0] for c in classic)
+            wire_win = all(stats[new][1] < stats[c][1] for c in classic)
+            measured_win = all(stats[new][2] < stats[c][2] for c in classic)
+            rows.append((f"portfolio_win_{new}_d{dens:g}", stats[new][2],
+                         f"model_win={model_win},wire_win={wire_win},"
+                         f"measured_win={measured_win},"
+                         f"auto={cm.select_algorithm(p, k, n)}"))
+    return rows
+
+
 def run() -> list[tuple[str, float, str]]:
-    return _modeled() + _measured() + _fused_vs_per_leaf()
+    return _modeled() + _measured() + _fused_vs_per_leaf() + _portfolio()

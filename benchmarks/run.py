@@ -58,8 +58,11 @@ def main() -> None:
                 print(f"{row_name},{us:.1f},{derived}")
             sys.stdout.flush()
             os.makedirs(args.json_dir, exist_ok=True)
+            # file named after the bench MODULE (BENCH_bench_allreduce.json),
+            # stable across any renaming of the CLI keys
+            basename = modname.rsplit(".", 1)[-1]
             with open(os.path.join(args.json_dir,
-                                   f"BENCH_{name}.json"), "w") as f:
+                                   f"BENCH_{basename}.json"), "w") as f:
                 json.dump(
                     [{"name": r, "us_per_call": us, "derived": d}
                      for r, us, d in rows], f, indent=1)

@@ -108,10 +108,16 @@ def _pod_sparse_exchange(out, pod_axis: str, cap: int) -> jax.Array:
 
 
 def _reduce_flat_sparse(u_flat, algorithm: str, *,
-                        coll: CollectiveContext) -> jax.Array:
-    """SSAR variants for flat (rows==1) buckets; returns the dense (n,)."""
+                        coll: CollectiveContext, impl: str = "auto"):
+    """SSAR variants for flat (rows==1) buckets; returns (dense (n,),
+    fold). ``fold`` is the capacity-clamped pre-scale mass of the
+    portfolio algorithms (DESIGN.md §9) — the caller adds it into the
+    bucket's EF residual (the global-residual rule) — and None for the
+    unclamped classics."""
     from repro.core import sparse_stream as ss
     from repro.core.allreduce import (
+        ssar_balanced_split_inside,
+        ssar_rearranged_rs_inside,
         ssar_recursive_double_inside,
         ssar_split_allgather_inside,
     )
@@ -120,11 +126,17 @@ def _reduce_flat_sparse(u_flat, algorithm: str, *,
         out = ssar_recursive_double_inside(
             u_flat.to_stream(), axis_name=coll.axis_name, p=coll.p,
             n=u_flat.n)
-        return out.to_dense(u_flat.n)
+        return out.to_dense(u_flat.n), None
     if algorithm == "ssar_split_allgather":
         stream = ssar_split_allgather_inside(
             u_flat, axis_name=coll.axis_name, p=coll.p)
-        return ss.densify(stream, u_flat.n)
+        return ss.densify(stream, u_flat.n), None
+    if algorithm == "ssar_balanced_split":
+        return ssar_balanced_split_inside(
+            u_flat, axis_name=coll.axis_name, p=coll.p, impl=impl)
+    if algorithm == "ssar_rearranged_rs":
+        return ssar_rearranged_rs_inside(
+            u_flat, axis_name=coll.axis_name, p=coll.p)
     raise ValueError(f"not a flat sparse algorithm: {algorithm!r}")
 
 
@@ -217,6 +229,7 @@ def reduce_buckets(
             qsgd_pod_rank = pod_rank if p_pod > 1 else None
             if not native and algorithm.startswith("ssar"):
                 algorithm = "dsar_split_allgather"            # DESIGN.md §4
+            fold = None
             if algorithm == "dense":
                 # Residual-bearing bucket whose cost model picked a dense
                 # end-representation (paper §5.3.3): STILL compress + EF,
@@ -236,7 +249,9 @@ def reduce_buckets(
                 # SSAR keeps a sparse end-representation; flat rows only.
                 assert group.rows == 1, (b.name, algorithm)
                 flat = UniformStream(u.lidx[0], u.val[0], cfg.bucket_size)
-                out = _reduce_flat_sparse(flat, algorithm, coll=coll)[None, :]
+                out, fold = _reduce_flat_sparse(flat, algorithm, coll=coll,
+                                                impl=cfg.impl)
+                out = out[None, :]
             if pod_axis is not None:
                 if b.pod_sparse and native and group.rows == 1:
                     # Adaptive cross-pod demotion (DESIGN.md §7): the
@@ -249,6 +264,13 @@ def reduce_buckets(
             reduced[b.name] = out * scale
             telemetry[b.name] = _bucket_telemetry(out, plan, group, b,
                                                   p_data, p_pod)
+            if fold is not None:
+                # Global-residual rule (DESIGN.md §9): mass clamped off
+                # the wire by a portfolio algorithm re-enters THIS rank's
+                # EF residual at pre-scale magnitude, so it is
+                # contributed exactly once on a later step — no gradient
+                # mass is silently lost.
+                residual = residual + fold[None, :]
             new_residuals[b.name] = residual.astype(res.dtype)[None]
             bucket_idx += 1
     return reduced, new_residuals, telemetry

@@ -45,7 +45,10 @@ from repro.comm.buckets import canonical_shape, model_axis
 # its thin wrappers — a module-level import here would close that cycle.
 
 SPARSE_ALGORITHMS = ("ssar_recursive_double", "ssar_split_allgather",
-                     "dsar_split_allgather")
+                     "dsar_split_allgather",
+                     # capacity-clamped portfolio (DESIGN.md §9): O(k)
+                     # traffic; clamp drops fold into the EF residual
+                     "ssar_balanced_split", "ssar_rearranged_rs")
 # The batched (rows > 1) pipeline keeps the model-sharded row axis as a
 # pure batch dim; only DSAR (and dense) are implemented batched.
 BATCHED_ALGORITHMS = ("dsar_split_allgather", "dense")
@@ -165,13 +168,17 @@ class SyncPlan:
 
     def replan(self, densities: Optional[dict] = None, net=None, *,
                algorithms: Optional[dict] = None,
-               pod_sparse: Optional[dict] = None) -> "SyncPlan":
+               pod_sparse: Optional[dict] = None,
+               allow: Optional[tuple] = None) -> "SyncPlan":
         """A successor plan with re-selected bucket algorithms.
 
         Either re-run the cost model with MEASURED post-reduction nnz per
         bucket (``densities``: name -> nnz, from the telemetry window)
         and calibrated ``net`` params, or apply explicit ``algorithms``
-        overrides (checkpoint resume). Structural invariants:
+        overrides (checkpoint resume). ``allow`` optionally restricts the
+        candidate set further (the adaptive controller's configured allow
+        set); structural constraints below still apply on top of it.
+        Structural invariants:
 
         * buckets without EF state (raw-dense at build: under
           ``min_sparse_size`` or never planned sparse) stay raw-dense —
@@ -193,16 +200,19 @@ class SyncPlan:
                 if not b.has_residual:
                     new_buckets.append(b)        # permanently raw-dense
                     continue
-                allow = (SPARSE_ALGORITHMS + ("dense",) if g.rows == 1
-                         else BATCHED_ALGORITHMS)
+                allowed = (SPARSE_ALGORITHMS + ("dense",) if g.rows == 1
+                           else BATCHED_ALGORITHMS)
+                if allow is not None:
+                    narrowed = tuple(a for a in allowed if a in allow)
+                    allowed = narrowed or allowed
                 if algorithms is not None:
                     algo = algorithms.get(b.name, b.algorithm)
                 else:
                     nnz = None if densities is None else densities.get(b.name)
                     algo = select_bucket_algorithm(
                         self.dp_total, self.bucket_k(g, b), b.n, net,
-                        value_bits=vb, allow=allow, reduced_nnz=nnz)
-                if algo not in allow:
+                        value_bits=vb, allow=allowed, reduced_nnz=nnz)
+                if algo not in allowed:
                     algo = "dsar_split_allgather"
                 ps = b.pod_sparse if pod_sparse is None else \
                     bool(pod_sparse.get(b.name, b.pod_sparse))
@@ -287,7 +297,20 @@ class SyncPlan:
                     total += 2 * (p - 1) / p * n * 4
                     continue
                 nnz = g.rows * (b.cols // cfg.bucket_size) * cfg.k_per_bucket
+                if b.algorithm == "ssar_rearranged_rs":
+                    # Stream-form reduce-scatter: per-round capped sends
+                    # replace the a2a split phase entirely (DESIGN.md §9).
+                    from repro.core.cost_model import rearranged_round_caps
+                    caps = rearranged_round_caps(nnz, n, p)
+                    total += sum(send for send, _ in caps) * 8
+                    total += (p - 1) * caps[-1][1] * 8   # capped allgather
+                    continue
                 total += (p - 1) / p * nnz * 8          # idx+val split phase
+                if b.algorithm == "ssar_balanced_split":
+                    # Balanced owner shards: allgather of p capped shards.
+                    from repro.core.cost_model import balanced_shard_cap
+                    total += (p - 1) * balanced_shard_cap(nnz, p, n) * 8
+                    continue
                 if b.algorithm == "dsar_split_allgather":
                     if cfg.qsgd_bits is not None:
                         total += (p - 1) / p * (n * cfg.qsgd_bits / 8

@@ -16,6 +16,17 @@ Algorithms (see DESIGN.md §2.1 for the MPI->ICI mapping):
   dsar_split_allgather    split phase as above, then DENSIFY the owned
                           range (bucket_scatter kernel) and run a dense
                           allgather, optionally QSGD-quantized (paper §6).
+  ssar_balanced_split     Ok-Top-k-style balanced split-and-gather
+                          (DESIGN.md §9): split as above, owner-local
+                          re-top-k to (k/P)(1+eps) items, allgather at
+                          that fixed capacity — O(k) per-node traffic;
+                          clamped-off mass returns as an EF fold.
+  ssar_rearranged_rs      SparDL-style rearranged reduce-scatter
+                          (DESIGN.md §9): log2(P) recursive-halving
+                          rounds in stream form end-to-end (no densify
+                          between phases) + capacity-clamped allgather;
+                          every clamp drop folds into the EF residual
+                          (the global-residual rule).
   dense_allreduce         psum (the Cray-MPI/NCCL baseline).
 
 The bucket-uniform fast path (k entries per 512-bucket, paper §8.3) routes
@@ -32,9 +43,13 @@ import jax.numpy as jnp
 
 from repro.core import sparse_stream as ss
 from repro.core.sparse_stream import SENTINEL, SparseStream
-from repro.core.topk import UniformStream
+from repro.core.topk import UniformStream, _topk_lowers_everywhere
 from repro.core.qsgd import QSGDConfig, quantize, dequantize
-from repro.core.cost_model import select_algorithm
+from repro.core.cost_model import (
+    balanced_shard_cap,
+    rearranged_round_caps,
+    select_algorithm,
+)
 from repro.kernels.bucket_scatter.ops import bucket_scatter
 
 
@@ -174,6 +189,143 @@ def ssar_split_allgather_inside(
     all_val = jax.lax.all_gather(merged.val, axis_name, tiled=True)
     total_nnz = jax.lax.psum(merged.nnz, axis_name)
     return SparseStream(all_idx, all_val, total_nnz)
+
+
+# --------------------------------------------------------------------------
+# Near-optimal portfolio (DESIGN.md §9): capacity-clamped algorithms.
+# Both return (dense sum, fold): ``fold`` is the pre-scale mass this rank
+# clamped off the wire, to be added into its EF residual by the executor —
+# the SparDL "global residual" rule. Under non-binding caps (e.g. full
+# index overlap) fold == 0 and the result equals the dense reference.
+# --------------------------------------------------------------------------
+
+
+def _top_cap_indices(mag: jax.Array, cap: int) -> jax.Array:
+    """Indices of the ``cap`` largest magnitudes (ties -> lower index;
+    both lax.top_k and a stable descending argsort break ties that way,
+    so every rank picks deterministically whatever the lowering)."""
+    if _topk_lowers_everywhere():
+        _, idx = jax.lax.top_k(mag, cap)
+        return idx
+    return jnp.argsort(-mag, stable=True)[:cap]
+
+
+def _take_top_stream(s: SparseStream, mask: jax.Array, cap: int):
+    """Top-``cap``-|value| masked entries of ``s``, plus the clamped rest.
+
+    Returns (kept stream of capacity ``cap`` sorted by index, (drop_idx,
+    drop_val) SENTINEL-padded arrays of the masked entries past the cap).
+    Magnitude ties break toward the lower index (streams are index-sorted
+    and the argsort is stable), deterministic across ranks."""
+    cap = min(cap, s.capacity)
+    neg = jnp.where(mask, -jnp.abs(s.val), jnp.inf)
+    order = jnp.argsort(neg, stable=True)   # masked first, big |v| first
+    idx_o, val_o, m_o = s.idx[order], s.val[order], mask[order]
+    sel_i = jnp.where(m_o[:cap], idx_o[:cap], SENTINEL)
+    sel_v = jnp.where(m_o[:cap], val_o[:cap], 0)
+    sel_i, sel_v = jax.lax.sort((sel_i, sel_v), num_keys=1)
+    nnz = jnp.minimum(jnp.sum(mask), cap).astype(jnp.int32)
+    drop_i = jnp.where(m_o[cap:], idx_o[cap:], SENTINEL)
+    drop_v = jnp.where(m_o[cap:], val_o[cap:], 0)
+    return SparseStream(sel_i, sel_v, nnz), (drop_i, drop_v)
+
+
+def ssar_balanced_split_inside(
+    u: UniformStream,
+    *,
+    axis_name: str,
+    p: int,
+    impl: str = "auto",
+) -> tuple[jax.Array, jax.Array]:
+    """Balanced split-and-gather (Ok-Top-k style, DESIGN.md §9).
+
+    Split phase: the bucket-uniform a2a route (exactly balanced by
+    construction — every rank receives (P-1)/P * k items, the O(k)
+    balance bound with eps=0). Owner phase: scatter-add the received
+    contributions into my range, then re-top-k to the
+    ``balanced_shard_cap`` capacity. Gather phase: allgather the clamped
+    (idx, val) shards — (P-1) * cap items instead of split_allgather's
+    O(kP) worst-case range union. Returns (dense (n,), fold (n,)): fold
+    carries my range's clamped-off partial sums (zero when the cap does
+    not bind, e.g. full index overlap)."""
+    nb, k = u.lidx.shape
+    b = u.bucket_size
+    n = nb * b
+    lidx, val = _split_uniform(u, axis_name, p)
+    shard = _reduce_range_dense(lidx, val, b, impl=impl)   # (n/p,) owner sums
+    range_n = shard.shape[0]
+    cap = min(balanced_shard_cap(nb * k, p, n), range_n)
+    sel_idx = _top_cap_indices(jnp.abs(shard), cap)
+    sel_val = shard[sel_idx]
+    selected = jnp.zeros_like(shard).at[sel_idx].set(sel_val)
+    my_rank = jax.lax.axis_index(axis_name)
+    base = (my_rank * range_n).astype(jnp.int32)
+    gidx = sel_idx.astype(jnp.int32) + base
+    all_idx = jax.lax.all_gather(gidx, axis_name, tiled=True)   # (p*cap,)
+    all_val = jax.lax.all_gather(sel_val, axis_name, tiled=True)
+    dense = jnp.zeros((n,), shard.dtype).at[all_idx].add(all_val, mode="drop")
+    fold = jax.lax.dynamic_update_slice(
+        jnp.zeros((n,), shard.dtype), shard - selected, (base,))
+    return dense, fold
+
+
+def ssar_rearranged_rs_inside(
+    u: UniformStream,
+    *,
+    axis_name: str,
+    p: int,
+) -> tuple[jax.Array, jax.Array]:
+    """Rearranged reduce-scatter + allgather (SparDL style, DESIGN.md §9).
+
+    log2(P) recursive-halving rounds: each round partitions my current
+    index range at its midpoint, ships the partner's half as a stream
+    (ppermute), and merges the received half — stream form end-to-end,
+    no densify between phases. Capacities follow
+    ``rearranged_round_caps``; entries past a send/merge cap are the
+    smallest-magnitude ones and are accumulated into ``fold`` at their
+    global coordinate (the global-residual rule) instead of being lost.
+    Final phase: allgather of the disjoint owned shards. Returns
+    (dense (n,), fold (n,))."""
+    assert p & (p - 1) == 0, "P must be a power of two (paper assumption 2)"
+    nb, kpb = u.lidx.shape
+    n = u.n
+    caps = rearranged_round_caps(nb * kpb, n, p)
+    s = u.to_stream()
+    my_rank = jax.lax.axis_index(axis_name)
+    fold = jnp.zeros((n,), s.val.dtype)
+    lo = jnp.zeros((), jnp.int32)
+    length = n
+    for t, (send_cap, merged_cap) in enumerate(caps):
+        dist = p >> (t + 1)
+        perm = _xor_perm(p, dist)
+        half = length // 2
+        mid = lo + half
+        keep_lower = (my_rank & dist) == 0      # MSB-first: rank r ends
+        valid = s.idx != SENTINEL               # owning [r*n/p, (r+1)*n/p)
+        in_lower = s.idx < mid
+        send_mask = valid & (in_lower ^ keep_lower)
+        keep_mask = valid & ~(in_lower ^ keep_lower)
+        # Keep side stays at full capacity (no clamp, no drop) — only the
+        # wire and the merged result are capacity-bound.
+        kept = SparseStream(jnp.where(keep_mask, s.idx, SENTINEL),
+                            jnp.where(keep_mask, s.val, 0),
+                            jnp.sum(keep_mask).astype(jnp.int32))
+        sent, (sd_i, sd_v) = _take_top_stream(s, send_mask, send_cap)
+        fold = fold.at[sd_i].add(sd_v, mode="drop")
+        recv = _exchange(sent, axis_name, perm)
+        merged = ss.merge(kept, recv, kept.capacity + recv.capacity)
+        clamped, (md_i, md_v) = _take_top_stream(
+            merged, merged.idx != SENTINEL, merged_cap)
+        fold = fold.at[md_i].add(md_v, mode="drop")
+        s = clamped
+        lo = jnp.where(keep_lower, lo, mid).astype(jnp.int32)
+        length = half
+    # Owned ranges are disjoint: the allgather is plain concatenation and
+    # the scatter-add places each shard at its global coordinates.
+    all_idx = jax.lax.all_gather(s.idx, axis_name, tiled=True)
+    all_val = jax.lax.all_gather(s.val, axis_name, tiled=True)
+    dense = jnp.zeros((n,), s.val.dtype).at[all_idx].add(all_val, mode="drop")
+    return dense, fold
 
 
 # --------------------------------------------------------------------------
@@ -373,6 +525,15 @@ def sparse_allreduce_inside(
         )
     if algorithm == "ssar_split_allgather":
         return ReduceOut(stream=ssar_split_allgather_inside(u, axis_name=axis_name, p=p))
+    if algorithm == "ssar_balanced_split":
+        # Standalone wrapper: no EF residual to fold the clamp drops into
+        # (the plan executor keeps them); under non-binding caps fold==0.
+        dense, _fold = ssar_balanced_split_inside(
+            u, axis_name=axis_name, p=p, impl=impl)
+        return ReduceOut(dense=dense)
+    if algorithm == "ssar_rearranged_rs":
+        dense, _fold = ssar_rearranged_rs_inside(u, axis_name=axis_name, p=p)
+        return ReduceOut(dense=dense)
     if algorithm == "dsar_split_allgather":
         return ReduceOut(
             dense=dsar_split_allgather_inside(

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Callable, Optional
 
 from .density import expected_nnz
 from .sparse_stream import INDEX_BYTES, delta_threshold
@@ -106,6 +107,105 @@ def t_dsar_split_allgather(
     return lo, hi
 
 
+# ---------------------------------------------------------------------------
+# Near-optimal portfolio (DESIGN.md §9): capacity-clamped algorithms.
+# Both bound the END representation to O(k) items per rank; entries past a
+# clamp are never silently lost — the executor folds them into the owning
+# bucket's EF residual (the "global residual" rule).
+# ---------------------------------------------------------------------------
+
+BALANCE_EPS = 0.25  # headroom of the balanced/rearranged capacity clamps
+
+
+def balanced_shard_cap(k: int, p: int, n: Optional[int] = None,
+                       eps: float = BALANCE_EPS) -> int:
+    """Per-owner output capacity of ``ssar_balanced_split``: the balance
+    pass re-top-k's each owned range down to ~(k/P)(1+eps) entries — the
+    Ok-Top-k O(k) traffic bound. Never exceeds the owned range length."""
+    cap = max(1, math.ceil(k / p * (1.0 + eps)))
+    if n is not None:
+        cap = min(cap, -(-n // p))
+    return cap
+
+
+def rearranged_round_caps(k: int, n: int, p: int,
+                          eps: float = BALANCE_EPS) -> list[tuple[int, int]]:
+    """(send_cap, merged_cap) per recursive-halving round of
+    ``ssar_rearranged_rs``. Round 0 sends exactly k/2 items (bucket-
+    uniform streams hold exactly half their entries in each half-range);
+    round t >= 1 sends and keeps at most k(1+eps)/2^(t+1). Entries past
+    a cap are the smallest-magnitude ones and fold into the EF residual,
+    so total traffic stays O(k) without losing gradient mass."""
+    caps = []
+    for t in range(int(math.log2(p))):
+        half = n >> (t + 1)
+        merged = min(half, max(1, math.ceil(k * (1.0 + eps) / (1 << (t + 1)))))
+        send = min(half, max(1, -(-k // 2))) if t == 0 else merged
+        caps.append((send, merged))
+    return caps
+
+
+def t_ssar_balanced_split(
+    p: int, k: int, n: int, net: NetworkParams = DEFAULT_NET,
+    reduced_nnz: float | None = None,
+) -> tuple[float, float, float]:
+    """(lower, expected, upper) for ssar_balanced_split (Ok-Top-k style).
+
+    Same latency shape as split_allgather ((P-1) direct split sends +
+    log2(P) allgather rounds), but the gather phase ships each owner's
+    re-top-k'd shard at the fixed (k/P)(1+eps) capacity instead of the
+    O(kP) worst-case range union: total bandwidth <= k(2+eps) beta_s.
+    ``reduced_nnz`` replaces the uniform-model reduced size, as in
+    :func:`t_ssar_split_allgather`.
+    """
+    lat = (p - 1) * net.alpha + math.log2(p) * net.alpha
+    cap = float(balanced_shard_cap(k, p, n))
+    split = (p - 1) / p * k
+    kk = (reduced_nnz if reduced_nnz is not None else expected_nnz(k, n, p))
+    kk = min(max(kk, 0.0), float(p * k), float(n))
+    lo = lat + (split + (p - 1) * min(k / p, cap)) * net.beta_s
+    hi = lat + (split + (p - 1) * cap) * net.beta_s
+    exp = lat + (split + (p - 1) * min(kk / p, cap)) * net.beta_s
+    return lo, min(max(exp, lo), hi), hi
+
+
+def t_ssar_rearranged_rs(
+    p: int, k: int, n: int, net: NetworkParams = DEFAULT_NET,
+    reduced_nnz: float | None = None,
+) -> tuple[float, float, float]:
+    """(lower, expected, upper) for ssar_rearranged_rs (SparDL style).
+
+    log2(P) recursive-halving rounds in stream form (one ppermute each,
+    no densify between phases) followed by a log2(P)-round allgather of
+    the capacity-clamped owned shards: latency 2 log2(P) alpha — the
+    Rabenseifner latency, (P-1)x below the split algorithms — and
+    bandwidth <= ~2k(1+eps) beta_s. ``reduced_nnz`` rescales the
+    per-round uniform fill-in curve as in t_ssar_recursive_double.
+    """
+    caps = rearranged_round_caps(k, n, p)
+    lat = 2 * math.log2(p) * net.alpha
+    scale = 1.0
+    if reduced_nnz is not None:
+        uniform_final = expected_nnz(k, n, p)
+        if uniform_final > 0:
+            scale = reduced_nnz / uniform_final
+    rs_lo = rs_exp = rs_hi = 0.0
+    for t, (send_cap, _) in enumerate(caps):
+        # Entering round t the stream holds ~fill(2^t)/2^t entries of its
+        # current range; it sends the half belonging to the partner.
+        fill = min(expected_nnz(k, n, 2 ** t) * scale,
+                   float((2 ** t) * k), float(n))
+        rs_exp += min(fill / (1 << (t + 1)), float(send_cap))
+        rs_lo += min(k / (1 << (t + 1)), float(send_cap))
+        rs_hi += float(send_cap)
+    final_cap = float(caps[-1][1] if caps else n)
+    fill_p = min(expected_nnz(k, n, p) * scale, float(p * k), float(n))
+    lo = lat + (rs_lo + (p - 1) * min(k / p, final_cap)) * net.beta_s
+    hi = lat + (rs_hi + (p - 1) * final_cap) * net.beta_s
+    exp = lat + (rs_exp + (p - 1) * min(fill_p / p, final_cap)) * net.beta_s
+    return lo, min(max(exp, lo), hi), hi
+
+
 def t_stream_allgather(p: int, cap_rows: int, d: int,
                        net: NetworkParams = DEFAULT_NET) -> float:
     """Row-stream all-gather: the serve-side activation exchange
@@ -129,8 +229,27 @@ def stream_wire_bytes(p: int, cap_rows: int, d: int, isize: int = 4) -> float:
 
 def parse_stream_cap(algorithm: str) -> int:
     """Row capacity of a ``stream_gather@<cap>`` serve algorithm tag (the
-    capacity is part of the plan signature, so it rides the string)."""
-    return int(algorithm.split("@", 1)[1])
+    capacity is part of the plan signature, so it rides the string).
+
+    Raises ValueError on malformed tags: the tag is checkpoint/user input
+    (plan signatures, replan overrides), and the opaque ``int()`` crash it
+    used to produce pointed at nothing."""
+    head, sep, tail = algorithm.partition("@")
+    if head != "stream_gather" or not sep:
+        raise ValueError(
+            f"malformed stream algorithm tag {algorithm!r}: "
+            "expected 'stream_gather@<cap>'")
+    try:
+        cap = int(tail)
+    except ValueError:
+        raise ValueError(
+            f"malformed stream algorithm tag {algorithm!r}: "
+            f"capacity {tail!r} is not an integer") from None
+    if cap <= 0:
+        raise ValueError(
+            f"malformed stream algorithm tag {algorithm!r}: "
+            f"capacity must be positive, got {cap}")
+    return cap
 
 
 def dsar_speedup_cap(n: int, isize: int = 4) -> float:
@@ -140,8 +259,149 @@ def dsar_speedup_cap(n: int, isize: int = 4) -> float:
     return 2.0 / kappa
 
 
-ALL_ALGORITHMS = ("ssar_recursive_double", "ssar_split_allgather",
-                  "dsar_split_allgather", "dense")
+# ---------------------------------------------------------------------------
+# Algorithm registry: the ONE place an algorithm declares its modeled cost
+# and wire accounting. select_algorithm / bucket_time / bucket_wire_bytes
+# all dispatch through it, so adding an algorithm is one registration —
+# the chain of hand-written if/elif dispatches is gone.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class AlgorithmEntry:
+    """One registered allreduce algorithm.
+
+    cost_fn(p, k, n, net, value_bits, reduced_nnz) -> expected seconds;
+    wire_fn(p, k, n, nnz, value_bits, isize) -> per-rank bytes per step
+    (pure arithmetic in ``nnz`` — it may be a traced telemetry scalar);
+    sparse_result: the end-representation grows with fill-in, so the
+    delta switchover (paper §5.3.3) rules it out once E[K] >= delta;
+    output_cap_fn(p, k, n) -> post-reduction nnz bound of a capacity-
+    clamped algorithm (None = unclamped). A clamped algorithm whose
+    bound stays under delta SURVIVES the switchover: its result cannot
+    densify past the bound, whatever the measured fill-in."""
+
+    cost_fn: Callable
+    wire_fn: Callable
+    sparse_result: bool = False
+    output_cap_fn: Optional[Callable] = None
+
+
+def _clamped_nnz(nnz, cap: float):
+    """Clamp a host-side nnz at an algorithm's output capacity. A traced
+    telemetry nnz is measured POST-clamp (count_nonzero of the clamped
+    result), so it already respects the cap and passes through."""
+    if isinstance(nnz, (int, float)):
+        return min(float(nnz), float(cap))
+    return nnz
+
+
+def _cost_ssar_recursive_double(p, k, n, net, value_bits, reduced_nnz):
+    return t_ssar_recursive_double(p, k, n, net, reduced_nnz=reduced_nnz)[1]
+
+
+def _cost_ssar_split_allgather(p, k, n, net, value_bits, reduced_nnz):
+    return t_ssar_split_allgather(p, k, n, net, reduced_nnz=reduced_nnz)[1]
+
+
+def _cost_dsar_split_allgather(p, k, n, net, value_bits, reduced_nnz):
+    return sum(t_dsar_split_allgather(p, k, n, net, value_bits)) / 2
+
+
+def _cost_dense(p, k, n, net, value_bits, reduced_nnz):
+    return t_dense_allreduce(p, n, net)
+
+
+def _cost_ssar_balanced_split(p, k, n, net, value_bits, reduced_nnz):
+    return t_ssar_balanced_split(p, k, n, net, reduced_nnz=reduced_nnz)[1]
+
+
+def _cost_ssar_rearranged_rs(p, k, n, net, value_bits, reduced_nnz):
+    return t_ssar_rearranged_rs(p, k, n, net, reduced_nnz=reduced_nnz)[1]
+
+
+def _wire_dense(p, k, n, nnz, value_bits, isize):
+    # compressed-dense end-representation OR raw psum: one dense
+    # allreduce of the n-vector (Rabenseifner accounting).
+    return 2 * (p - 1) / p * n * isize
+
+
+def _wire_ssar_recursive_double(p, k, n, nnz, value_bits, isize):
+    # log2(P) rounds; round t carries ~fill-in-many items. Charged at
+    # the measured final fill per round (upper-bounds early rounds).
+    return math.log2(p) * nnz * (isize + INDEX_BYTES)
+
+
+def _wire_ssar_split_allgather(p, k, n, nnz, value_bits, isize):
+    item = isize + INDEX_BYTES
+    return (p - 1) / p * k * item + (p - 1) / p * nnz * item
+
+
+def _wire_dsar_split_allgather(p, k, n, nnz, value_bits, isize):
+    # value_bits < 32 also adds one fp32 scale per QSGD bucket; the
+    # exact figure lives in plan.wire_bytes — telemetry keeps the
+    # dominant terms only.
+    item = isize + INDEX_BYTES
+    return (p - 1) / p * k * item + (p - 1) / p * n * value_bits / 8
+
+
+def _wire_ssar_balanced_split(p, k, n, nnz, value_bits, isize):
+    # split phase as split_allgather; the gather phase is bounded by the
+    # per-owner re-top-k capacity — the O(k) bound that is the point.
+    item = isize + INDEX_BYTES
+    cap_total = p * balanced_shard_cap(k, p, n)
+    return ((p - 1) / p * k
+            + (p - 1) / p * _clamped_nnz(nnz, cap_total)) * item
+
+
+def _wire_ssar_rearranged_rs(p, k, n, nnz, value_bits, isize):
+    # reduce-scatter rounds ship at most send_cap items each (static
+    # caps); the allgather ships the measured (clamped) union.
+    item = isize + INDEX_BYTES
+    caps = rearranged_round_caps(k, n, p)
+    final_cap = caps[-1][1] if caps else n
+    rs = float(sum(send for send, _ in caps))
+    return (rs + (p - 1) / p * _clamped_nnz(nnz, p * final_cap)) * item
+
+
+def _balanced_output_cap(p, k, n):
+    return p * balanced_shard_cap(k, p, n)
+
+
+def _rearranged_output_cap(p, k, n):
+    caps = rearranged_round_caps(k, n, p)
+    return p * (caps[-1][1] if caps else n)
+
+
+ALGORITHM_REGISTRY: dict[str, AlgorithmEntry] = {
+    "ssar_recursive_double": AlgorithmEntry(
+        _cost_ssar_recursive_double, _wire_ssar_recursive_double,
+        sparse_result=True),
+    "ssar_split_allgather": AlgorithmEntry(
+        _cost_ssar_split_allgather, _wire_ssar_split_allgather,
+        sparse_result=True),
+    "dsar_split_allgather": AlgorithmEntry(
+        _cost_dsar_split_allgather, _wire_dsar_split_allgather),
+    "dense": AlgorithmEntry(_cost_dense, _wire_dense),
+    "ssar_balanced_split": AlgorithmEntry(
+        _cost_ssar_balanced_split, _wire_ssar_balanced_split,
+        sparse_result=True, output_cap_fn=_balanced_output_cap),
+    "ssar_rearranged_rs": AlgorithmEntry(
+        _cost_ssar_rearranged_rs, _wire_ssar_rearranged_rs,
+        sparse_result=True, output_cap_fn=_rearranged_output_cap),
+}
+
+ALL_ALGORITHMS = tuple(ALGORITHM_REGISTRY)
+
+
+def algorithm_output_cap(algorithm: str, p: int, k: int, n: int):
+    """Post-reduction nnz bound of a capacity-clamped algorithm (None
+    for unclamped ones): the quantity the delta switchover compares to
+    delta, both in :func:`select_algorithm` and in the adaptive
+    controller's forced-switch rule."""
+    entry = ALGORITHM_REGISTRY.get(algorithm)
+    if entry is None or entry.output_cap_fn is None:
+        return None
+    return int(entry.output_cap_fn(p, k, n))
 
 
 def select_algorithm(
@@ -153,15 +413,19 @@ def select_algorithm(
     allow: tuple = ALL_ALGORITHMS,
     reduced_nnz: float | None = None,
 ) -> str:
-    """THE auto-selection entry point: pick the cheapest algorithm by
-    expected alpha-beta cost (paper §5.3, DESIGN.md §3.3). ``k`` is the
-    per-rank selected item count, ``n`` the vector's canonical length.
+    """THE auto-selection entry point: pick the cheapest registered
+    algorithm by expected alpha-beta cost (paper §5.3, DESIGN.md §3.3).
+    ``k`` is the per-rank selected item count, ``n`` the vector's
+    canonical length.
 
     Mirrors the paper's guidance: recursive doubling for small data
     (latency-bound), split_allgather for large sparse results, DSAR once
-    the result exceeds the delta threshold. ``allow`` restricts the
-    candidate set — the batched (model-sharded rows) pipeline only
-    implements DSAR/dense, and the fusion planner passes that in.
+    the result exceeds the delta threshold — plus the capacity-clamped
+    portfolio (DESIGN.md §9), which survives the delta switchover as
+    long as its clamped output bound stays under delta. ``allow``
+    restricts the candidate set — the batched (model-sharded rows)
+    pipeline only implements DSAR/dense, and the fusion planner passes
+    that in.
 
     ``reduced_nnz`` closes the loop (DESIGN.md §7): a MEASURED
     post-reduction nnz (adaptive telemetry) replaces the uniform-model
@@ -172,20 +436,26 @@ def select_algorithm(
     delta = delta_threshold(n, net.isize)
     exp_k = (reduced_nnz if reduced_nnz is not None
              else expected_nnz(k, n, p))
-    candidates = {
-        "ssar_recursive_double":
-            t_ssar_recursive_double(p, k, n, net, reduced_nnz=reduced_nnz)[1],
-        "ssar_split_allgather":
-            t_ssar_split_allgather(p, k, n, net, reduced_nnz=reduced_nnz)[1],
-        "dsar_split_allgather":
-            sum(t_dsar_split_allgather(p, k, n, net, value_bits)) / 2,
-    }
-    if exp_k >= delta:
-        # Sparse end-representation no longer pays (paper §5.3.3).
-        candidates.pop("ssar_recursive_double")
-        candidates.pop("ssar_split_allgather")
-        candidates["dense"] = t_dense_allreduce(p, n, net)
-    candidates = {a: t for a, t in candidates.items() if a in allow}
+    fill_dense = exp_k >= delta
+    candidates = {}
+    for name, entry in ALGORITHM_REGISTRY.items():
+        if name not in allow:
+            continue
+        if name == "dense":
+            # dense competes only past the switchover: below it, the
+            # compressed-stream paths always model cheaper.
+            if not fill_dense:
+                continue
+        elif entry.sparse_result and fill_dense:
+            # Sparse end-representation no longer pays (paper §5.3.3) —
+            # EXCEPT capacity-clamped algorithms whose output bound
+            # stays under delta: their result cannot densify.
+            cap = (entry.output_cap_fn(p, k, n)
+                   if entry.output_cap_fn is not None else None)
+            if cap is None or cap >= delta:
+                continue
+        candidates[name] = entry.cost_fn(p, k, n, net, value_bits,
+                                         reduced_nnz)
     if not candidates:  # everything filtered: dense always works
         return "dense"
     return min(candidates, key=candidates.get)
@@ -223,19 +493,12 @@ def bucket_time(algorithm: str, p: int, k: int, n: int,
     ``stream_gather@<cap>`` algorithm family, where ``k`` is the ROW
     width (d) and the row capacity rides the tag: the cost is capacity-
     bound, not nnz-bound, because the stream ships at fixed cap."""
-    if algorithm == "dense":
-        return t_dense_allreduce(p, n, net)
     if algorithm.startswith("stream_gather"):
         return t_stream_allgather(p, parse_stream_cap(algorithm), k, net)
-    if algorithm == "ssar_recursive_double":
-        return t_ssar_recursive_double(p, k, n, net,
-                                       reduced_nnz=reduced_nnz)[1]
-    if algorithm == "ssar_split_allgather":
-        return t_ssar_split_allgather(p, k, n, net,
-                                      reduced_nnz=reduced_nnz)[1]
-    if algorithm == "dsar_split_allgather":
-        return sum(t_dsar_split_allgather(p, k, n, net, value_bits)) / 2
-    raise ValueError(f"unknown algorithm {algorithm!r}")
+    entry = ALGORITHM_REGISTRY.get(algorithm)
+    if entry is None:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
+    return entry.cost_fn(p, k, n, net, value_bits, reduced_nnz)
 
 
 def bucket_wire_bytes(algorithm: str, p: int, k: int, n: int,
@@ -244,28 +507,15 @@ def bucket_wire_bytes(algorithm: str, p: int, k: int, n: int,
     arithmetic in ``nnz`` (a traced scalar inside the telemetry emitter,
     or a float on the host), so the executor can report measured wire
     volume in-graph. ``nnz`` defaults to the worst case (p*k)."""
-    item = isize + INDEX_BYTES
-    if algorithm == "dense":
-        # compressed-dense end-representation OR raw psum: one dense
-        # allreduce of the n-vector (Rabenseifner accounting).
-        return 2 * (p - 1) / p * n * isize
     if algorithm.startswith("stream_gather"):
         # serve activation exchange: capacity-bound, k is the row width
         return stream_wire_bytes(p, parse_stream_cap(algorithm), k, isize)
+    entry = ALGORITHM_REGISTRY.get(algorithm)
+    if entry is None:
+        raise ValueError(f"unknown algorithm {algorithm!r}")
     if nnz is None:
         nnz = float(min(n, p * k))
-    if algorithm == "ssar_recursive_double":
-        # log2(P) rounds; round t carries ~fill-in-many items. Charged at
-        # the measured final fill per round (upper-bounds early rounds).
-        return math.log2(p) * nnz * item
-    if algorithm == "ssar_split_allgather":
-        return (p - 1) / p * k * item + (p - 1) / p * nnz * item
-    if algorithm == "dsar_split_allgather":
-        # value_bits < 32 also adds one fp32 scale per QSGD bucket; the
-        # exact figure lives in plan.wire_bytes — telemetry keeps the
-        # dominant terms only.
-        return (p - 1) / p * k * item + (p - 1) / p * n * value_bits / 8
-    raise ValueError(f"unknown algorithm {algorithm!r}")
+    return entry.wire_fn(p, k, n, nnz, value_bits, isize)
 
 
 def pod_wire_bytes(p_pod: int, n: int, cap: int,

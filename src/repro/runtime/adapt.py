@@ -29,7 +29,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
-from repro.core.cost_model import DEFAULT_NET, NetworkParams, bucket_time
+from repro.core.cost_model import (DEFAULT_NET, NetworkParams,
+                                   algorithm_output_cap, bucket_time)
 from repro.core.sparse_stream import delta_threshold
 
 
@@ -42,6 +43,7 @@ class AdaptConfig:
     patience: int = 2        # consecutive windows agreeing before a swap
     calibrate: bool = True   # fit NetworkParams from measured timings once
     pod_sparse: bool = True  # allow demoting the cross-pod dense psum
+    allow: Optional[tuple] = None  # restrict replan candidates (None = all)
 
 
 class TelemetryWindow:
@@ -149,8 +151,12 @@ class AdaptiveController:
         cfg = self.plan.cfg
         vb = cfg.qsgd_bits if cfg.qsgd_bits is not None else 32
         p = self.plan.dp_total
-        candidate = self.plan.replan(densities, self.net,
-                                     pod_sparse=self._pod_flags(densities))
+        replan_kw = {"pod_sparse": self._pod_flags(densities)}
+        if self.cfg.allow is not None:
+            # SyncPlan.replan narrows its candidate set; ServePlan has no
+            # allow knob (its portfolio is the stream-cap ladder).
+            replan_kw["allow"] = self.cfg.allow
+        candidate = self.plan.replan(densities, self.net, **replan_kw)
         # Hysteresis: revert any per-bucket change whose modeled win at
         # the measured density is under the threshold. Exception: when
         # the measured fill-in crossed the delta threshold, the sparse
@@ -165,8 +171,14 @@ class AdaptiveController:
             if b.algorithm == old:
                 continue
             nnz = densities.get(b.name)
+            # Capacity-clamped algorithms (output_cap < delta) keep O(k)
+            # traffic whatever the fill-in — the delta switchover rule
+            # only binds algorithms whose result width tracks the fill.
+            cap = algorithm_output_cap(old, p, k, b.n)
             forced = (old.startswith("ssar") and nnz is not None
-                      and nnz >= delta_threshold(b.n, self.net.isize))
+                      and nnz >= delta_threshold(b.n, self.net.isize)
+                      and (cap is None
+                           or cap >= delta_threshold(b.n, self.net.isize)))
             # Plans may carry their own forced-switch rule (same principle
             # as the delta crossing — a correctness boundary, not a perf
             # heuristic): the serve ServePlan forces a stream off its

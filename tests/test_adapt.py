@@ -106,9 +106,15 @@ def test_replan_measured_density_follows_delta():
 
     _, plan = _toy_plan(algorithm="ssar_split_allgather")
     b = next(b for b in plan.buckets if b.sparse)
+    k = next(plan.bucket_k(g, bb) for g in plan.groups for bb in g.buckets
+             if bb.name == b.name)
     dense_plan = plan.replan({b.name: float(delta_threshold(b.n))})
-    assert dict(dense_plan.algorithms())[b.name] in (
-        "dsar_split_allgather", "dense")
+    algo = dict(dense_plan.algorithms())[b.name]
+    # past delta only dense-width or capacity-clamped (DESIGN.md §9)
+    # representations remain; an uncapped SSAR must be gone
+    cap = cm.algorithm_output_cap(algo, 8, k, b.n)
+    assert (algo in ("dsar_split_allgather", "dense")
+            or (cap is not None and cap < delta_threshold(b.n)))
     sparse_plan = plan.replan({b.name: 8.0})
     assert dict(sparse_plan.algorithms())[b.name].startswith("ssar")
 
@@ -197,12 +203,20 @@ def test_controller_delta_forced_switch_bypasses_hysteresis():
     _, plan = _toy_plan(n=1 << 15, algorithm="ssar_split_allgather")
     ctrl = _controller(plan, hysteresis=0.99, patience=1)
     b = next(b for b in plan.buckets if b.sparse)
+    k = next(plan.bucket_k(g, bb) for g in plan.groups for bb in g.buckets
+             if bb.name == b.name)
     over = {b.name: float(delta_threshold(b.n) + 1)}
     accepted = None
     for _ in range(4):
         accepted = ctrl.observe_step(over) or accepted
     assert accepted is not None, "delta switchover must not be vetoed"
-    assert not dict(accepted.algorithms())[b.name].startswith("ssar")
+    # the forced switch lands on a representation that cannot densify:
+    # dense/DSAR or a capacity-clamped portfolio algorithm — never an
+    # uncapped SSAR
+    algo = dict(accepted.algorithms())[b.name]
+    cap = cm.algorithm_output_cap(algo, 8, k, b.n)
+    assert (not algo.startswith("ssar")
+            or (cap is not None and cap < delta_threshold(b.n)))
 
 
 # --------------------------------------------------------------------------

@@ -62,11 +62,23 @@ def test_recursive_double_wins_small_data():
 
 
 def test_dense_or_dsar_wins_when_fill_in_dense():
-    """§5.3.3: when E[K] >= delta, sparse end-representation can't win."""
+    """§5.3.3: when E[K] >= delta, a fill-tracking sparse
+    end-representation can't win. Among the CLASSIC algorithms that
+    leaves DSAR/dense; the capacity-clamped portfolio (DESIGN.md §9) is
+    exempt — its output bound can stay under delta."""
     p, n = 1024, 1 << 20
     k = n // 8  # heavy per-node density -> dense result
-    choice = cost_model.select_algorithm(p, k, n)
+    legacy = ("ssar_recursive_double", "ssar_split_allgather",
+              "dsar_split_allgather", "dense")
+    choice = cost_model.select_algorithm(p, k, n, allow=legacy)
     assert choice in ("dsar_split_allgather", "dense")
+    # unrestricted, the switchover may land on a clamped portfolio
+    # algorithm instead — but never on an UNCAPPED sparse representation
+    full = cost_model.select_algorithm(p, k, n)
+    cap = cost_model.algorithm_output_cap(full, p, k, n)
+    delta = delta_threshold(n)
+    assert (full in ("dsar_split_allgather", "dense")
+            or (cap is not None and cap < delta))
 
 
 def test_lemma52_speedup_cap():
