@@ -55,6 +55,14 @@ def _drift_setup():
     return cfg, plan
 
 
+def bench_meta() -> dict:
+    """BENCH-header extras (benchmarks/run.py schema v2): the plan this
+    module's drift run starts from, git-describe-ably."""
+    _, plan = _drift_setup()
+    return {"plan_signature": plan.signature(), "p_ranks": P_RANKS,
+            "n_elems": N}
+
+
 def _drift_grads(cfg, step: int, rng) -> jnp.ndarray:
     """(P, N) per-rank gradients. Phase A (step < PHASE_STEPS): every
     rank's TopK hits the SAME hot coordinates -> full overlap. Phase B:

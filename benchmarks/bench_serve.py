@@ -55,6 +55,16 @@ def _setup():
     return mesh, model, params
 
 
+def bench_meta() -> dict:
+    """BENCH-header extras (benchmarks/run.py schema v2): the serve plan
+    the continuous engine starts from (mesh (4,2): 2 model shards)."""
+    from repro.comm.plan import build_serve_plan
+
+    plan = build_serve_plan(2, SLOTS, D_MODEL, algorithm="dense")
+    return {"serve_plan_signature": plan.signature(),
+            "slots": SLOTS, "cache_len": CACHE}
+
+
 def _workload():
     """One long request rides EACH static group: the static engine
     decodes every group to its longest member, while the scheduler runs
@@ -149,4 +159,12 @@ def run():
          f"low_occupancy_wire_cut={lo_cut:.1%},"
          f"swaps={len(ra.swap_log)},ge1_drain_swap={len(drain_swaps) >= 1},"
          f"outputs_equal_dense={outputs_equal}"),
+        # latency distributions in DECODE-STEP units (deterministic on
+        # the fixed trace; multiply by wall_s/decode_steps for seconds)
+        ("serve_latency", ra.latency["e2e"]["p99"],
+         f"ttft_p50={ra.latency['ttft']['p50']:.1f},"
+         f"ttft_p99={ra.latency['ttft']['p99']:.1f},"
+         f"tpot_p50={ra.latency['tpot']['p50']:.2f},"
+         f"queue_p99={ra.latency['queue_delay']['p99']:.1f},"
+         f"e2e_p99={ra.latency['e2e']['p99']:.1f}"),
     ]

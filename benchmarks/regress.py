@@ -1,0 +1,188 @@
+"""bench-regress: compare fresh BENCH_*.json against committed baselines.
+
+Usage (the CI ``bench-regress`` step):
+
+  PYTHONPATH=src python -m benchmarks.regress --fresh bench-out \
+      [--baselines benchmarks/baselines] [--tol 0.25] [--update]
+
+Headline cells (ISSUE 7 satellite): the cross-PR perf trail distilled to
+what the paper claims —
+
+  adapt µs/step        BENCH_bench_adapt.json / adapt_drift_adaptive
+                       us_per_call (modeled cost at measured telemetry;
+                       deterministic) — lower is better
+  serve tok/s          BENCH_bench_serve.json / serve_continuous derived
+                       tok_per_s (wall-clock) — higher is better
+  portfolio wire bytes BENCH_bench_allreduce.json / portfolio_*_d* rows'
+                       derived wire_bytes (modeled; deterministic) —
+                       lower is better
+
+A cell regressing by more than ``--tol`` (fractional, default 0.25)
+fails the run with exit code 1. Missing files or rows only warn: the CI
+smoke job runs a module subset, and a renamed row should not brick CI
+silently-forever (the warning is the signal to refresh baselines).
+``--update`` copies the fresh files over the baselines instead of
+comparing (run it locally after an intentional perf change and commit
+the result). Both BENCH schemas load: v1 (flat row list) and v2
+({schema_version, meta, rows}).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+DEFAULT_TOL = 0.25
+
+BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            "baselines")
+
+
+def load_rows(path: str) -> dict[str, dict]:
+    """name -> row for either BENCH schema (v1 list, v2 object)."""
+    with open(path) as f:
+        doc = json.load(f)
+    rows = doc["rows"] if isinstance(doc, dict) else doc
+    return {r["name"]: r for r in rows}
+
+
+def parse_derived(derived: str) -> dict[str, str]:
+    """'k=v,k2=v2' derived strings -> dict (values stay strings)."""
+    out = {}
+    for part in str(derived).split(","):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k.strip()] = v.strip()
+    return out
+
+
+def _cell_us(row: dict) -> float:
+    return float(row["us_per_call"])
+
+
+def _cell_derived(row: dict, field: str) -> float:
+    return float(parse_derived(row.get("derived", ""))[field])
+
+
+def headline_cells(fresh_dir: str, baseline_dir: str) -> list[dict]:
+    """Resolve every headline cell present in BOTH trees. Each cell:
+    {label, fresh, baseline, higher_better}."""
+    cells = []
+
+    def both(fname):
+        fp = os.path.join(fresh_dir, fname)
+        bp = os.path.join(baseline_dir, fname)
+        if not os.path.exists(fp) or not os.path.exists(bp):
+            print(f"regress: skipping {fname} "
+                  f"(fresh={os.path.exists(fp)}, "
+                  f"baseline={os.path.exists(bp)})", file=sys.stderr)
+            return None
+        return load_rows(fp), load_rows(bp)
+
+    pair = both("BENCH_bench_adapt.json")
+    if pair:
+        fresh, base = pair
+        name = "adapt_drift_adaptive"
+        if name in fresh and name in base:
+            cells.append({"label": f"{name}.us_per_call",
+                          "fresh": _cell_us(fresh[name]),
+                          "baseline": _cell_us(base[name]),
+                          "higher_better": False})
+        else:
+            print(f"regress: row {name!r} missing", file=sys.stderr)
+
+    pair = both("BENCH_bench_serve.json")
+    if pair:
+        fresh, base = pair
+        name = "serve_continuous"
+        try:
+            cells.append({"label": f"{name}.tok_per_s",
+                          "fresh": _cell_derived(fresh[name], "tok_per_s"),
+                          "baseline": _cell_derived(base[name], "tok_per_s"),
+                          "higher_better": True})
+        except KeyError:
+            print(f"regress: {name!r} tok_per_s missing", file=sys.stderr)
+
+    pair = both("BENCH_bench_allreduce.json")
+    if pair:
+        fresh, base = pair
+        shared = [n for n in base
+                  if n.startswith("portfolio_") and "win" not in n
+                  and n in fresh]
+        for name in shared:
+            try:
+                cells.append({"label": f"{name}.wire_bytes",
+                              "fresh": _cell_derived(fresh[name],
+                                                     "wire_bytes"),
+                              "baseline": _cell_derived(base[name],
+                                                        "wire_bytes"),
+                              "higher_better": False})
+            except KeyError:
+                print(f"regress: {name!r} wire_bytes missing",
+                      file=sys.stderr)
+        if not shared:
+            print("regress: no shared portfolio_* rows", file=sys.stderr)
+    return cells
+
+
+def compare(cells: list[dict], tol: float) -> list[dict]:
+    """Returns the regressed cells (worse than baseline by > tol)."""
+    bad = []
+    for c in cells:
+        base, fresh = c["baseline"], c["fresh"]
+        if base == 0:
+            continue
+        # fractional regression, sign-normalized so positive == worse
+        reg = (base - fresh) / base if c["higher_better"] \
+            else (fresh - base) / base
+        c["regression"] = reg
+        if reg > tol:
+            bad.append(c)
+    return bad
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", type=str, required=True,
+                    help="directory with freshly produced BENCH_*.json")
+    ap.add_argument("--baselines", type=str, default=BASELINE_DIR)
+    ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
+                    help="max fractional regression per headline cell")
+    ap.add_argument("--update", action="store_true",
+                    help="copy fresh BENCH files over the baselines "
+                         "instead of comparing")
+    args = ap.parse_args()
+
+    if args.update:
+        os.makedirs(args.baselines, exist_ok=True)
+        import glob
+
+        for src in sorted(glob.glob(os.path.join(args.fresh,
+                                                 "BENCH_*.json"))):
+            dst = os.path.join(args.baselines, os.path.basename(src))
+            shutil.copy(src, dst)
+            print(f"regress: updated {dst}")
+        return
+
+    cells = headline_cells(args.fresh, args.baselines)
+    if not cells:
+        print("regress: no comparable headline cells found", file=sys.stderr)
+        return
+    bad = compare(cells, args.tol)
+    w = max(len(c["label"]) for c in cells)
+    for c in cells:
+        mark = "REGRESSED" if c in bad else "ok"
+        print(f"  {c['label']:<{w}}  baseline={c['baseline']:<12.4g} "
+              f"fresh={c['fresh']:<12.4g} "
+              f"delta={c.get('regression', 0.0):+7.1%}  {mark}")
+    if bad:
+        raise SystemExit(
+            f"bench-regress: {len(bad)} headline cell(s) regressed beyond "
+            f"{args.tol:.0%} — intentional? refresh with --update and "
+            f"commit benchmarks/baselines/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,27 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV and, per module, writes a
-machine-readable ``BENCH_<module>.json`` (list of
-``{name, us_per_call, derived}``) so the perf trajectory can be tracked
-across PRs (CI uploads the JSON as artifacts). Heavy modules can be
-filtered:
+machine-readable ``BENCH_<module>.json`` so the perf trajectory can be
+tracked across PRs (CI uploads the JSON as artifacts and
+``benchmarks/regress.py`` compares headline cells against the committed
+baselines). Heavy modules can be filtered:
+
   PYTHONPATH=src python -m benchmarks.run [--only density,allreduce,...]
                                           [--json-dir DIR]
+                                          [--trace] [--metrics-out PATH]
+
+BENCH file format (schema v2, DESIGN.md §10): an object
+``{"schema_version": 2, "meta": {...}, "rows": [...]}``. ``meta`` is the
+run-identity header — device count, backend, jax/python versions, git
+describe — plus whatever the module's optional ``bench_meta()`` hook
+adds (e.g. the plan signature a serve bench ran under), so files are
+comparable across PRs. ``rows`` is the old flat list (regress reads
+both formats).
+
+``--trace`` exports a Chrome-trace JSON per module
+(``TRACE_<module>.json`` next to the BENCH files) through the same
+``repro.obs`` layer every runtime uses; ``--metrics-out`` writes the
+combined metrics/event JSONL of the whole invocation.
 """
 from __future__ import annotations
 
@@ -19,8 +34,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
 import json
+import platform
+import subprocess
 import sys
 import traceback
+
+SCHEMA_VERSION = 2
 
 MODULES = {
     "density": "benchmarks.bench_density",          # Fig. 1 / Fig. 7
@@ -35,11 +54,42 @@ MODULES = {
 }
 
 
+def _git_describe() -> str:
+    try:
+        return subprocess.run(
+            ["git", "describe", "--always", "--dirty"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def run_meta() -> dict:
+    """The run-identity header shared by every BENCH_*.json of one
+    invocation; per-module ``bench_meta()`` extras are merged on top."""
+    import jax
+
+    return {
+        "device_count": jax.device_count(),
+        "backend": jax.default_backend(),
+        "jax_version": jax.__version__,
+        "python_version": platform.python_version(),
+        "platform": platform.platform(),
+        "git": _git_describe(),
+    }
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", type=str, default=None)
     ap.add_argument("--json-dir", type=str, default=".",
                     help="directory for the BENCH_<module>.json files")
+    ap.add_argument("--trace", action="store_true",
+                    help="export a Chrome-trace JSON per module "
+                         "(TRACE_<module>.json in --json-dir)")
+    ap.add_argument("--metrics-out", type=str, default=None,
+                    help="write the combined metrics/event JSONL here")
     args = ap.parse_args()
     names = args.only.split(",") if args.only else list(MODULES)
     unknown = [n for n in names if n not in MODULES]
@@ -47,29 +97,59 @@ def main() -> None:
         raise SystemExit(
             f"unknown benchmark modules {unknown}; choose from {list(MODULES)}")
 
+    from repro import obs as obs_mod
+
+    # one observability handle for the whole invocation — the SAME layer
+    # (and the same registry) the runtimes under benchmark thread through
+    obs = obs_mod.configure(trace=args.trace,
+                            metrics=bool(args.metrics_out) or args.trace)
+    meta = run_meta()
+
     print("name,us_per_call,derived")
     failed = []
     for name in names:
         modname = MODULES[name]
         try:
             mod = __import__(modname, fromlist=["run"])
-            rows = list(mod.run())
+            with obs.span(f"bench/{name}"):
+                rows = list(mod.run())
             for row_name, us, derived in rows:
                 print(f"{row_name},{us:.1f},{derived}")
+                obs.metrics.event("bench/row", module=name, name=row_name,
+                                  us_per_call=us, derived=derived)
             sys.stdout.flush()
             os.makedirs(args.json_dir, exist_ok=True)
             # file named after the bench MODULE (BENCH_bench_allreduce.json),
             # stable across any renaming of the CLI keys
             basename = modname.rsplit(".", 1)[-1]
+            mod_meta = dict(meta)
+            extra = getattr(mod, "bench_meta", None)
+            if callable(extra):
+                mod_meta.update(extra())
             with open(os.path.join(args.json_dir,
                                    f"BENCH_{basename}.json"), "w") as f:
-                json.dump(
-                    [{"name": r, "us_per_call": us, "derived": d}
-                     for r, us, d in rows], f, indent=1)
+                json.dump({
+                    "schema_version": SCHEMA_VERSION,
+                    "meta": mod_meta,
+                    "rows": [{"name": r, "us_per_call": us, "derived": d}
+                             for r, us, d in rows],
+                }, f, indent=1)
+            if args.trace:
+                from repro.obs import validate_span_tree
+
+                bad = validate_span_tree(obs.tracer.events)
+                if bad:  # cheap artifact sanity check, not a hard fail
+                    print(f"trace: {len(bad)} malformed span(s) after "
+                          f"{name}", file=sys.stderr)
+                obs.tracer.export(
+                    os.path.join(args.json_dir, f"TRACE_{basename}.json"),
+                    meta={**meta, "module": name})
         except Exception as e:  # pragma: no cover
             failed.append(name)
             print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
             traceback.print_exc()
+    if args.metrics_out:
+        obs.metrics.dump_jsonl(args.metrics_out, meta=meta)
     if failed:
         raise SystemExit(f"benchmark modules failed: {failed}")
 

@@ -47,8 +47,9 @@ def build(fast: bool):
     return mesh, model, params
 
 
-def run_static(mesh, model, params, batch: int, tokens: int):
-    engine = ServeEngine(model, mesh, params, cache_len=128, batch_size=batch)
+def run_static(mesh, model, params, batch: int, tokens: int, obs=None):
+    engine = ServeEngine(model, mesh, params, cache_len=128, batch_size=batch,
+                         obs=obs)
     prompts = np.random.default_rng(0).integers(
         0, 2048, (batch, 16)).astype(np.int32)
     t0 = time.perf_counter()
@@ -62,7 +63,7 @@ def run_static(mesh, model, params, batch: int, tokens: int):
     print("greedy decode is deterministic: OK")
 
 
-def run_continuous(mesh, model, params, batch: int, tokens: int):
+def run_continuous(mesh, model, params, batch: int, tokens: int, obs=None):
     rng = np.random.default_rng(0)
     n_req = 2 * batch
     arrivals = poisson_trace(n_req, rate=0.5, seed=0)
@@ -72,7 +73,8 @@ def run_continuous(mesh, model, params, batch: int, tokens: int):
                     arrival=float(arrivals[i]))
             for i in range(n_req)]
     engine = ContinuousServeEngine(model, mesh, params, cache_len=128,
-                                   batch_size=batch, dispatch="adaptive")
+                                   batch_size=batch, dispatch="adaptive",
+                                   obs=obs)
     res = engine.run(reqs)
     occ = [r["active"] for r in res.step_log]
     print(f"continuous: {len(reqs)} requests, {res.tokens} tokens in "
@@ -81,8 +83,15 @@ def run_continuous(mesh, model, params, batch: int, tokens: int):
           f"of {batch} slots)")
     print(f"dispatch wire: {res.wire_bytes / 1e3:.1f} kB modeled; "
           f"plan swaps: {[(s['step'], s['reason'], s['signature']) for s in res.swap_log]}")
+    if res.latency:
+        lat = res.latency
+        print("latency (decode-step units): "
+              f"ttft p50={lat['ttft']['p50']:.1f} p99={lat['ttft']['p99']:.1f}; "
+              f"tpot p50={lat['tpot']['p50']:.2f}; "
+              f"e2e p99={lat['e2e']['p99']:.1f}")
     assert len(res.outputs) == n_req
     print("all requests completed: OK")
+    return engine
 
 
 def main():
@@ -95,13 +104,45 @@ def main():
                     help="max new tokens per request")
     ap.add_argument("--continuous", action="store_true",
                     help="continuous batching + adaptive sparse dispatch")
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="export a Chrome-trace JSON of the run "
+                         "(prefill/decode/admit spans, DESIGN.md §10)")
+    ap.add_argument("--metrics-out", type=str, default=None, metavar="PATH",
+                    help="write the metrics/event JSONL (occupancy/queue/"
+                         "wire histograms, latency percentiles, plan "
+                         "swaps) and run a serve-plan drift audit")
     args = ap.parse_args()
     tokens = args.tokens if args.tokens is not None else (8 if args.fast else 24)
+
+    from repro import obs as obs_mod
+
+    obs = obs_mod.configure(trace=bool(args.trace),
+                            metrics=bool(args.metrics_out) or bool(args.trace),
+                            audit=bool(args.metrics_out))
     mesh, model, params = build(args.fast)
+    engine = None
     if args.continuous:
-        run_continuous(mesh, model, params, args.batch, tokens)
+        engine = run_continuous(mesh, model, params, args.batch, tokens,
+                                obs=obs)
     else:
-        run_static(mesh, model, params, args.batch, tokens)
+        run_static(mesh, model, params, args.batch, tokens, obs=obs)
+
+    if obs.enabled:
+        plan = getattr(engine, "_plan", None) if engine is not None else None
+        if obs.audit is not None and plan is not None:
+            from repro.obs import audit_serve_plan
+
+            # probe each activation bucket of the plan the engine ended
+            # on and join against bucket_time (DESIGN.md §10)
+            audit_serve_plan(plan, mesh, axis_name="model",
+                             auditor=obs.audit, registry=obs.metrics)
+            print(obs.audit.summary())
+        obs.export(trace_path=args.trace, metrics_path=args.metrics_out)
+        if obs.metrics_on:
+            print(obs.metrics.summary())
+        for p in (args.trace, args.metrics_out):
+            if p:
+                print(f"obs: wrote {p}")
 
 
 if __name__ == "__main__":

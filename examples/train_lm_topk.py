@@ -51,7 +51,21 @@ def main():
                          "per-bucket densities + calibrated alpha-beta "
                          "model re-select collective algorithms at drain "
                          "barriers (with --pipeline)")
+    ap.add_argument("--trace", type=str, default=None, metavar="PATH",
+                    help="export a Chrome-trace JSON of the run "
+                         "(host spans + derived device compute/comm "
+                         "phases, DESIGN.md §10)")
+    ap.add_argument("--metrics-out", type=str, default=None, metavar="PATH",
+                    help="write the metrics/event JSONL (per-bucket "
+                         "nnz/wire histograms, plan swaps, step times) "
+                         "and run a cost-model drift audit at the end")
     args = ap.parse_args()
+
+    from repro import obs as obs_mod
+
+    obs = obs_mod.configure(trace=bool(args.trace),
+                            metrics=bool(args.metrics_out) or bool(args.trace),
+                            audit=bool(args.metrics_out))
 
     if args.fast:
         cfg = ModelConfig(name="lm-12m", family="dense", num_layers=4,
@@ -84,7 +98,7 @@ def main():
     )
     mesh = make_host_mesh(data=4, model=2)
     trainer = Trainer(model, tcfg, mesh, data, ckpt_dir=args.ckpt_dir,
-                      ckpt_every=25)
+                      ckpt_every=25, obs=obs)
     start = trainer.init_or_resume()
     print(f"starting at step {start} (resume={'yes' if start else 'no'})")
 
@@ -126,6 +140,25 @@ def main():
           f"avg step {sum(log.step_times)/len(log.step_times)*1e3:.0f} ms "
           f"(median {med(log.step_times)*1e3:.0f} ms), "
           f"restarts={log.restarts}, stragglers={len(log.straggler_events)}")
+
+    if obs.enabled:
+        # drift audit: probe each distinct (algorithm, n, k) bucket of
+        # the plan the run actually ended on, join against the cost
+        # model's bucket_time prediction (DESIGN.md §10)
+        plan = getattr(trainer, "last_plan", None)
+        if obs.audit is not None and plan is not None:
+            from repro.obs import audit_sync_plan
+
+            audit_sync_plan(plan, mesh, axis_name="data",
+                            net=getattr(trainer, "_net_cal", None),
+                            auditor=obs.audit, registry=obs.metrics)
+            print(obs.audit.summary())
+        obs.export(trace_path=args.trace, metrics_path=args.metrics_out)
+        if obs.metrics_on:
+            print(obs.metrics.summary())
+        for p in (args.trace, args.metrics_out):
+            if p:
+                print(f"obs: wrote {p}")
 
 
 if __name__ == "__main__":

@@ -14,6 +14,16 @@ real wire costs never feed back. This module closes the loop:
                        plan-signature-keyed compiled-step cache; the
                        driver drains its dispatch window, swaps the
                        compiled superstep, and keeps going
+  TelemetryObserver    adapt-shaped observer that only records per-bucket
+                       telemetry metrics — for runs that want the
+                       observability without runtime re-planning
+
+Every controller decision is also a STRUCTURED EVENT (DESIGN.md §10)
+carrying the densities and modeled costs that justified it —
+``adapt/replan_accepted``, ``adapt/hysteresis_veto``,
+``adapt/delta_forced``, ``adapt/forced_switch``, ``adapt/forced_install``
+— through the ``repro.obs`` handle, so a trace answers not just *what*
+the controller did but *why*.
 
 Replans are layout-invariant (``BucketSpec.ef`` pins the residual set),
 so a swap never migrates TrainState — the in-flight reduced buffers and
@@ -32,6 +42,8 @@ import numpy as np
 from repro.core.cost_model import (DEFAULT_NET, NetworkParams,
                                    algorithm_output_cap, bucket_time)
 from repro.core.sparse_stream import delta_threshold
+from repro.obs import resolve as _resolve_obs
+from repro.obs.metrics import record_bucket_telemetry
 
 
 @dataclass(frozen=True)
@@ -86,11 +98,13 @@ class AdaptiveController:
     measured fill-in to stay under the delta threshold."""
 
     def __init__(self, plan, net: NetworkParams = DEFAULT_NET,
-                 cfg: AdaptConfig = AdaptConfig(), p_pod: int = 1):
+                 cfg: AdaptConfig = AdaptConfig(), p_pod: int = 1,
+                 obs=None):
         self.plan = plan
         self.net = net
         self.cfg = cfg
         self.p_pod = max(1, int(p_pod))
+        self.obs = _resolve_obs(obs)
         self.window = TelemetryWindow(cfg.window)
         self._pending_sig: Optional[str] = None
         self._pending_plan = None
@@ -184,17 +198,25 @@ class AdaptiveController:
             # heuristic): the serve ServePlan forces a stream off its
             # capacity once the measured occupancy reaches it.
             hook = getattr(self.plan, "switch_forced", None)
+            hook_forced = False
             if not forced and hook is not None:
-                forced = bool(hook(b.name, old, b.algorithm, nnz))
-            if forced:
+                hook_forced = bool(hook(b.name, old, b.algorithm, nnz))
+            if forced or hook_forced:
+                self.obs.event(
+                    "adapt/delta_forced" if forced else "adapt/forced_switch",
+                    bucket=b.name, old=old, new=b.algorithm, nnz=nnz)
                 continue
             t_old = bucket_time(old, p, k, b.n, self.net, vb,
                                 reduced_nnz=nnz)
             t_new = bucket_time(b.algorithm, p, k, b.n, self.net, vb,
                                 reduced_nnz=nnz)
-            keep[b.name] = (b.algorithm
-                            if t_new <= (1.0 - self.cfg.hysteresis) * t_old
-                            else old)
+            win = t_new <= (1.0 - self.cfg.hysteresis) * t_old
+            keep[b.name] = b.algorithm if win else old
+            if not win:
+                self.obs.event("adapt/hysteresis_veto", bucket=b.name,
+                               old=old, new=b.algorithm, nnz=nnz,
+                               t_old_s=t_old, t_new_s=t_new,
+                               hysteresis=self.cfg.hysteresis)
         if keep:
             # revert ONLY the vetoed buckets; delta-forced and clear-win
             # changes keep the candidate's choice (replan defaults every
@@ -216,11 +238,17 @@ class AdaptiveController:
             self._pending_sig, self._pending_plan = sig, candidate
             self._pending_count = 1
         if self._pending_count < self.cfg.patience:
+            self.obs.event("adapt/replan_pending", signature=sig,
+                           count=self._pending_count,
+                           patience=self.cfg.patience, densities=densities)
             return None
         accepted = self._pending_plan
         self.plan = accepted
         self._pending_sig, self._pending_count = None, 0
         self.swaps += 1
+        self.obs.event("adapt/replan_accepted", signature=accepted.signature(),
+                       version=accepted.version, swaps=self.swaps,
+                       densities=densities)
         return accepted
 
     def force(self, plan) -> None:
@@ -235,6 +263,9 @@ class AdaptiveController:
         self._pending_count = 0
         self.window.clear()
         self.swaps += 1
+        self.obs.event("adapt/forced_install", signature=plan.signature(),
+                       version=getattr(plan, "version", None),
+                       swaps=self.swaps)
 
 
 class AdaptiveRuntime:
@@ -249,15 +280,17 @@ class AdaptiveRuntime:
                  cfg: AdaptConfig = AdaptConfig(),
                  staleness: int = 1, superstep: int = 1,
                  unroll: bool = False,
-                 build_fn: Optional[Callable] = None):
+                 build_fn: Optional[Callable] = None, obs=None):
         from repro.train.train_step import dp_axes_of
 
         self.model, self.tcfg, self.mesh = model, tcfg, mesh
         self.staleness, self.superstep, self.unroll = (staleness, superstep,
                                                        unroll)
+        self.obs = _resolve_obs(obs)
         dp_ax = dp_axes_of(mesh)
         p_pod = mesh.shape[dp_ax[0]] if len(dp_ax) > 1 else 1
-        self.controller = AdaptiveController(plan, net, cfg, p_pod=p_pod)
+        self.controller = AdaptiveController(plan, net, cfg, p_pod=p_pod,
+                                             obs=self.obs)
         self._build_fn = build_fn or self._default_build
         self._cache: dict = {}
         self._swap_to = None
@@ -299,6 +332,7 @@ class AdaptiveRuntime:
             return
         arrs = {name: np.atleast_2d(np.asarray(v)) for name, v in
                 telem.items()}            # (k, 2) rows of [nnz, wire]
+        record_bucket_telemetry(self.obs.metrics, arrs)
         k = min(a.shape[0] for a in arrs.values())
         for i in range(k):
             row = {name: float(a[i, 0]) for name, a in arrs.items()}
@@ -314,3 +348,24 @@ class AdaptiveRuntime:
             return None
         plan, self._swap_to = self._swap_to, None
         return self.step_fn_for(plan), plan
+
+
+class TelemetryObserver:
+    """``run_pipelined(adapt=...)`` duck-type that RECORDS the in-graph
+    per-bucket telemetry (nnz / wire-bytes histograms) without ever
+    proposing a replan — the metrics path for runs that compile telemetry
+    in but leave the adaptive controller off."""
+
+    def __init__(self, obs=None):
+        self.obs = _resolve_obs(obs)
+
+    def observe(self, first_step: int, n_steps: int, metrics) -> None:
+        telem = metrics.get("telemetry") if hasattr(metrics, "get") else None
+        if not telem or not self.obs.metrics_on:
+            return
+        arrs = {name: np.atleast_2d(np.asarray(v)) for name, v in
+                telem.items()}
+        record_bucket_telemetry(self.obs.metrics, arrs)
+
+    def maybe_swap(self):
+        return None

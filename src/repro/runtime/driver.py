@@ -20,8 +20,21 @@ count: with the window full, that IS the steady-state per-step cost, with
 dispatch overhead and data generation amortized/overlapped. The
 attribution is exact in aggregate (the intervals tile the run), but
 pipeline fill inflates the first interval and the final drain deflates
-the last ones — consumers should read the MEAN of ``log.step_times``,
-not the median, for short runs.
+the last ones. The ONE summary statistic for ``log.step_times`` is
+therefore the ROLLING MEDIAN of the last ``STRAGGLER_WINDOW`` steps —
+robust to those fill/drain transients — and it is what the straggler
+watchdog compares against (``record_step``), what the
+``driver/straggler_median_s`` gauge exports, and what consumers should
+read; the mean is only exact for whole-run aggregates.
+
+Observability (DESIGN.md §10): ``run_pipelined`` takes an ``obs`` handle
+(``repro.obs``). Host spans wrap dispatch/retire/drain/checkpoint, plan
+swaps and restarts become structured events, and — when tracing — a
+``phase_attr`` callback lays the cost model's compute/exposed-comm split
+into each retire interval as derived device-phase spans. All of it is
+host-side: with observability off the loop is byte-identical, and with
+it on, retire remains the only ``block_until_ready`` (tests/test_obs.py
+pins both properties).
 
 The driver is state-linear (step functions donate their input state), so
 after a dispatch only the returned state is live; on failure the window
@@ -34,13 +47,23 @@ import queue
 import threading
 import time
 from collections import deque
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from statistics import median
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.obs import resolve as _resolve_obs
+from repro.obs.metrics import MetricsRegistry
+
+# Rolling window (in steps) of the documented step-time statistic: the
+# median over this window is THE summary of ``log.step_times`` — used by
+# the straggler watchdog, exported as ``driver/straggler_median_s``.
+STRAGGLER_WINDOW = 50
+# Minimum retired steps before the watchdog trusts the median at all.
+STRAGGLER_WARMUP = 5
 
 
 @dataclass(frozen=True)
@@ -50,28 +73,63 @@ class DriverConfig:
     steps_per_unit: int = 1 # K of the scanned superstep fn (1 = plain step)
 
 
-@dataclass
 class DriverLog:
-    """Duck-type-compatible with train.trainer.TrainerLog."""
-    losses: list = field(default_factory=list)
-    step_times: list = field(default_factory=list)
-    straggler_events: list = field(default_factory=list)
-    restarts: int = 0
-    plan_swaps: list = field(default_factory=list)  # (step, plan signature)
+    """Run log with registry-backed storage (duck-type-compatible with
+    train.trainer.TrainerLog, which is an alias of this class).
+
+    The public fields are the SAME plain lists PR-2 consumers have
+    always indexed — but they are views of Series metrics living in a
+    ``MetricsRegistry``, so a metrics-enabled run exports losses, step
+    times, straggler and plan-swap events through the JSONL sink with no
+    second bookkeeping path. With no registry supplied the log owns a
+    private (disabled) one and behaves exactly like the old dataclass.
+    """
+
+    def __init__(self, registry: MetricsRegistry | None = None):
+        self.registry = registry if registry is not None \
+            else MetricsRegistry(enabled=False)
+        self.losses = self.registry.series("train/loss").data
+        self.step_times = self.registry.series("train/step_time_s").data
+        # (step, dt, rolling median) triples
+        self.straggler_events = \
+            self.registry.series("driver/straggler_events").data
+        # (step, plan signature) pairs
+        self.plan_swaps = self.registry.series("driver/plan_swaps").data
+
+    @property
+    def restarts(self) -> int:
+        return self.registry.counter("driver/restarts").value
+
+    @restarts.setter
+    def restarts(self, v: int) -> None:
+        self.registry.counter("driver/restarts").value = int(v)
 
 
 def record_step(log, step: int, dt: float, loss: float,
                 straggler_factor: float) -> None:
     """Append one step's (loss, wall time) to the log and run the
-    straggler watchdog (wall time vs the median of the last 50 steps) —
-    the ONE logging policy shared by the synchronous Trainer.run loop and
-    the async driver, so the two loops can never drift apart."""
+    straggler watchdog — the ONE logging policy shared by the synchronous
+    Trainer.run loop and the async driver, so the two can never drift.
+
+    The watchdog statistic is the rolling MEDIAN of the last
+    ``STRAGGLER_WINDOW`` step times (the documented summary of
+    ``log.step_times``); a step slower than ``straggler_factor`` times
+    that median records a ``(step, dt, median)`` event, bumps the
+    ``driver/stragglers`` counter, and the current median is exported as
+    the ``driver/straggler_median_s`` gauge."""
     log.losses.append(loss)
     log.step_times.append(dt)
-    if len(log.step_times) >= 5:
-        med = median(log.step_times[-50:])
+    reg = getattr(log, "registry", None)
+    if len(log.step_times) >= STRAGGLER_WARMUP:
+        med = median(log.step_times[-STRAGGLER_WINDOW:])
+        if reg is not None:
+            reg.gauge("driver/straggler_median_s").set(med)
         if dt > straggler_factor * med:
             log.straggler_events.append((step, dt, med))
+            if reg is not None:
+                reg.counter("driver/stragglers").inc()
+                reg.event("driver/straggler", step=step, dt_s=dt,
+                          median_s=med, factor=straggler_factor)
 
 
 class _Prefetcher:
@@ -148,6 +206,8 @@ def run_pipelined(
     ckpt_fn: Optional[Callable[[Any], None]] = None,
     restore_fn: Optional[Callable[[], Any]] = None,
     adapt=None,
+    obs=None,
+    phase_attr: Optional[Callable[[float], list]] = None,
 ):
     """Drive ``step_fn`` from ``start_step`` to ``num_steps`` (absolute).
 
@@ -164,12 +224,19 @@ def run_pipelined(
     compiled step function is swapped at that barrier — TrainState rides
     across unchanged (replans are layout-invariant, DESIGN.md §7), and
     the swap is recorded in ``log.plan_swaps``.
+    obs: a ``repro.obs.Observability`` handle (None = session default,
+    which defaults to OFF). Host spans + structured events only — the
+    retire below stays the ONLY sync point either way.
+    phase_attr: ``dt_unit_s -> [phase dict]`` (see
+    ``obs.attribute_step_phases``); when tracing, each retire interval
+    is tiled with the derived compute/exposed-comm device spans.
     Returns (final state, log).
     """
     if cfg.depth < 1 or cfg.prefetch < 1 or cfg.steps_per_unit < 1:
         raise ValueError(f"DriverConfig fields must be >= 1: {cfg}")
+    obs = _resolve_obs(obs)
     if log is None:
-        log = DriverLog()
+        log = DriverLog(registry=obs.metrics if obs.metrics_on else None)
     k_unit = cfg.steps_per_unit
     prefetcher = _Prefetcher(batch_fn, cfg.prefetch, k_unit)
     prefetcher.start(start_step, num_steps)
@@ -180,21 +247,38 @@ def run_pipelined(
     def retire_one():
         nonlocal last_retire_t
         s0, k, metrics = window.popleft()
-        jax.block_until_ready(metrics["loss"])          # the ONLY sync point
+        with obs.span("driver/retire", step=s0, k=k):
+            jax.block_until_ready(metrics["loss"])      # the ONLY sync point
         now = time.perf_counter()
-        dt = (now - last_retire_t) / k
+        dt_unit = now - last_retire_t
+        dt = dt_unit / k
+        prev_t = last_retire_t
         last_retire_t = now
         losses = np.atleast_1d(np.asarray(metrics["loss"]))
         for i in range(k):
             record_step(log, s0 + i, dt,
                         float(losses[i] if k > 1 else losses[0]),
                         straggler_factor)
+        if obs.metrics_on:
+            obs.metrics.histogram("driver/retire_wall_s").observe(dt_unit)
+        if obs.trace_on and phase_attr is not None:
+            # Lay the derived device phases into the measured interval
+            # [prev retire, this retire] on their own trace track.
+            for ph in phase_attr(dt_unit):
+                obs.tracer.complete(
+                    ph["name"], ph["cat"],
+                    ts_us=obs.tracer.to_us(prev_t + ph["offset_s"]),
+                    dur_us=ph["dur_s"] * 1e6, tid="device-phases",
+                    **ph.get("args", {}))
         if adapt is not None:
             adapt.observe(s0, k, metrics)
 
     def drain():
-        while window:
-            retire_one()
+        if not window:
+            return
+        with obs.span("driver/drain", inflight=len(window)):
+            while window:
+                retire_one()
 
     def check_swap():
         """Install a controller-accepted replan (DESIGN.md §7). Called
@@ -215,18 +299,22 @@ def run_pipelined(
         step_fn, new_plan = swap
         if hasattr(log, "plan_swaps"):
             log.plan_swaps.append((step, new_plan.signature()))
+        obs.event("driver/plan_swap", step=step,
+                  signature=new_plan.signature(),
+                  version=getattr(new_plan, "version", None))
 
     def dispatch(state, step):
         k = min(k_unit, num_steps - step)
-        if k_unit == 1:
-            batch = jax.tree.map(jnp.asarray, prefetcher.take(step))
-            key = key_fn(step)
-        else:
-            host = [prefetcher.take(step + i) for i in range(k)]
-            batch = jax.tree.map(
-                lambda *xs: jnp.asarray(np.stack(xs)), *host)
-            key = jnp.stack([key_fn(step + i) for i in range(k)])
-        new_state, metrics = step_fn(state, batch, key)
+        with obs.span("driver/dispatch", step=step, k=k):
+            if k_unit == 1:
+                batch = jax.tree.map(jnp.asarray, prefetcher.take(step))
+                key = key_fn(step)
+            else:
+                host = [prefetcher.take(step + i) for i in range(k)]
+                batch = jax.tree.map(
+                    lambda *xs: jnp.asarray(np.stack(xs)), *host)
+                key = jnp.stack([key_fn(step + i) for i in range(k)])
+            new_state, metrics = step_fn(state, batch, key)
         window.append((step, k, metrics))
         return new_state, step + k
 
@@ -253,12 +341,15 @@ def run_pipelined(
                     # it before the save records the active plan)
                     drain()
                     check_swap()
-                    ckpt_fn(state)
-            except Exception:
+                    with obs.span("driver/checkpoint", step=step):
+                        ckpt_fn(state)
+            except Exception as e:
                 if restore_fn is None:
                     raise
                 window.clear()
                 log.restarts += 1
+                obs.event("driver/restart", step=step,
+                          error=type(e).__name__)
                 state = restore_fn()
                 step = int(state.step)
                 prefetcher.start(step, num_steps)

@@ -142,11 +142,14 @@ class ServeEngine:
     """Minimal batched greedy-decoding engine over fixed slots."""
 
     def __init__(self, model: Model, mesh: Mesh, params, cache_len: int = 256,
-                 batch_size: int = 8):
+                 batch_size: int = 8, obs=None):
+        from repro.obs import resolve as _resolve_obs
+
         self.model = model
         self.mesh = mesh
         self.params = params
         self.cache_len = cache_len
+        self.obs = _resolve_obs(obs)
         self.decode_fn, (_, sspecs) = build_serve_step(
             model, mesh, batch_size=batch_size, cache_len=cache_len)
         self._state_sh = _sh(mesh)(sspecs)
@@ -160,18 +163,24 @@ class ServeEngine:
         if image_embeds is not None:
             batch["image_embeds"] = jnp.asarray(image_embeds)
         with self.mesh:
-            logits, state = self.model.prefill(self.params, batch, self.cache_len)
+            with self.obs.span("serve/prefill",
+                               batch=int(np.asarray(prompts).shape[0]),
+                               prompt_len=int(np.asarray(prompts).shape[1])):
+                logits, state = self.model.prefill(self.params, batch,
+                                                   self.cache_len)
             # The eager prefill may COMMIT cache shardings (models with
             # internal sharding constraints, e.g. MoE dispatch); the
             # jitted step's donated state arg needs its own layout.
             state = jax.device_put(state, self._state_sh)
             toks = []
             cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-            for _ in range(max_new_tokens):
-                toks.append(np.asarray(cur))
-                # argmax of committed logits is itself committed (with a
-                # replicated layout); re-lay it out for the decode step
-                cur = jax.device_put(cur, self._tok_sh)
-                logits, state = self.decode_fn(self.params, state, cur)
-                cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            with self.obs.span("serve/decode", tokens=max_new_tokens):
+                for _ in range(max_new_tokens):
+                    toks.append(np.asarray(cur))
+                    # argmax of committed logits is itself committed (with
+                    # a replicated layout); re-lay it out for the decode
+                    # step
+                    cur = jax.device_put(cur, self._tok_sh)
+                    logits, state = self.decode_fn(self.params, state, cur)
+                    cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
         return np.concatenate(toks, axis=1)

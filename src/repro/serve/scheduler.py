@@ -16,6 +16,13 @@ The clock is counted in DECODE STEPS, not seconds: arrivals are given in
 step units so runs are exactly reproducible and independent of host
 speed. ``poisson_trace`` generates such arrivals from a seeded Poisson
 process (exponential inter-arrival gaps at a given rate per step).
+
+Per-request LIFECYCLE (DESIGN.md §10): admission and retirement stamp a
+``lifecycle`` record per rid — arrival, admit clock, prompt length,
+retire clock, emitted tokens — and :meth:`latency_stats` reduces those to
+the serve latency distributions (queue delay, TTFT, TPOT, end-to-end),
+all in the same deterministic step units, so percentiles over a fixed
+Poisson trace are exactly reproducible.
 """
 from __future__ import annotations
 
@@ -78,6 +85,12 @@ class ContinuousScheduler:
         self.clock = 0.0
         self.completed: dict[int, np.ndarray] = {}
         self.retirements: list[tuple[float, int]] = []   # (clock, rid)
+        # rid -> {arrival, admit, prompt_len, retire, tokens} (step units)
+        self.lifecycle: dict[int, dict] = {
+            r.rid: {"arrival": float(r.arrival), "admit": None,
+                    "prompt_len": int(r.prompt.size), "retire": None,
+                    "tokens": 0}
+            for r in requests}
 
     # -- state queries -----------------------------------------------------
     @property
@@ -114,6 +127,7 @@ class ContinuousScheduler:
         assert self.slots[slot_idx] is None, slot_idx
         self.slots[slot_idx] = Slot(rid=req.rid, next_token=int(first_token),
                                     max_new=req.max_new_tokens)
+        self.lifecycle[req.rid]["admit"] = self.clock
         return self.record(slot_idx, int(first_token))
 
     # -- decode-step bookkeeping -------------------------------------------
@@ -124,16 +138,52 @@ class ContinuousScheduler:
         assert s is not None, slot_idx
         s.emitted.append(int(token))
         s.next_token = int(token)
+        self.lifecycle[s.rid]["tokens"] = len(s.emitted)
         if (self.eos_id is not None and token == self.eos_id) \
                 or len(s.emitted) >= s.max_new:
             self.completed[s.rid] = np.asarray(s.emitted, np.int32)
             self.retirements.append((self.clock, s.rid))
+            self.lifecycle[s.rid]["retire"] = self.clock
             self.slots[slot_idx] = None
             return True
         return False
 
     def advance(self) -> None:
         self.clock += 1.0
+
+    # -- latency distributions ---------------------------------------------
+    def latency_stats(self) -> dict[str, np.ndarray]:
+        """Per-retired-request latency arrays in DECODE-STEP units, one
+        entry per completed rid (sorted), deterministic on a fixed trace:
+
+          queue_delay  admit clock - arrival (waiting for a free slot)
+          ttft         time to first token == queue_delay: the prefill's
+                       argmax IS the first emitted token, landed at the
+                       admission boundary (see :meth:`install`)
+          tpot         (retire - admit) / (tokens - 1): per-token time of
+                       the decode phase (0 for 1-token requests)
+          e2e          retire clock - arrival
+
+        Convert to seconds by multiplying with a measured step wall time
+        (the engine reports ``wall_s / decode_steps``)."""
+        done = sorted(rid for rid, lc in self.lifecycle.items()
+                      if lc["retire"] is not None)
+        q, tpot, e2e, toks = [], [], [], []
+        for rid in done:
+            lc = self.lifecycle[rid]
+            q.append(lc["admit"] - lc["arrival"])
+            n = max(1, lc["tokens"])
+            tpot.append((lc["retire"] - lc["admit"]) / max(1, n - 1))
+            e2e.append(lc["retire"] - lc["arrival"])
+            toks.append(n)
+        return {
+            "rids": np.asarray(done, np.int64),
+            "queue_delay": np.asarray(q, np.float64),
+            "ttft": np.asarray(q, np.float64),
+            "tpot": np.asarray(tpot, np.float64),
+            "e2e": np.asarray(e2e, np.float64),
+            "tokens": np.asarray(toks, np.int64),
+        }
 
     def skip_to_next_arrival(self) -> None:
         """Idle engine (no active slots, nothing admissible): jump the

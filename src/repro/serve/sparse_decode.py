@@ -35,6 +35,7 @@ from repro.core.cost_model import DEFAULT_NET, NetworkParams
 from repro.models.model import Model
 from repro.models.moe import ServeDispatch
 from repro.models.specs import param_specs
+from repro.obs import resolve as _resolve_obs
 from repro.runtime.adapt import AdaptConfig, AdaptiveRuntime
 from repro.serve.engine import _div, _logit_spec, _sh, decode_state_specs
 from repro.serve.scheduler import ContinuousScheduler, Request
@@ -142,6 +143,9 @@ class ServeResult:
     wire_bytes: float = 0.0            # modeled per-rank dispatch bytes, total
     swap_log: list = field(default_factory=list)
     step_log: list = field(default_factory=list)
+    # per-retired-request latency percentiles in DECODE-STEP units
+    # (deterministic on a fixed trace) — {metric: {p50, p90, p99, mean}}
+    latency: dict = field(default_factory=dict)
 
     @property
     def tok_per_s(self) -> float:
@@ -171,7 +175,7 @@ class ContinuousServeEngine:
                  dispatch: str = "adaptive", eos_id: Optional[int] = None,
                  adapt: Optional[AdaptConfig] = None,
                  net: NetworkParams = DEFAULT_NET,
-                 min_cap: int = 4, headroom: float = 2.0):
+                 min_cap: int = 4, headroom: float = 2.0, obs=None):
         assert dispatch in ("dense", "adaptive"), dispatch
         cfg = model.cfg
         if cfg.family == "vlm" or not cfg.is_decoder:
@@ -180,6 +184,7 @@ class ContinuousServeEngine:
         self.model, self.mesh, self.params = model, mesh, params
         self.cache_len, self.batch_size = cache_len, batch_size
         self.eos_id = eos_id
+        self.obs = _resolve_obs(obs)
         self._state_sh = _sh(mesh)(
             decode_state_specs(model, mesh, batch_size, cache_len))
         self._param_sh = _sh(mesh)(param_specs(
@@ -202,7 +207,7 @@ class ContinuousServeEngine:
                                             pod_sparse=False)
                 self.runtime = AdaptiveRuntime(
                     model, None, mesh, plan=base, net=net, cfg=acfg,
-                    build_fn=self._build)
+                    build_fn=self._build, obs=self.obs)
                 self._plan = self.runtime.current_plan
                 self._fn = self.runtime.current_fn()
         else:
@@ -257,6 +262,8 @@ class ContinuousServeEngine:
         self.swap_log.append({"step": clock, "reason": reason,
                               "signature": plan.signature(),
                               "version": plan.version})
+        self.obs.event("serve/plan_swap", step=clock, reason=reason,
+                       signature=plan.signature(), version=plan.version)
 
     def _occupancy_guard(self, active_count: int, clock: float):
         """Force-demote a stream plan the admitted batch just outgrew —
@@ -290,10 +297,13 @@ class ContinuousServeEngine:
         next_tok = np.zeros((self.batch_size,), np.int32)
         res = ServeResult(outputs=sched.completed, swap_log=self.swap_log)
         t0 = time.perf_counter()
+        obs = self.obs
         with self.mesh:
             while not sched.done and res.decode_steps < max_steps:
                 for slot_idx, req in sched.admit_ready():
-                    state, first = self._admit(state, slot_idx, req)
+                    with obs.span("serve/admit", rid=req.rid, slot=slot_idx,
+                                  prompt_len=int(req.prompt.size)):
+                        state, first = self._admit(state, slot_idx, req)
                     sched.install(slot_idx, req, first)
                     res.tokens += 1
                 active = sched.active_mask
@@ -305,10 +315,12 @@ class ContinuousServeEngine:
                 for i, s in enumerate(sched.slots):
                     if s is not None:
                         next_tok[i] = s.next_token
-                logits, state, telem = self._fn(
-                    self.params, state, jnp.asarray(next_tok[:, None]),
-                    jnp.asarray(active))
-                lg = np.asarray(logits)
+                with obs.span("serve/decode_step", step=sched.clock,
+                              active=n_active):
+                    logits, state, telem = self._fn(
+                        self.params, state, jnp.asarray(next_tok[:, None]),
+                        jnp.asarray(active))
+                    lg = np.asarray(logits)
                 for i in np.nonzero(active)[0]:
                     tok = int(np.argmax(lg[i]))
                     sched.record(int(i), tok)
@@ -321,6 +333,13 @@ class ContinuousServeEngine:
                     "wire_bytes": wire,
                     "signature": (self._plan.signature()
                                   if self._plan is not None else "-")})
+                if obs.metrics_on:
+                    m = obs.metrics
+                    m.histogram("serve/occupancy").observe(n_active)
+                    m.histogram("serve/queue_depth").observe(
+                        len(sched.waiting))
+                    if telem:
+                        m.histogram("serve/wire_bytes").observe(wire)
                 if self.runtime is not None and telem:
                     self.runtime.observe(
                         res.decode_steps, 1,
@@ -335,4 +354,21 @@ class ContinuousServeEngine:
                 sched.advance()
                 res.decode_steps += 1
         res.wall_s = time.perf_counter() - t0
+        stats = sched.latency_stats()
+        res.latency = {
+            name: {"p50": float(np.percentile(v, 50)),
+                   "p90": float(np.percentile(v, 90)),
+                   "p99": float(np.percentile(v, 99)),
+                   "mean": float(np.mean(v))}
+            for name, v in stats.items()
+            if name in ("queue_delay", "ttft", "tpot", "e2e") and v.size
+        }
+        if obs.metrics_on:
+            m = obs.metrics
+            for name in ("queue_delay", "ttft", "tpot", "e2e"):
+                if stats[name].size:
+                    m.histogram(f"serve/{name}_steps").observe_many(
+                        stats[name])
+            m.gauge("serve/tok_per_s").set(res.tok_per_s)
+            m.gauge("serve/decode_steps").set(res.decode_steps)
         return res

@@ -21,32 +21,27 @@ in-flight bucket buffers before saving and re-attaches zeros on resume.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
 from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
 
 from repro.data.pipeline import DataConfig, synthetic_batch
-from repro.runtime.driver import record_step
+from repro.obs import resolve as _resolve_obs
+from repro.runtime.driver import DriverLog, record_step
 from repro.train import checkpoint as ckpt
 from repro.train.state import TrainConfig, TrainState
 from repro.train.train_step import build_train_step, dp_total_of, init_state
 
-
-@dataclass
-class TrainerLog:
-    losses: list = field(default_factory=list)
-    step_times: list = field(default_factory=list)
-    straggler_events: list = field(default_factory=list)
-    restarts: int = 0
-    plan_swaps: list = field(default_factory=list)  # (step, plan signature)
+# One log type for both loops (registry-backed, DESIGN.md §10); the name
+# survives for PR-2 callers that import TrainerLog.
+TrainerLog = DriverLog
 
 
 class Trainer:
     def __init__(self, model, tcfg: TrainConfig, mesh, data_cfg: DataConfig,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 50,
-                 straggler_factor: float = 3.0):
+                 straggler_factor: float = 3.0, obs=None):
         self.model = model
         self.tcfg = tcfg
         self.mesh = mesh
@@ -54,7 +49,9 @@ class Trainer:
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.straggler_factor = straggler_factor
-        self.log = TrainerLog()
+        self.obs = _resolve_obs(obs)
+        self.log = TrainerLog(
+            registry=self.obs.metrics if self.obs.metrics_on else None)
         self.step_fn, (self.shapes, self.specs) = build_train_step(model, tcfg, mesh)
         self.state: Optional[TrainState] = None
         self._root_key = jax.random.PRNGKey(tcfg.seed)
@@ -62,6 +59,10 @@ class Trainer:
         # call (None otherwise) — exposes the active plan for
         # inspection/tests; the checkpoint meta is the durable record
         self.last_adapt_runtime = None
+        # the SyncPlan the most recent run_pipelined compiled against
+        # (adaptive runs: the plan active at exit) — what the examples
+        # hand to obs.audit_sync_plan after the run
+        self.last_plan = None
 
     # -- lifecycle ---------------------------------------------------------
     def init_or_resume(self):
@@ -147,6 +148,7 @@ class Trainer:
         carry the active plan signature + algorithm map, so a restart
         resumes the ADAPTED plan."""
         from repro.data.pipeline import synthetic_batch
+        from repro.runtime import adapt as rt_adapt
         from repro.runtime import driver as rt_driver
         from repro.runtime import pipeline as rt_pipeline
 
@@ -156,7 +158,6 @@ class Trainer:
         runtime = None
         plan0 = None
         if adapt:
-            from repro.runtime import adapt as rt_adapt
             from repro.train import train_step as ts
 
             if staleness < 1:
@@ -177,18 +178,25 @@ class Trainer:
             runtime = rt_adapt.AdaptiveRuntime(
                 self.model, self.tcfg, self.mesh, plan=plan0,
                 net=self._calibrated_net(acfg), cfg=acfg,
-                staleness=staleness, superstep=superstep, unroll=unroll)
+                staleness=staleness, superstep=superstep, unroll=unroll,
+                obs=self.obs)
             self.last_adapt_runtime = runtime
             fn, plan = runtime.current_fn(), runtime.current_plan
-        elif superstep > 1:
-            # no controller to consume stats: compile the telemetry out
-            fn, _, plan = rt_pipeline.build_superstep(
-                self.model, self.tcfg, self.mesh, staleness=staleness,
-                steps=superstep, unroll=unroll, telemetry=False)
         else:
-            fn, _, plan = rt_pipeline.build_pipelined_step(
-                self.model, self.tcfg, self.mesh, staleness=staleness,
-                telemetry=False)
+            # no controller to consume stats: compile the telemetry in
+            # only when a metrics registry will record it (off = the
+            # PR-2 step, byte-identical jaxpr)
+            telemetry = self.obs.metrics_on
+            if superstep > 1:
+                fn, _, plan = rt_pipeline.build_superstep(
+                    self.model, self.tcfg, self.mesh, staleness=staleness,
+                    steps=superstep, unroll=unroll, telemetry=telemetry)
+            else:
+                fn, _, plan = rt_pipeline.build_pipelined_step(
+                    self.model, self.tcfg, self.mesh, staleness=staleness,
+                    telemetry=telemetry)
+            if telemetry:
+                runtime = rt_adapt.TelemetryObserver(self.obs)
         state = self.state
         if staleness:
             state = rt_pipeline.attach_inflight(state, plan, self.mesh)
@@ -199,8 +207,8 @@ class Trainer:
 
         def ckpt_fn(s):
             extra = None
-            if runtime is not None:
-                active = runtime.current_plan
+            active = getattr(runtime, "current_plan", None)
+            if active is not None:
                 extra = {"plan_signature": active.signature(),
                          "plan_version": active.version,
                          "plan_algorithms": active.algorithms(),
@@ -218,6 +226,30 @@ class Trainer:
                                                        self.mesh)
             return restored
 
+        phase_attr = None
+        if self.obs.trace_on:
+            # Derived device-phase attribution (DESIGN.md §10): lay the
+            # cost model's compute / exposed-comm split of the ACTIVE
+            # plan into each retire interval. Host arithmetic only.
+            from repro.core.cost_model import DEFAULT_NET, plan_bucket_times
+            from repro.obs import attribute_step_phases
+
+            attr_net = getattr(self, "_net_cal", None) or DEFAULT_NET
+
+            def phase_attr(dt_unit: float) -> list:
+                active = getattr(runtime, "current_plan", None) or plan
+                tb = plan_bucket_times(active, net=attr_net)
+                names = [b.name for b in active.buckets]
+                k = max(1, superstep)
+                per = attribute_step_phases(dt_unit / k, tb, names=names,
+                                            staleness=staleness)
+                out = []
+                for i in range(k):
+                    base = i * dt_unit / k
+                    out.extend({**ph, "offset_s": base + ph["offset_s"]}
+                               for ph in per)
+                return out
+
         with self.mesh:
             state, _ = rt_driver.run_pipelined(
                 fn, state,
@@ -231,8 +263,10 @@ class Trainer:
                 ckpt_fn=ckpt_fn if self.ckpt_dir else None,
                 restore_fn=restore_fn if self.ckpt_dir else None,
                 adapt=runtime,
+                obs=self.obs, phase_attr=phase_attr,
             )
         self.state = state
+        self.last_plan = getattr(runtime, "current_plan", None) or plan
         if self.ckpt_dir:
             ckpt_fn(self.state)
         return self.log
@@ -247,7 +281,11 @@ class Trainer:
         if getattr(self, "_net_cal", None) is None:
             from repro.utils.calibrate import calibrate
 
-            self._net_cal = calibrate(self.mesh)
+            # the auditor (when attached) receives the post-fit ladder
+            # residuals as algorithm "dense_ladder" — the calibrator's
+            # own quality signal (DESIGN.md §10)
+            self._net_cal = calibrate(self.mesh,
+                                      auditor=getattr(self.obs, "audit", None))
         return self._net_cal
 
     def _abstract_like(self):

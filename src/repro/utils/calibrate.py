@@ -113,12 +113,32 @@ def measure_allreduce_times(mesh, axis: str = "data",
 
 def calibrate(mesh, axis: Optional[str] = None,
               sizes: Sequence[int] = DEFAULT_SIZES,
-              repeats: int = 5, isize: int = 4) -> NetworkParams:
+              repeats: int = 5, isize: int = 4,
+              auditor=None) -> NetworkParams:
     """One-shot calibration: measure + fit. ``axis`` defaults to the
-    innermost data-parallel axis present on the mesh."""
+    innermost data-parallel axis present on the mesh.
+
+    ``auditor`` (an ``obs.DriftAuditor``) receives the POST-FIT ladder
+    residuals — each measured dense-allreduce point joined against the
+    fitted model's prediction, recorded as algorithm ``"dense_ladder"``.
+    That is the calibrator's own quality signal (DESIGN.md §10): a tight
+    fit yields median_ratio ~= 1; a flagged ``dense_ladder`` entry says
+    the alpha-beta form itself doesn't describe this machine, so every
+    downstream ``select_algorithm`` call inherits that error."""
+    from repro.core.cost_model import t_dense_allreduce
+
     if axis is None:
         axis = next((a for a in ("data", "pod") if a in mesh.axis_names),
                     mesh.axis_names[0])
     meas = measure_allreduce_times(mesh, axis, sizes, repeats)
-    return fit_network_params([b for b, _ in meas], [t for _, t in meas],
-                              p=mesh.shape[axis], isize=isize)
+    p = mesh.shape[axis]
+    net = fit_network_params([b for b, _ in meas], [t for _, t in meas],
+                             p=p, isize=isize)
+    if auditor is not None:
+        for payload_bytes, t in meas:
+            n_elems = payload_bytes // isize
+            auditor.record(
+                "dense_ladder", f"calibrate@{payload_bytes}B",
+                t_dense_allreduce(p, n_elems, net), t,
+                p=p, n=n_elems, kind="calibration")
+    return net

@@ -1,0 +1,518 @@
+"""Observability layer (DESIGN.md §10): tracer, metrics registry, drift
+auditor, and their integration with the pipelined driver and the serve
+engine.
+
+The two load-bearing invariants:
+
+* obs OFF is free: the driver's loop is byte-identical, every span a
+  shared no-op context manager;
+* obs ON adds NO sync points: retire's ``block_until_ready`` stays the
+  only one (counted under a monkeypatch), the span tree is well-formed
+  Chrome-trace JSON, and the derived device phases tile each retire
+  interval exactly.
+"""
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs as obs_mod
+from repro.compat import make_mesh
+from repro.core.compressor import SyncConfig
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.obs import (
+    DriftAuditor,
+    MetricsRegistry,
+    NULL_TRACER,
+    Observability,
+    Tracer,
+    attribute_step_phases,
+    audit_sync_plan,
+    record_bucket_telemetry,
+    validate_span_tree,
+)
+from repro.optim.optimizers import OptimizerConfig
+from repro.optim.schedule import ScheduleConfig
+from repro.runtime import driver as rt_driver
+from repro.runtime import pipeline as rt_pipeline
+from repro.serve import ContinuousServeEngine, Request
+from repro.train.state import TrainConfig
+from repro.train.train_step import init_state
+
+MODEL_CFG = ModelConfig(name="obs", family="dense", num_layers=2, d_model=64,
+                        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                        dtype=jnp.float32, param_dtype=jnp.float32,
+                        max_seq_len=64)
+SYNC = SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=128,
+                  algorithm="dsar_split_allgather", min_sparse_size=1024,
+                  impl="ref", fusion_bucket_bytes=1 << 18)
+TCFG = TrainConfig(sync=SYNC, optimizer=OptimizerConfig(),
+                   schedule=ScheduleConfig(peak_lr=3e-3, warmup_steps=5,
+                                           total_steps=100),
+                   zero1=True)
+DCFG = DataConfig(global_batch=8, seq_len=32, vocab_size=256)
+KEY = jax.random.PRNGKey(0)
+
+
+# --------------------------------------------------------------------------
+# Tracer units
+# --------------------------------------------------------------------------
+
+def test_null_tracer_is_shared_noop():
+    from repro.obs.trace import _NULL_SPAN
+
+    assert not NULL_TRACER.enabled
+    # the hot-path contract: a disabled span() is the SAME object every
+    # call (no allocation), and recording is a no-op
+    assert NULL_TRACER.span("a") is NULL_TRACER.span("b") is _NULL_SPAN
+    NULL_TRACER.instant("x")
+    NULL_TRACER.complete("x", "c", 0.0, 1.0)
+    assert NULL_TRACER.events == []
+
+
+def test_span_tree_nesting_and_export(tmp_path):
+    tr = Tracer()
+    with tr.span("outer", step=1):
+        with tr.span("inner/a"):
+            pass
+        with tr.span("inner/b"):
+            pass
+    tr.instant("marker")
+    tr.counter("occupancy", active=3)
+    assert validate_span_tree(tr.events) == []
+    names = [e["name"] for e in tr.events if e["ph"] == "X"]
+    # spans record on exit, so children precede the parent in the list
+    assert names == ["inner/a", "inner/b", "outer"]
+    path = tr.export(str(tmp_path / "t.json"), meta={"run": "test"})
+    doc = json.load(open(path))
+    assert doc["displayTimeUnit"] == "ms"
+    assert doc["otherData"]["run"] == "test"
+    assert len(doc["traceEvents"]) == len(tr.events)
+    outer = next(e for e in doc["traceEvents"] if e["name"] == "outer")
+    assert outer["args"]["step"] == 1 and outer["dur"] >= 0
+
+
+def test_validate_span_tree_catches_partial_overlap():
+    evs = [
+        {"name": "a", "ph": "X", "ts": 0.0, "dur": 100.0, "pid": 1, "tid": 1},
+        {"name": "b", "ph": "X", "ts": 50.0, "dur": 100.0, "pid": 1, "tid": 1},
+    ]
+    bad = validate_span_tree(evs)
+    assert len(bad) == 1 and "partially overlaps" in bad[0]
+    # same intervals on DIFFERENT tracks: fine
+    evs[1]["tid"] = 2
+    assert validate_span_tree(evs) == []
+
+
+# --------------------------------------------------------------------------
+# Metrics registry units
+# --------------------------------------------------------------------------
+
+def test_registry_kinds_and_jsonl_roundtrip(tmp_path):
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    reg.counter("c").inc(2)
+    reg.gauge("g").set(1.5)
+    for v in [1.0, 2.0, 3.0, 4.0]:
+        reg.histogram("h").observe(v)
+    reg.series("s").append((1, "x"))
+    reg.event("ev/one", step=3, signature="sig")
+    # get-or-create returns the same object; kind conflicts raise
+    assert reg.counter("c").value == 3
+    with pytest.raises(TypeError):
+        reg.gauge("c")
+
+    path = reg.dump_jsonl(str(tmp_path / "m.jsonl"), meta={"who": "test"})
+    lines = [json.loads(ln) for ln in open(path)]
+    head = lines[0]
+    assert head["kind"] == "header" and head["schema_version"] == 2
+    assert head["meta"]["who"] == "test"
+    by = {(ln["kind"], ln.get("name")): ln for ln in lines[1:]}
+    assert by[("counter", "c")]["value"] == 3
+    assert by[("gauge", "g")]["value"] == 1.5
+    h = by[("histogram", "h")]
+    assert h["count"] == 4 and h["min"] == 1.0 and h["max"] == 4.0
+    assert by[("series", "s")]["values"] == [[1, "x"]]
+    evs = [ln for ln in lines if ln["kind"] == "event"]
+    assert evs[0]["event"] == "ev/one" and evs[0]["step"] == 3
+    assert "summary" not in reg.summary()  # smoke: renders without raising
+
+
+def test_disabled_registry_series_still_back_logs():
+    """DriverLog's public fields are Series views — they must work (as
+    plain lists) even when the registry is disabled, while events stay
+    off."""
+    reg = MetricsRegistry(enabled=False)
+    data = reg.series("train/loss").data
+    data.append(1.0)
+    assert reg.series("train/loss").data == [1.0]
+    reg.event("nope", x=1)
+    assert reg.events == []
+
+
+def test_record_bucket_telemetry_shapes():
+    reg = MetricsRegistry()
+    telem = {"b0": np.array([[3, 96.0], [5, 160.0]]),
+             "scalar": np.array([1.0])}  # wrong shape: ignored
+    record_bucket_telemetry(reg, telem)
+    assert reg.histogram("bucket/b0/nnz").values == [3.0, 5.0]
+    assert reg.histogram("bucket/b0/wire_bytes").values == [96.0, 160.0]
+    assert "bucket/scalar/nnz" not in reg.metrics
+
+
+def test_histogram_percentiles():
+    reg = MetricsRegistry()
+    reg.histogram("h").observe_many(np.arange(1, 101, dtype=np.float64))
+    s = reg.histogram("h").snapshot()
+    assert s["p50"] == pytest.approx(50.5)
+    assert s["p99"] == pytest.approx(99.01)
+    assert reg.histogram("h").percentile(90) == pytest.approx(90.1)
+
+
+# --------------------------------------------------------------------------
+# Drift auditor units
+# --------------------------------------------------------------------------
+
+def test_drift_auditor_flags_drifted_algorithm():
+    aud = DriftAuditor(flag_ratio=3.0)
+    for i in range(3):
+        aud.record("good_alg", f"b{i}", 1e-3, 1.1e-3)
+        aud.record("bad_alg", f"b{i}", 1e-3, 1e-2)   # 10x drift
+    stats = aud.per_algorithm()
+    assert not stats["good_alg"]["flagged"]
+    assert stats["bad_alg"]["flagged"]
+    assert stats["bad_alg"]["median_ratio"] == pytest.approx(10.0)
+    assert aud.flagged_algorithms() == ["bad_alg"]
+    # overall hint: median over all 6 samples
+    assert aud.net_scale_hint() == pytest.approx(np.median([1.1] * 3 + [10.0] * 3))
+    rep = aud.report()
+    assert rep["samples"] == 6 and rep["flagged"] == ["bad_alg"]
+    # emit mirrors into the registry as events + gauge
+    reg = MetricsRegistry()
+    aud.emit(reg)
+    assert len(reg.events_named("audit/algorithm_residual")) == 2
+    assert reg.gauge("audit/net_scale_hint").value is not None
+    assert "bad_alg" in aud.summary() and "DRIFT" in aud.summary()
+
+
+def test_attribute_step_phases_tile_interval():
+    dt = 0.010
+    for staleness in (0, 1):
+        phases = attribute_step_phases(dt, [0.002, 0.001],
+                                       names=["b0", "b1"],
+                                       staleness=staleness)
+        assert phases[0]["name"] == "compute"
+        # phases tile [0, dt] exactly: contiguous offsets, total == dt
+        off = 0.0
+        for ph in phases:
+            assert ph["offset_s"] == pytest.approx(off, abs=1e-12)
+            off += ph["dur_s"]
+        assert off == pytest.approx(dt, rel=1e-9)
+    # staleness=0 (sequential): exposed comm == full bucket times
+    ph0 = attribute_step_phases(dt, [0.002, 0.001], staleness=0)
+    comm = [p for p in ph0 if p["name"].startswith("comm/")]
+    assert sum(p["dur_s"] for p in comm) == pytest.approx(0.003)
+    # an interval smaller than the modeled drain still tiles (all comm)
+    tiny = attribute_step_phases(0.001, [0.002, 0.001], staleness=0)
+    assert sum(p["dur_s"] for p in tiny) == pytest.approx(0.001)
+    assert attribute_step_phases(0.0, [0.001]) == []
+
+
+# --------------------------------------------------------------------------
+# Driver integration: no extra syncs, well-formed trace, bounded overhead
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def mesh8x1():
+    return make_mesh((8, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def pipelined(mesh8x1):
+    model = build_model(MODEL_CFG)
+    with mesh8x1:
+        fn, _, plan = rt_pipeline.build_superstep(
+            model, TCFG, mesh8x1, staleness=1, steps=2)
+    return model, fn, plan
+
+
+def _drive(mesh, model, fn, plan, n=8, obs=None, phase_attr=None):
+    with mesh:
+        state, _ = init_state(model, TCFG, mesh)
+        state = rt_pipeline.attach_inflight(state, plan, mesh)
+        state, log = rt_driver.run_pipelined(
+            fn, state, start_step=0, num_steps=n,
+            batch_fn=lambda s: synthetic_batch(DCFG, s),
+            key_fn=lambda s: jax.random.fold_in(KEY, s),
+            cfg=rt_driver.DriverConfig(depth=2, prefetch=2,
+                                       steps_per_unit=2),
+            obs=obs, phase_attr=phase_attr)
+    return state, log
+
+
+def test_driver_obs_adds_no_sync_points(mesh8x1, pipelined, monkeypatch):
+    """Retire's ``block_until_ready`` is the ONLY sync point — the same
+    count with observability off and fully on (trace+metrics+derived
+    phases)."""
+    model, fn, plan = pipelined
+    real = jax.block_until_ready
+    counts = {"n": 0}
+
+    def counting(x):
+        counts["n"] += 1
+        return real(x)
+
+    def run(obs, phase_attr=None):
+        counts["n"] = 0
+        monkeypatch.setattr(jax, "block_until_ready", counting)
+        try:
+            _drive(mesh8x1, model, fn, plan, n=8, obs=obs,
+                   phase_attr=phase_attr)
+        finally:
+            monkeypatch.setattr(jax, "block_until_ready", real)
+        return counts["n"]
+
+    off = run(obs_mod.Observability())            # all-off handle
+    on = run(obs_mod.configure(trace=True, metrics=True,
+                               set_as_default=False),
+             phase_attr=lambda dt: attribute_step_phases(
+                 dt, [dt * 0.05, dt * 0.03], names=["b0", "b1"]))
+    assert off == on == 4        # one retire per 2-step unit, 8 steps
+
+
+def test_driver_trace_well_formed_and_metrics_backed(mesh8x1, pipelined,
+                                                     tmp_path):
+    model, fn, plan = pipelined
+    obs = obs_mod.configure(trace=True, metrics=True, set_as_default=False)
+    # staleness=0 (sequential model): comm is always exposed, so every
+    # retire interval gets compute + both bucket phases (under the
+    # staleness=1 model, buckets this small hide entirely under compute)
+    phase_attr = lambda dt: attribute_step_phases(   # noqa: E731
+        dt, [dt * 0.05, dt * 0.03], names=["b0", "b1"], staleness=0)
+    n = 8
+    state, log = _drive(mesh8x1, model, fn, plan, n=n, obs=obs,
+                        phase_attr=phase_attr)
+    assert int(state.step) == n
+
+    # the DriverLog's public lists ARE registry series views
+    assert log.losses is obs.metrics.series("train/loss").data
+    assert len(log.losses) == n == len(log.step_times)
+    assert obs.metrics.histogram("driver/retire_wall_s").snapshot()["count"] == 4
+
+    # well-formed span tree with the driver's host spans present...
+    assert validate_span_tree(obs.tracer.events) == []
+    names = {e["name"] for e in obs.tracer.events if e["ph"] == "X"}
+    assert {"driver/dispatch", "driver/retire"} <= names
+    # ...and the derived device phases on their own track, tiling each
+    # retire interval (compute + both buckets per unit)
+    derived = [e for e in obs.tracer.events
+               if e.get("tid") == "device-phases"]
+    assert {e["name"] for e in derived} == {"compute", "comm/b0", "comm/b1"}
+    assert len(derived) == 3 * 4
+    assert all(e["cat"] == "device.derived" for e in derived)
+
+    # the export is loadable Chrome-trace JSON
+    doc = json.load(open(obs.tracer.export(str(tmp_path / "t.json"))))
+    assert len(doc["traceEvents"]) == len(obs.tracer.events)
+
+
+def test_driver_obs_overhead_bounded(mesh8x1, pipelined):
+    """Tracing budget: <=5% per-step overhead target at 8 emulated
+    devices. Measured as best-of-2 ABBA-paired run totals; the assert
+    allows extra headroom for shared-runner noise, and still catches any
+    accidental per-span sync or allocation storm."""
+    model, fn, plan = pipelined
+    phase_attr = lambda dt: attribute_step_phases(   # noqa: E731
+        dt, [dt * 0.05, dt * 0.03], names=["b0", "b1"])
+
+    def timed(obs, pa):
+        t0 = time.perf_counter()
+        _drive(mesh8x1, model, fn, plan, n=8, obs=obs, phase_attr=pa)
+        return time.perf_counter() - t0
+
+    def on():
+        return timed(obs_mod.configure(trace=True, metrics=True,
+                                       set_as_default=False), phase_attr)
+
+    def off():
+        return timed(obs_mod.Observability(), None)
+
+    t_off = min(off(), off())
+    t_on = min(on(), on())
+    t_off = min(t_off, off())   # ABBA(A): bracket drift both ways
+    assert t_on <= 1.15 * t_off, (t_on, t_off)
+
+
+def test_record_step_straggler_watchdog():
+    reg = MetricsRegistry()
+    log = rt_driver.DriverLog(registry=reg)
+    for i in range(10):
+        rt_driver.record_step(log, i, 0.01, 1.0, straggler_factor=3.0)
+    assert log.straggler_events == []
+    rt_driver.record_step(log, 10, 1.0, 1.0, straggler_factor=3.0)
+    assert len(log.straggler_events) == 1
+    step, dt, med = log.straggler_events[0]
+    assert step == 10 and dt == 1.0 and med == pytest.approx(0.01)
+    assert reg.counter("driver/stragglers").value == 1
+    assert reg.gauge("driver/straggler_median_s").value == pytest.approx(0.01)
+    assert len(reg.events_named("driver/straggler")) == 1
+    # restarts round-trips through its backing counter
+    log.restarts += 1
+    assert log.restarts == 1 == reg.counter("driver/restarts").value
+
+
+def test_driverlog_standalone_works_like_plain_lists():
+    log = rt_driver.DriverLog()
+    log.losses.append(2.5)
+    log.step_times.append(0.1)
+    log.plan_swaps.append((3, "sig"))
+    assert log.losses[-1] == 2.5 and log.plan_swaps[0][1] == "sig"
+    assert log.restarts == 0
+
+
+# --------------------------------------------------------------------------
+# Drift audit over a real plan
+# --------------------------------------------------------------------------
+
+def test_audit_sync_plan_probes_buckets(mesh8x1, pipelined):
+    model, fn, plan = pipelined
+    reg = MetricsRegistry()
+    aud = audit_sync_plan(plan, mesh8x1, axis_name="data",
+                          reps=1, registry=reg)
+    assert len(aud) >= 1
+    stats = aud.per_algorithm()
+    for st in stats.values():
+        assert st["predicted_total_s"] > 0
+        assert st["measured_total_s"] > 0
+        assert np.isfinite(st["median_ratio"])
+    # the join was mirrored into the registry
+    assert len(reg.events_named("audit/algorithm_residual")) == len(stats)
+
+
+# --------------------------------------------------------------------------
+# Serve latency percentiles
+# --------------------------------------------------------------------------
+
+def test_serve_latency_percentiles_deterministic():
+    """Latency stats are in decode-step units on the scheduler's
+    deterministic clock: two identical runs on the same fixed trace give
+    IDENTICAL percentile dicts, and ttft == queue_delay (the prefill
+    argmax IS the first token, landed at admission)."""
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                      dtype=jnp.float32, param_dtype=jnp.float32,
+                      max_seq_len=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 256, L),
+                    max_new_tokens=m, arrival=a)
+            for i, (L, m, a) in enumerate(
+                [(3, 6, 0), (7, 4, 0), (5, 8, 1), (4, 7, 3), (6, 6, 8)])]
+
+    def run():
+        eng = ContinuousServeEngine(model, mesh, params, cache_len=32,
+                                    batch_size=4)
+        return eng.run(reqs)
+
+    r1, r2 = run(), run()
+    assert r1.latency and r1.latency == r2.latency
+    for metric in ("queue_delay", "ttft", "tpot", "e2e"):
+        assert set(r1.latency[metric]) == {"p50", "p90", "p99", "mean"}
+    assert r1.latency["ttft"] == r1.latency["queue_delay"]
+    # e2e >= queue delay for every percentile (decode takes steps)
+    assert r1.latency["e2e"]["p99"] >= r1.latency["queue_delay"]["p99"]
+
+
+def test_serve_obs_records_lifecycle(tmp_path):
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                      dtype=jnp.float32, param_dtype=jnp.float32,
+                      max_seq_len=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 256, 4),
+                    max_new_tokens=4, arrival=float(i // 2))
+            for i in range(4)]
+    obs = obs_mod.configure(trace=True, metrics=True, set_as_default=False)
+    eng = ContinuousServeEngine(model, mesh, params, cache_len=32,
+                                batch_size=2, obs=obs)
+    res = eng.run(reqs)
+    assert len(res.outputs) == 4
+    assert validate_span_tree(obs.tracer.events) == []
+    names = {e["name"] for e in obs.tracer.events if e["ph"] == "X"}
+    assert {"serve/admit", "serve/decode_step"} <= names
+    for h in ("serve/occupancy", "serve/queue_depth",
+              "serve/ttft_steps", "serve/e2e_steps"):
+        assert obs.metrics.histogram(h).snapshot()["count"] > 0
+    assert obs.metrics.gauge("serve/tok_per_s").value > 0
+    out = obs.export(trace_path=str(tmp_path / "t.json"),
+                     metrics_path=str(tmp_path / "m.jsonl"))
+    assert os.path.exists(out["trace"]) and os.path.exists(out["metrics"])
+
+
+# --------------------------------------------------------------------------
+# bench-regress compare logic
+# --------------------------------------------------------------------------
+
+def _regress():
+    sys.path.insert(0, os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))))
+    from benchmarks import regress
+    return regress
+
+
+def test_regress_loads_both_schemas_and_compares(tmp_path):
+    regress = _regress()
+    fresh, base = tmp_path / "fresh", tmp_path / "base"
+    fresh.mkdir(), base.mkdir()
+    # baseline in the OLD v1 flat-list format; fresh in v2
+    (base / "BENCH_bench_adapt.json").write_text(json.dumps(
+        [{"name": "adapt_drift_adaptive", "us_per_call": 100.0,
+          "derived": ""}]))
+    (fresh / "BENCH_bench_adapt.json").write_text(json.dumps(
+        {"schema_version": 2, "meta": {},
+         "rows": [{"name": "adapt_drift_adaptive", "us_per_call": 110.0,
+                   "derived": ""}]}))
+    (base / "BENCH_bench_serve.json").write_text(json.dumps(
+        [{"name": "serve_continuous", "us_per_call": 1.0,
+          "derived": "tok_per_s=100.0,decode_steps=50"}]))
+    (fresh / "BENCH_bench_serve.json").write_text(json.dumps(
+        [{"name": "serve_continuous", "us_per_call": 1.0,
+          "derived": "tok_per_s=60.0,decode_steps=50"}]))
+
+    cells = regress.headline_cells(str(fresh), str(base))
+    by = {c["label"]: c for c in cells}
+    # adapt: 10% slower (lower-better) — inside the 25% band
+    # serve: 40% fewer tok/s (higher-better) — regressed
+    bad = regress.compare(cells, tol=0.25)
+    assert by["adapt_drift_adaptive.us_per_call"] not in bad
+    assert by["serve_continuous.tok_per_s"] in bad
+    assert by["serve_continuous.tok_per_s"]["regression"] == pytest.approx(0.4)
+    # widen the band: nothing regresses
+    assert regress.compare(cells, tol=0.5) == []
+
+
+def test_regress_parse_derived_and_improvements():
+    regress = _regress()
+    d = regress.parse_derived("tok_per_s=61.4,continuous_wins=True,n=3")
+    assert d == {"tok_per_s": "61.4", "continuous_wins": "True", "n": "3"}
+    # improvements never fail, in either direction convention
+    cells = [
+        {"label": "lower", "fresh": 50.0, "baseline": 100.0,
+         "higher_better": False},
+        {"label": "higher", "fresh": 200.0, "baseline": 100.0,
+         "higher_better": True},
+    ]
+    assert regress.compare(cells, tol=0.25) == []
+    assert cells[0]["regression"] == pytest.approx(-0.5)
