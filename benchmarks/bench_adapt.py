@@ -289,6 +289,67 @@ def _telemetry_overhead() -> list[tuple[str, float, str]]:
              f"le_5pct={overhead <= 0.05}")]
 
 
+def _mode_recommendation() -> list[tuple[str, float, str]]:
+    """Output-mode drift (DESIGN.md §11): sweep the post-reduction
+    density from EF-warm (nnz ~ k) to fully filled-in and ask the
+    controller for its replicated <-> scattered restart recommendation
+    at every point. The mode is pinned per run (never a maybe_swap), so
+    the property that matters is STICKINESS: along the monotone sweep
+    the recommendation must switch at most once per direction, and at
+    the crossover there must be a non-empty hysteresis band where BOTH
+    incumbents keep their own layout — a workload hovering there never
+    flaps across restarts."""
+    from repro.core.cost_model import plan_bucket_times, t_param_allgather
+
+    cfg, base = _drift_setup()
+    net = cm.DEFAULT_NET
+    acfg = AdaptConfig(window=4, hysteresis=0.1, patience=2,
+                       calibrate=False)
+    ctrl_r = AdaptiveController(base, net, acfg)
+    scat = base.replan(output_mode="scattered")
+    ctrl_s = AdaptiveController(scat, net, acfg)
+    t_ag = sum(t_param_allgather(P_RANKS, b.n, net)
+               for g in base.groups for b in g.buckets)
+
+    def dens(frac):
+        return {b.name: max(float(cfg.k_per_bucket), frac * b.cols)
+                for grp in base.groups for b in grp.buckets}
+
+    # the drift: EF-warm + compute-rich (allgather fully hidden) ->
+    # filled-in + compute-poor (allgather fully exposed); the boundary
+    # phase sits at the modeled indifference point — exposure chosen so
+    # NEITHER layout beats the other by the hysteresis margin, which is
+    # exactly the workload that must not flap across restarts
+    mid = 0.3
+    tr_mid = sum(plan_bucket_times(base, P_RANKS, net,
+                                   densities=dens(mid)))
+    tsx_mid = sum(plan_bucket_times(scat, P_RANKS, net,
+                                    densities=dens(mid)))
+    h = acfg.hysteresis
+    lo = (1.0 - h) * tr_mid - tsx_mid     # below: scat incumbent flips
+    hi = tr_mid / (1.0 - h) - tsx_mid     # above: rep incumbent flips
+    e_mid = min(max((lo + hi) / 2.0, 0.0), t_ag)
+    phases = ([(dens(0.0), t_ag)] * 8          # A: scattered clearly wins
+              + [(dens(mid), t_ag - e_mid)] * 8   # B: indifference band
+              + [(dens(1.0), 0.0)] * 8)        # C: replicated clearly wins
+    recs_r = [ctrl_r.recommend_output_mode(d, ov) for d, ov in phases]
+    recs_s = [ctrl_s.recommend_output_mode(d, ov) for d, ov in phases]
+    flips_r = sum(a != b for a, b in zip(recs_r, recs_r[1:]))
+    flips_s = sum(a != b for a, b in zip(recs_s, recs_s[1:]))
+    covers_both = ("scattered" in recs_r and "replicated" in recs_r
+                   and "scattered" in recs_s and "replicated" in recs_s)
+    # the hysteresis band: phase-B points where each incumbent keeps
+    # its own layout even though the other is (marginally) modeled ahead
+    band = sum(r == "replicated" and s == "scattered"
+               for r, s in zip(recs_r, recs_s))
+    no_flap = flips_r <= 1 and flips_s <= 1
+    return [(
+        "adapt_mode_recommendation", e_mid * 1e6,
+        f"indiff_exposure_us,no_flap={no_flap},flips={flips_r}/{flips_s},"
+        f"hysteresis_band_pts={band},covers_both_modes={covers_both},"
+        f"recs_at_phases={recs_r[0][:4]}/{recs_r[8][:4]}/{recs_r[16][:4]}")]
+
+
 def _calibration() -> list[tuple[str, float, str]]:
     from repro.compat import make_mesh
     from repro.utils.calibrate import calibrate
@@ -301,5 +362,5 @@ def _calibration() -> list[tuple[str, float, str]]:
 
 
 def run() -> list[tuple[str, float, str]]:
-    return (_run_drift() + _emulated_parity() + _telemetry_overhead()
-            + _calibration())
+    return (_run_drift() + _emulated_parity() + _mode_recommendation()
+            + _telemetry_overhead() + _calibration())

@@ -1,0 +1,149 @@
+"""ZeRO-sharded training state (DESIGN.md §11): what the scattered
+output mode buys at 8 emulated host devices.
+
+Two views:
+  (a) per-device state memory (bytes, from launch.dryrun's breakdown —
+      the same accounting ``--dryrun`` prints): replicated-full vs
+      zero1 (sharded moments, replicated exchange) vs scattered
+      (sharded moments ON the owner chunks, no gradient allgather),
+      plus the per-rank gradient-exchange wire bytes of the scattered
+      vs replicated plans;
+  (b) measured wall time per training step, scattered vs replicated,
+      on the 4x2 auto-SPMD lowering the integration tests train
+      through. On an emulated-CPU host the collectives are memcpys, so
+      this is a no-regression guard for the step as a whole, not a
+      bandwidth claim — view (a) carries the wire/memory claim.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import comm
+from repro.compat import make_mesh
+from repro.core.compressor import SyncConfig
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.launch.dryrun import state_memory_breakdown
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.optim.optimizers import OptimizerConfig
+from repro.optim.schedule import ScheduleConfig
+from repro.train.state import TrainConfig
+from repro.train.train_step import build_train_step, init_state, state_shapes
+
+P_BENCH = 8
+
+
+def _model():
+    # big enough that every transformer group goes sparse at dp=8 and
+    # the optimizer state dominates params 2:1 (adam m+v) — the regime
+    # the ZeRO split targets
+    return build_model(ModelConfig(
+        name="bz", family="dense", num_layers=1, d_model=256, num_heads=4,
+        num_kv_heads=2, d_ff=512, vocab_size=512, dtype=jnp.float32,
+        param_dtype=jnp.float32, max_seq_len=64))
+
+
+def _tcfg(mode: str, zero1: bool = True) -> TrainConfig:
+    return TrainConfig(
+        sync=SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=128,
+                        algorithm="ssar_balanced_split", min_sparse_size=1024,
+                        impl="ref", output_mode=mode),
+        optimizer=OptimizerConfig(),
+        schedule=ScheduleConfig(peak_lr=1e-3, warmup_steps=5,
+                                total_steps=100000),
+        zero1=zero1)
+
+
+def bench_meta() -> dict:
+    model = _model()
+    mesh = make_mesh((P_BENCH, 1), ("data", "model"))
+    _, _, plan = state_shapes(model, _tcfg("scattered"), mesh,
+                              return_plan=True)
+    return {"zero_plan": plan.signature(), "zero_p": P_BENCH}
+
+
+def _memory_rows() -> list[tuple[str, float, str]]:
+    model = _model()
+    mesh = make_mesh((P_BENCH, 1), ("data", "model"))
+    views = {
+        "full": _tcfg("replicated", zero1=False),
+        "zero1": _tcfg("replicated", zero1=True),
+        "scattered": _tcfg("scattered", zero1=True),
+    }
+    bd = {k: state_memory_breakdown(model, t, mesh) for k, t in views.items()}
+    rows = []
+    for k, m in bd.items():
+        opt = m["opt_mu"] + m["opt_nu"]
+        opt_full = bd["full"]["opt_mu"] + bd["full"]["opt_nu"]
+        rows.append((
+            f"zero_state_{k}_P{P_BENCH}", float(m["total"]),
+            f"bytes/device,opt={opt},opt_vs_full={opt / opt_full:.3f},"
+            f"params={m['params']}"))
+    # per-rank wire bytes of the gradient exchange (cost-model registry,
+    # the quantity the acceptance bound compares)
+    _, _, plan_r = state_shapes(model, views["zero1"], mesh,
+                                return_plan=True)
+    _, _, plan_s = state_shapes(model, views["scattered"], mesh,
+                                return_plan=True)
+    wr, ws = plan_r.wire_bytes(), plan_s.wire_bytes()
+    rows.append((f"zero_wire_replicated_P{P_BENCH}", float(wr),
+                 "bytes/rank/step,grad exchange"))
+    rows.append((
+        f"zero_wire_scattered_P{P_BENCH}", float(ws),
+        f"bytes/rank/step,vs_replicated={ws / wr:.3f},"
+        f"param_ag={plan_s.param_allgather_bytes():.0f}"))
+    return rows
+
+
+def _measured_rows() -> list[tuple[str, float, str]]:
+    mesh = make_mesh((4, 2), ("data", "model"))
+    model = _model()
+    dcfg = DataConfig(global_batch=8, seq_len=32, vocab_size=512)
+    steps, rounds = 8, 4
+    key = jax.random.PRNGKey(0)
+
+    def build(mode):
+        tcfg = _tcfg(mode)
+        step_fn, _ = build_train_step(model, tcfg, mesh)
+        state, _ = init_state(model, tcfg, mesh)
+        return step_fn, state
+
+    with mesh:
+        runs = {m: build(m) for m in ("replicated", "scattered")}
+        times = {m: [] for m in runs}
+
+        def block(mode, start):
+            step_fn, state = runs[mode]
+            t0 = time.perf_counter()
+            for i in range(start, start + steps):
+                batch = jax.tree.map(jnp.asarray, synthetic_batch(dcfg, i))
+                state, met = step_fn(state, batch, jax.random.fold_in(key, i))
+                jax.block_until_ready(met["loss"])
+            runs[mode] = (step_fn, state)
+            return (time.perf_counter() - t0) / steps * 1e6
+
+        for m in runs:                      # compile + warm, untimed
+            block(m, 0)
+        order = ("replicated", "scattered")
+        for r in range(rounds):             # ABBA-paired rounds
+            for m in (order if r % 2 == 0 else order[::-1]):
+                times[m].append(block(m, (r + 1) * steps))
+
+    mean = {m: sum(v) / len(v) for m, v in times.items()}
+    return [
+        ("zero_step_replicated", mean["replicated"], f"P=8,steps={steps}"),
+        ("zero_step_scattered", mean["scattered"],
+         f"P=8,vs_replicated={mean['scattered'] / mean['replicated']:.2f}x"),
+    ]
+
+
+def run() -> list[tuple[str, float, str]]:
+    return _memory_rows() + _measured_rows()
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

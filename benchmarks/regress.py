@@ -124,6 +124,23 @@ def headline_cells(fresh_dir: str, baseline_dir: str) -> list[dict]:
                       file=sys.stderr)
         if not shared:
             print("regress: no shared portfolio_* rows", file=sys.stderr)
+
+    pair = both("BENCH_bench_zero.json")
+    if pair:
+        fresh, base = pair
+        # the two ZeRO acceptance quantities: per-device state bytes of
+        # the scattered layout (memory claim) and its per-rank gradient
+        # wire bytes (exchange claim) — both analytic, so near-zero
+        # run-to-run noise; the step-time rows stay informational (the
+        # emulated-CPU host is too jittery to gate on)
+        for name in ("zero_state_scattered_P8", "zero_wire_scattered_P8"):
+            if name in fresh and name in base:
+                cells.append({"label": f"{name}.us_per_call",
+                              "fresh": _cell_us(fresh[name]),
+                              "baseline": _cell_us(base[name]),
+                              "higher_better": False})
+            else:
+                print(f"regress: row {name!r} missing", file=sys.stderr)
     return cells
 
 

@@ -51,6 +51,7 @@ MODULES = {
     "overlap": "benchmarks.bench_overlap",          # §4/§7 non-blocking
     "adapt": "benchmarks.bench_adapt",              # DESIGN.md §7 re-planning
     "bench_serve": "benchmarks.bench_serve",        # DESIGN.md §8 serving
+    "zero": "benchmarks.bench_zero",                # DESIGN.md §11 ZeRO state
 }
 
 

@@ -46,6 +46,12 @@ def main():
                          "supersteps + async driver (DESIGN.md §6)")
     ap.add_argument("--superstep", type=int, default=4,
                     help="steps per scanned superstep (with --pipeline)")
+    ap.add_argument("--zero", action="store_true",
+                    help="ZeRO-sharded training state (DESIGN.md §11): the "
+                         "gradient exchange stops at the owner shard "
+                         "(scattered output mode, no allgather) and the "
+                         "optimizer moments live on the owned chunks; "
+                         "checkpoints interoperate with replicated runs")
     ap.add_argument("--adapt", action="store_true",
                     help="closed-loop re-planning (DESIGN.md §7): measured "
                          "per-bucket densities + calibrated alpha-beta "
@@ -89,7 +95,9 @@ def main():
     tcfg = TrainConfig(
         sync=SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=512,
                         algorithm="dsar_split_allgather", qsgd_bits=4,
-                        min_sparse_size=65536, impl="ref"),
+                        min_sparse_size=65536, impl="ref",
+                        output_mode="scattered" if args.zero else
+                        "replicated"),
         optimizer=OptimizerConfig(kind="adamw"),
         schedule=ScheduleConfig(kind="wsd", peak_lr=6e-4, warmup_steps=20,
                                 total_steps=steps),
@@ -97,6 +105,12 @@ def main():
         zero1=True,
     )
     mesh = make_host_mesh(data=4, model=2)
+    if args.zero:
+        from repro.launch.dryrun import state_memory_breakdown
+
+        mem = state_memory_breakdown(model, tcfg, mesh)
+        print("zero: per-device state "
+              + ", ".join(f"{k}={v/1e6:.1f}MB" for k, v in mem.items()))
     trainer = Trainer(model, tcfg, mesh, data, ckpt_dir=args.ckpt_dir,
                       ckpt_every=25, obs=obs)
     start = trainer.init_or_resume()

@@ -30,6 +30,7 @@ from repro.comm.executor import (
     execute_plan_spmd,
     reduce_buckets,
     reduce_buckets_spmd,
+    unchunk_buckets_spmd,
 )
 from repro.comm.plan import (
     ActivationBucketSpec,
@@ -63,5 +64,6 @@ __all__ = [
     "pack_group",
     "reduce_buckets",
     "reduce_buckets_spmd",
+    "unchunk_buckets_spmd",
     "unpack_group",
 ]

@@ -65,22 +65,29 @@ def _qsgd_rand(key, bucket_idx: int, coll: CollectiveContext,
     ])
 
 
-def _bucket_telemetry(out, plan, group, b, p_data: int, p_pod: int):
+def _bucket_telemetry(out, plan, group, b, p_data: int, p_pod: int,
+                      coll: Optional[CollectiveContext] = None):
     """In-graph per-bucket stats (DESIGN.md §7): a (2,) f32 vector of
     [post-reduction nnz, modeled wire bytes at the measured nnz]. The nnz
     count runs on the already-materialized reduced buffer — O(n) local
     work, no collectives — and is replicated across ranks because the
-    buffer is. The adaptive controller windows these on the host.
-    Emitted for EF (compressed) buckets only: raw-dense buckets have no
-    replan freedom, so their stats could never influence a decision."""
+    buffer is. Scattered manual lowerings are the exception: ``out`` is
+    my owned shard only, so the global nnz is one scalar psum over the
+    disjoint shards (``coll`` supplies it; the SPMD formulation sees the
+    full buffer and needs none). The adaptive controller windows these
+    on the host. Emitted for EF (compressed) buckets only: raw-dense
+    buckets have no replan freedom, so their stats could never influence
+    a decision."""
     from repro.core.cost_model import bucket_wire_bytes, pod_wire_bytes
 
     cfg = plan.cfg
     nnz = jnp.count_nonzero(out).astype(jnp.float32)
+    if plan.scattered and coll is not None:
+        nnz = coll.psum(nnz)
     k = plan.bucket_k(group, b)
     vb = cfg.qsgd_bits if cfg.qsgd_bits is not None else 32
     wire = bucket_wire_bytes(b.algorithm, p_data, k, b.n, nnz=nnz,
-                             value_bits=vb)
+                             value_bits=vb, scattered=plan.scattered)
     if p_pod > 1:
         sparse_pod = b.pod_sparse and group.rows == 1
         wire = wire + pod_wire_bytes(p_pod, b.n, min(b.n, p_data * k),
@@ -108,12 +115,20 @@ def _pod_sparse_exchange(out, pod_axis: str, cap: int) -> jax.Array:
 
 
 def _reduce_flat_sparse(u_flat, algorithm: str, *,
-                        coll: CollectiveContext, impl: str = "auto"):
+                        coll: CollectiveContext, impl: str = "auto",
+                        scatter: bool = False):
     """SSAR variants for flat (rows==1) buckets; returns (dense (n,),
     fold). ``fold`` is the capacity-clamped pre-scale mass of the
     portfolio algorithms (DESIGN.md §9) — the caller adds it into the
     bucket's EF residual (the global-residual rule) — and None for the
-    unclamped classics."""
+    unclamped classics.
+
+    ``scatter`` (DESIGN.md §11) returns (my owned (n/p,) shard, fold)
+    instead: the portfolio algorithms terminate at the shard natively
+    (their final allgather never runs — the wire win); the classics have
+    no reduce-scatter wire form, so they reduce replicated and slice —
+    correct, no wire saving, and the cost model charges them the
+    replicated rate (their registry entries are not scatter-capable)."""
     from repro.core import sparse_stream as ss
     from repro.core.allreduce import (
         ssar_balanced_split_inside,
@@ -122,21 +137,30 @@ def _reduce_flat_sparse(u_flat, algorithm: str, *,
         ssar_split_allgather_inside,
     )
 
+    def _mine(dense):
+        w = u_flat.n // coll.p
+        return jax.lax.dynamic_slice_in_dim(
+            dense.reshape(coll.p, w), coll.axis_rank(), 1, axis=0
+        ).reshape(w)
+
     if algorithm == "ssar_recursive_double":
         out = ssar_recursive_double_inside(
             u_flat.to_stream(), axis_name=coll.axis_name, p=coll.p,
             n=u_flat.n)
-        return out.to_dense(u_flat.n), None
+        dense = out.to_dense(u_flat.n)
+        return (_mine(dense) if scatter else dense), None
     if algorithm == "ssar_split_allgather":
         stream = ssar_split_allgather_inside(
             u_flat, axis_name=coll.axis_name, p=coll.p)
-        return ss.densify(stream, u_flat.n), None
+        dense = ss.densify(stream, u_flat.n)
+        return (_mine(dense) if scatter else dense), None
     if algorithm == "ssar_balanced_split":
         return ssar_balanced_split_inside(
-            u_flat, axis_name=coll.axis_name, p=coll.p, impl=impl)
+            u_flat, axis_name=coll.axis_name, p=coll.p, impl=impl,
+            scatter=scatter)
     if algorithm == "ssar_rearranged_rs":
         return ssar_rearranged_rs_inside(
-            u_flat, axis_name=coll.axis_name, p=coll.p)
+            u_flat, axis_name=coll.axis_name, p=coll.p, scatter=scatter)
     raise ValueError(f"not a flat sparse algorithm: {algorithm!r}")
 
 
@@ -169,6 +193,16 @@ def reduce_buckets(
     TrainState.inflight for one step and applies it while the NEXT step's
     collectives run; :func:`apply_buckets` is the other half.
 
+    Scattered plans (DESIGN.md §11) stop at the owner shard: every
+    reduced value is my (1, rows, cols/p) owned column chunk (leading
+    replica axis, like the residuals) instead of the replicated (rows,
+    cols) buffer. Scatter-capable algorithms skip their final allgather
+    (the wire win); raw-dense buckets lower to a true psum_scatter;
+    non-capable algorithms and the emulated lowering reduce replicated
+    and slice (exact parity, no wire saving). Clamp folds are self-local
+    — each rank's fold covers only mass it clamped — so the EF residual
+    update below is unchanged and residuals stay full width.
+
     leaves: flat per-rank grad leaves (original layouts, jax.tree.leaves
     order of the plan's param tree).
     residuals: bucket-keyed dict; inside shard_map each value carries its
@@ -182,9 +216,32 @@ def reduce_buckets(
     from repro.core.topk import UniformStream
 
     cfg = plan.cfg
+    scattered = plan.scattered
+    if scattered and p_pod > 1:
+        raise ValueError(
+            "scattered output mode is single-pod only (p_pod == 1): the "
+            "owner shard of the cross-pod sum is not local to any pod")
     replicas = p_data * p_pod
     scale = 1.0 / replicas if cfg.mean else 1.0
     coll = CollectiveContext(data_axis, p_data, native=native, rank=data_rank)
+
+    def _own_cols(out2d):
+        """Replicated (rows, cols) -> my (rows, cols/p) column shard."""
+        rows, cols = out2d.shape
+        w = cols // p_data
+        return jax.lax.dynamic_slice_in_dim(
+            out2d.reshape(rows, p_data, w), coll.axis_rank(), 1, axis=1
+        ).reshape(rows, w)
+
+    def _psum_scatter_cols(x2d):
+        """Dense reduce-scatter over columns: rank r keeps the summed
+        columns [r*w, (r+1)*w) — the true (P-1)/P·n wire form natively;
+        the psum-only lowering sums replicated and slices."""
+        if native:
+            return jax.lax.psum_scatter(
+                x2d, data_axis, scatter_dimension=1, tiled=True)
+        return _own_cols(coll.psum(x2d))
+
     if pod_axis is not None and pod_rank is None:
         if not native:
             raise ValueError("emulated multi-pod sync needs a pod rank feed")
@@ -205,6 +262,14 @@ def reduce_buckets(
             if not b.sparse and b.name not in residuals:
                 # Fused dense bucket: no feedback state, plain psum —
                 # and no telemetry: nothing a replan could change here.
+                # Scattered: the psum becomes a true reduce-scatter.
+                if scattered:
+                    out = _psum_scatter_cols(seg)
+                    if pod_axis is not None:          # p_pod == 1 (guard)
+                        out = safe_psum(out, pod_axis)
+                    reduced[b.name] = (out * scale)[None]
+                    bucket_idx += 1
+                    continue
                 out = safe_psum(seg, data_axis)
                 if pod_axis is not None:
                     out = safe_psum(out, pod_axis)
@@ -235,7 +300,8 @@ def reduce_buckets(
                 # end-representation (paper §5.3.3): STILL compress + EF,
                 # then allreduce the densified stream — the legacy 'auto
                 # -> dense' semantics of sparse_allreduce_inside.
-                out = safe_psum(u.densify(), data_axis)
+                out = (_psum_scatter_cols(u.densify()) if scattered
+                       else safe_psum(u.densify(), data_axis))
             elif algorithm == "dsar_split_allgather":
                 rand = None
                 if qsgd is not None:
@@ -244,16 +310,19 @@ def reduce_buckets(
                 out = dsar_split_allgather_batched_inside(   # Alg. 2 line 3
                     u, axis_name=data_axis, p=p_data, qsgd=qsgd,
                     rand=rand, out_dtype=jnp.float32, impl=cfg.impl,
-                    coll=coll)
+                    coll=coll, scatter=scattered)
             else:
                 # SSAR keeps a sparse end-representation; flat rows only.
                 assert group.rows == 1, (b.name, algorithm)
                 flat = UniformStream(u.lidx[0], u.val[0], cfg.bucket_size)
                 out, fold = _reduce_flat_sparse(flat, algorithm, coll=coll,
-                                                impl=cfg.impl)
+                                                impl=cfg.impl,
+                                                scatter=scattered)
                 out = out[None, :]
             if pod_axis is not None:
-                if b.pod_sparse and native and group.rows == 1:
+                if scattered:
+                    out = safe_psum(out, pod_axis)  # p_pod == 1 (guard)
+                elif b.pod_sparse and native and group.rows == 1:
                     # Adaptive cross-pod demotion (DESIGN.md §7): the
                     # within-pod result stayed under delta, so the DCN
                     # hop rides a sparse stream exchange, not dense psum.
@@ -261,9 +330,9 @@ def reduce_buckets(
                     out = _pod_sparse_exchange(out, pod_axis, cap)
                 else:
                     out = safe_psum(out, pod_axis)            # hierarchical
-            reduced[b.name] = out * scale
+            reduced[b.name] = (out * scale)[None] if scattered else out * scale
             telemetry[b.name] = _bucket_telemetry(out, plan, group, b,
-                                                  p_data, p_pod)
+                                                  p_data, p_pod, coll=coll)
             if fold is not None:
                 # Global-residual rule (DESIGN.md §9): mass clamped off
                 # the wire by a portfolio algorithm re-enters THIS rank's
@@ -285,7 +354,21 @@ def apply_buckets(plan: SyncPlan, reduced: dict, leaves: Sequence[jax.Array]):
     leaves: shape/dtype references for the unpack (any per-rank leaf tree
     of the plan's layout). Returns the flat new-leaf list; leaves not
     covered by the plan come back as None.
+
+    Scattered owner chunks are NOT unpackable here — the optimizer
+    consumes them directly and the allgather moves to the PARAM side
+    (train/train_step.py); the SPMD formulation may first rebuild full
+    buffers via :func:`unchunk_buckets_spmd` and then apply. The shape
+    check below catches the misuse before it becomes an opaque reshape.
     """
+    for group in plan.groups:
+        for b in group.buckets:
+            if reduced[b.name].shape != (group.rows, b.cols):
+                raise ValueError(
+                    f"apply_buckets expects replicated (rows, cols) "
+                    f"buffers; got {reduced[b.name].shape} for {b.name} — "
+                    "scattered chunks feed the shard update "
+                    "(_zero_scattered_update) or unchunk_buckets_spmd")
     new_leaves: list = [None] * plan.num_leaves
     for group in plan.groups:
         parts = [reduced[b.name] for b in group.buckets]
@@ -372,14 +455,32 @@ def reduce_buckets_spmd(
     fold into the same sum here — as does the sparse pod exchange of
     ``pod_sparse`` buckets (exact by construction). Telemetry still
     reports the wire cost of the NATIVE path this formulation models.
+
+    Scattered plans (DESIGN.md §11): reduced values become the FULL
+    (p_data, rows, cols/p) owner-chunk stack — chunk r holds exactly the
+    columns rank r owns, bit-identical elements to the replicated
+    buffer — laid out to shard 1/P per device under
+    ``plan.scattered_specs``. XLA's partitioner turns the sum + chunked
+    use into its own reduce-scatter; the formulation models the same
+    wire the native scatter path pays.
     """
     from repro.comm.buckets import to_canonical
     from repro.core import topk as topk_mod
 
     cfg = plan.cfg
+    scattered = plan.scattered
+    if scattered and p_pod > 1:
+        raise ValueError(
+            "scattered output mode is single-pod only (p_pod == 1)")
     replicas = p_data * p_pod
     scale = 1.0 / replicas if cfg.mean else 1.0
     qsgd = cfg.qsgd()
+
+    def _chunked(out2d):
+        """(rows, cols) full sum -> (p_data, rows, cols/p) owner chunks."""
+        rows, cols = out2d.shape
+        w = cols // p_data
+        return out2d.reshape(rows, p_data, w).transpose(1, 0, 2)
 
     reduced: dict = {}
     new_residuals: dict = {}
@@ -400,7 +501,8 @@ def reduce_buckets_spmd(
                                        b.col_start + b.cols, axis=2)
             if not b.sparse and b.name not in residuals:
                 # raw-dense: no telemetry (see _bucket_telemetry)
-                reduced[b.name] = seg.sum(axis=0) * scale
+                out = seg.sum(axis=0) * scale
+                reduced[b.name] = _chunked(out) if scattered else out
                 bucket_idx += 1
                 continue
             res = residuals[b.name]                           # (R, rows, cols)
@@ -425,12 +527,29 @@ def reduce_buckets_spmd(
                 dpod = (xq.reshape(p_pod, p_data, rows, shard)
                         .transpose(0, 2, 1, 3).reshape(p_pod, rows, mb))
             out = dpod.sum(axis=0)
-            reduced[b.name] = out * scale
+            reduced[b.name] = (_chunked(out * scale) if scattered
+                               else out * scale)
             telemetry[b.name] = _bucket_telemetry(out, plan, group, b,
                                                   p_data, p_pod)
             new_residuals[b.name] = residual.astype(res.dtype)
             bucket_idx += 1
     return reduced, new_residuals, telemetry
+
+
+def unchunk_buckets_spmd(plan: SyncPlan, reduced: dict) -> dict:
+    """Scattered (p, rows, w) owner-chunk stacks -> replicated (rows,
+    cols) buffers. Pure reshapes: the SPMD formulation holds the full
+    stack (chunk r IS columns [r*w, (r+1)*w)), so the inverse of the
+    executor's ``_chunked`` is exact — XLA materializes the gather this
+    implies, which is precisely the param/grad allgather the manual
+    scattered path issues explicitly."""
+    out = dict(reduced)
+    for group in plan.groups:
+        for b in group.buckets:
+            ch = reduced[b.name]
+            p, rows, w = ch.shape
+            out[b.name] = ch.transpose(1, 0, 2).reshape(rows, p * w)
+    return out
 
 
 def apply_buckets_spmd(plan: SyncPlan, reduced: dict,

@@ -128,8 +128,25 @@ class SyncPlan:
     num_leaves: int
     groups: tuple[GroupSpec, ...]
     version: int = 0              # bumped by every replan()
+    # ZeRO-sharded exchange (DESIGN.md §11). 'replicated': every rank
+    # re-densifies the full reduction (the classic sparse allreduce).
+    # 'scattered': the exchange stops at the owner shard — rank r keeps
+    # bucket columns [r*w, (r+1)*w), w = cols/dp_total — and the
+    # optimizer update runs on the shard, followed by a dense param
+    # allgather. Single-pod only (the cross-pod phase re-replicates).
+    output_mode: str = "replicated"
 
     # -- summary -----------------------------------------------------------
+    @property
+    def scattered(self) -> bool:
+        return self.output_mode == "scattered"
+
+    def owned_cols(self, b: "BucketSpec") -> int:
+        """Column width of one rank's owned range of a bucket. Always
+        integral: the column quantum is bucket_size x dp_total."""
+        assert b.cols % self.dp_total == 0, (b.name, b.cols, self.dp_total)
+        return b.cols // self.dp_total
+
     @property
     def buckets(self) -> tuple[BucketSpec, ...]:
         return tuple(b for g in self.groups for b in g.buckets)
@@ -156,10 +173,14 @@ class SyncPlan:
 
     def signature(self) -> str:
         """Stable content key for the compiled-step cache and checkpoint
-        meta: per-bucket algorithm (+pod-sparse marker), geometry-ordered."""
-        return ",".join(
+        meta: per-bucket algorithm (+pod-sparse marker), geometry-ordered.
+        Scattered plans are prefixed — the output mode changes the
+        compiled step's state layout, so it MUST key the cache (replicated
+        signatures keep their historical form for checkpoint compat)."""
+        algos = ",".join(
             f"{b.name}={b.algorithm}{'+ps' if b.pod_sparse else ''}"
             for b in self.buckets)
+        return f"out=scattered|{algos}" if self.scattered else algos
 
     def bucket_k(self, group: "GroupSpec", b: "BucketSpec") -> int:
         """TOTAL selected items of one bucket per rank per step."""
@@ -169,7 +190,8 @@ class SyncPlan:
     def replan(self, densities: Optional[dict] = None, net=None, *,
                algorithms: Optional[dict] = None,
                pod_sparse: Optional[dict] = None,
-               allow: Optional[tuple] = None) -> "SyncPlan":
+               allow: Optional[tuple] = None,
+               output_mode: Optional[str] = None) -> "SyncPlan":
         """A successor plan with re-selected bucket algorithms.
 
         Either re-run the cost model with MEASURED post-reduction nnz per
@@ -187,6 +209,11 @@ class SyncPlan:
           representation (``ef`` pinned), so TrainState layout and
           checkpoints are invariant under every replan;
         * batched (rows > 1) buckets stay within BATCHED_ALGORITHMS.
+
+        ``output_mode`` overrides the plan's output mode (None keeps it).
+        NOTE: a mode change alters the inflight/optimizer state layout —
+        only a runtime that rebuilds state (not the drain-barrier swap)
+        may apply one; AdaptiveRuntime pins the mode for this reason.
         """
         from repro.core.cost_model import DEFAULT_NET, select_bucket_algorithm
 
@@ -223,8 +250,12 @@ class SyncPlan:
                                         g.cols, g.slots, tuple(new_buckets)))
         import dataclasses
 
+        mode = self.output_mode if output_mode is None else output_mode
+        if mode not in ("replicated", "scattered"):
+            raise ValueError(f"unknown output_mode {mode!r}")
         return dataclasses.replace(self, groups=tuple(new_groups),
-                                   version=self.version + 1)
+                                   version=self.version + 1,
+                                   output_mode=mode)
 
     # -- error-feedback residual state (keyed by bucket) -------------------
     def residual_shapes(self) -> dict[str, jax.ShapeDtypeStruct]:
@@ -254,12 +285,42 @@ class SyncPlan:
         return {k: jnp.zeros(s.shape, s.dtype)
                 for k, s in self.residual_shapes().items()}
 
+    # -- owner-chunk layout (scattered mode, DESIGN.md §11) ----------------
+    def scattered_shapes(self) -> dict[str, jax.ShapeDtypeStruct]:
+        """Bucket-name -> (dp_total, rows, cols/dp_total) owner-chunk
+        layout: chunk r is rank r's owned column range. The SAME leading-
+        per-replica-axis convention as residuals — shard_map sees (1,
+        rows, w), auto-SPMD the full chunked array. This is the layout of
+        scattered reduced/inflight buffers AND of the sharded optimizer
+        moments built on top of them."""
+        out = {}
+        for g in self.groups:
+            for b in g.buckets:
+                out[b.name] = jax.ShapeDtypeStruct(
+                    (self.dp_total, g.rows, self.owned_cols(b)), jnp.float32)
+        return out
+
+    def scattered_specs(self, dp_axes=("pod", "data")) -> dict:
+        from jax.sharding import PartitionSpec as P
+
+        out = {}
+        for g in self.groups:
+            for b in g.buckets:
+                out[b.name] = P(dp_axes,
+                                "model" if g.model_sharded else None, None)
+        return out
+
     # -- in-flight reduced-bucket state (non-blocking runtime, DESIGN §6) --
     def inflight_shapes(self) -> dict[str, jax.ShapeDtypeStruct]:
-        """Bucket-name -> ShapeDtypeStruct of the REDUCED (rows, cols) f32
-        buffer held between a superstep's reduce and the next superstep's
-        apply. EVERY bucket has one (dense buckets too — their psum result
-        is equally in flight); only sparse buckets carry residuals."""
+        """Bucket-name -> ShapeDtypeStruct of the REDUCED f32 buffer held
+        between a superstep's reduce and the next superstep's apply.
+        EVERY bucket has one (dense buckets too — their psum result is
+        equally in flight); only sparse buckets carry residuals.
+        Replicated mode: the full (rows, cols) buffer. Scattered mode:
+        the (dp_total, rows, cols/dp_total) owner chunks — each rank only
+        ever holds its 1/P shard of the reduction."""
+        if self.scattered:
+            return self.scattered_shapes()
         out = {}
         for g in self.groups:
             for b in g.buckets:
@@ -267,11 +328,15 @@ class SyncPlan:
                                                    jnp.float32)
         return out
 
-    def inflight_specs(self) -> dict:
-        """Reduced buffers are dp-replicated (the collective already ran);
-        model-sharded groups keep their row sharding under auto."""
+    def inflight_specs(self, dp_axes=("pod", "data")) -> dict:
+        """Replicated reduced buffers are dp-replicated (the collective
+        already ran); model-sharded groups keep their row sharding under
+        auto. Scattered buffers shard their leading chunk axis over the
+        dp axes, like residuals."""
         from jax.sharding import PartitionSpec as P
 
+        if self.scattered:
+            return self.scattered_specs(dp_axes)
         out = {}
         for g in self.groups:
             for b in g.buckets:
@@ -282,48 +347,52 @@ class SyncPlan:
         return {k: jnp.zeros(s.shape, s.dtype)
                 for k, s in self.inflight_shapes().items()}
 
-    # -- analytic wire traffic (per rank per step) -------------------------
-    def wire_bytes(self, p: Optional[int] = None) -> float:
-        """Bytes on the wire per rank per step under this plan. Dense
-        buckets pay the Rabenseifner dense-allreduce cost; sparse buckets
-        pay split-phase items + the (possibly quantized) gather phase."""
+    # -- analytic wire traffic -------------------------------------------
+    def wire_bytes(self, p: Optional[int] = None, *,
+                   aggregate: bool = False) -> float:
+        """GRADIENT-EXCHANGE bytes on the wire under this plan, per rank
+        per step by default; ``aggregate=True`` multiplies by ``p`` (the
+        whole data axis). ONE accounting for every mode and algorithm:
+        each bucket delegates to ``cost_model.bucket_wire_bytes`` — the
+        same registry entry the executor's in-graph telemetry charges —
+        so the modeled figure, the measured figure, and the adaptive
+        controller can never diverge (the PR-5 hand-written per-algorithm
+        arithmetic here had drifted from the registry's capped-phase
+        charges). Scattered mode drops each algorithm's gather/allgather
+        term; the dense param allgather that replaces it is reported
+        separately by :meth:`param_allgather_bytes` (it is overlappable
+        and algorithm-independent, so mixing it into the per-algorithm
+        exchange figure would blur what the mode actually saves)."""
+        from repro.core.cost_model import bucket_wire_bytes
+
         p = p or self.dp_total
         cfg = self.cfg
+        vb = cfg.qsgd_bits if cfg.qsgd_bits is not None else 32
         total = 0.0
         for g in self.groups:
             for b in g.buckets:
-                n = b.n
-                if not b.sparse:
-                    total += 2 * (p - 1) / p * n * 4
-                    continue
-                nnz = g.rows * (b.cols // cfg.bucket_size) * cfg.k_per_bucket
-                if b.algorithm == "ssar_rearranged_rs":
-                    # Stream-form reduce-scatter: per-round capped sends
-                    # replace the a2a split phase entirely (DESIGN.md §9).
-                    from repro.core.cost_model import rearranged_round_caps
-                    caps = rearranged_round_caps(nnz, n, p)
-                    total += sum(send for send, _ in caps) * 8
-                    total += (p - 1) * caps[-1][1] * 8   # capped allgather
-                    continue
-                total += (p - 1) / p * nnz * 8          # idx+val split phase
-                if b.algorithm == "ssar_balanced_split":
-                    # Balanced owner shards: allgather of p capped shards.
-                    from repro.core.cost_model import balanced_shard_cap
-                    total += (p - 1) * balanced_shard_cap(nnz, p, n) * 8
-                    continue
-                if b.algorithm == "dsar_split_allgather":
-                    if cfg.qsgd_bits is not None:
-                        total += (p - 1) / p * (n * cfg.qsgd_bits / 8
-                                                + n / cfg.qsgd_bucket * 4)
-                    else:
-                        total += (p - 1) / p * n * 4    # dense gather fp32
-                else:                                    # sparse result
-                    total += (p - 1) / p * nnz * 8
-        return total
+                total += bucket_wire_bytes(
+                    b.algorithm, p, self.bucket_k(g, b), b.n,
+                    value_bits=vb, scattered=self.scattered)
+        return total * (p if aggregate else 1)
+
+    def param_allgather_bytes(self, p: Optional[int] = None, *,
+                              aggregate: bool = False) -> float:
+        """Per-rank bytes of the dense updated-param allgather that
+        scattered mode pays instead of the gradient-side gather: every
+        bucket ships its (P-1)/P foreign fp32 columns. Zero in replicated
+        mode (params never leave the rank). Overlappable with the next
+        step's forward (DESIGN.md §11)."""
+        if not self.scattered:
+            return 0.0
+        p = p or self.dp_total
+        total = sum((p - 1) / p * b.n * 4 for b in self.buckets)
+        return total * (p if aggregate else 1)
 
     def describe(self) -> str:
         lines = [f"SyncPlan: {self.num_leaves} leaves -> "
-                 f"{self.num_buckets} buckets ({self.num_sparse_buckets} sparse)"]
+                 f"{self.num_buckets} buckets ({self.num_sparse_buckets} sparse)"
+                 + (" [scattered]" if self.scattered else "")]
         for g in self.groups:
             lines.append(f"  group {g.gid}: rows={g.rows} cols={g.cols} "
                          f"leaves={len(g.slots)} "
@@ -421,7 +490,11 @@ def build_sync_plan(param_shapes, param_specs, cfg, dp_total: int) -> SyncPlan:
             model_axis(spec) is not None for _, _, spec, _, _ in entries)
         groups.append(GroupSpec(gid, rows, model_sharded, group_cols,
                                 tuple(slots), tuple(buckets)))
-    return SyncPlan(cfg, dp_total, len(leaves), tuple(groups))
+    mode = getattr(cfg, "output_mode", "replicated")
+    if mode not in ("replicated", "scattered"):
+        raise ValueError(f"unknown output_mode {mode!r}")
+    return SyncPlan(cfg, dp_total, len(leaves), tuple(groups),
+                    output_mode=mode)
 
 
 # --------------------------------------------------------------------------

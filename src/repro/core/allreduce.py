@@ -236,6 +236,7 @@ def ssar_balanced_split_inside(
     axis_name: str,
     p: int,
     impl: str = "auto",
+    scatter: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Balanced split-and-gather (Ok-Top-k style, DESIGN.md §9).
 
@@ -247,7 +248,15 @@ def ssar_balanced_split_inside(
     (idx, val) shards — (P-1) * cap items instead of split_allgather's
     O(kP) worst-case range union. Returns (dense (n,), fold (n,)): fold
     carries my range's clamped-off partial sums (zero when the cap does
-    not bind, e.g. full index overlap)."""
+    not bind, e.g. full index overlap).
+
+    ``scatter`` (DESIGN.md §11) terminates at the owner shard: the
+    gather phase — the capped allgather, which is exactly what the wire
+    saves — is SKIPPED and the return is (shard (n/p,), fold (n,)).
+    Bit-parity by construction: owned ranges are disjoint, so the
+    replicated dense restricted to my range IS the clamped shard; the
+    re-top-k and its fold are kept so EF trajectories match the
+    replicated mode exactly."""
     nb, k = u.lidx.shape
     b = u.bucket_size
     n = nb * b
@@ -260,12 +269,14 @@ def ssar_balanced_split_inside(
     selected = jnp.zeros_like(shard).at[sel_idx].set(sel_val)
     my_rank = jax.lax.axis_index(axis_name)
     base = (my_rank * range_n).astype(jnp.int32)
+    fold = jax.lax.dynamic_update_slice(
+        jnp.zeros((n,), shard.dtype), shard - selected, (base,))
+    if scatter:
+        return selected, fold
     gidx = sel_idx.astype(jnp.int32) + base
     all_idx = jax.lax.all_gather(gidx, axis_name, tiled=True)   # (p*cap,)
     all_val = jax.lax.all_gather(sel_val, axis_name, tiled=True)
     dense = jnp.zeros((n,), shard.dtype).at[all_idx].add(all_val, mode="drop")
-    fold = jax.lax.dynamic_update_slice(
-        jnp.zeros((n,), shard.dtype), shard - selected, (base,))
     return dense, fold
 
 
@@ -274,6 +285,7 @@ def ssar_rearranged_rs_inside(
     *,
     axis_name: str,
     p: int,
+    scatter: bool = False,
 ) -> tuple[jax.Array, jax.Array]:
     """Rearranged reduce-scatter + allgather (SparDL style, DESIGN.md §9).
 
@@ -285,7 +297,14 @@ def ssar_rearranged_rs_inside(
     smallest-magnitude ones and are accumulated into ``fold`` at their
     global coordinate (the global-residual rule) instead of being lost.
     Final phase: allgather of the disjoint owned shards. Returns
-    (dense (n,), fold (n,))."""
+    (dense (n,), fold (n,)).
+
+    ``scatter`` (DESIGN.md §11): the MSB-first halving ends rank r
+    holding exactly the owned range [r*n/p, (r+1)*n/p) — the natural
+    reduce-scatter. The final allgather is skipped and the return is
+    (shard (n/p,), fold (n,)), densified at range-local coordinates;
+    rounds and caps are untouched, so folds and numerics match the
+    replicated mode restricted to the owned range."""
     assert p & (p - 1) == 0, "P must be a power of two (paper assumption 2)"
     nb, kpb = u.lidx.shape
     n = u.n
@@ -320,6 +339,12 @@ def ssar_rearranged_rs_inside(
         s = clamped
         lo = jnp.where(keep_lower, lo, mid).astype(jnp.int32)
         length = half
+    if scatter:
+        # Owner-local densify at range-relative coordinates; SENTINEL
+        # entries land far past n/p and drop. lo == my_rank * n/p here.
+        shard = jnp.zeros((n // p,), s.val.dtype).at[s.idx - lo].add(
+            s.val, mode="drop")
+        return shard, fold
     # Owned ranges are disjoint: the allgather is plain concatenation and
     # the scatter-add places each shard at its global coordinates.
     all_idx = jax.lax.all_gather(s.idx, axis_name, tiled=True)
@@ -384,21 +409,28 @@ def dsar_split_allgather_batched_inside(
     out_dtype=jnp.float32,
     impl: str = "auto",
     coll=None,  # repro.comm.collectives.CollectiveContext | None (native)
+    scatter: bool = False,
 ) -> jax.Array:
-    """DSAR over the 'data' axis with a batched row dim. Returns (r, m*B).
+    """DSAR over the 'data' axis with a batched row dim. Returns (r, m*B),
+    or the (r, m*B/p) owned column shard when ``scatter`` (DESIGN.md §11).
 
     Native lowering — ONE collective per phase:
       split: single fused a2a on the BUCKET axis (axis 1) carrying
              [val | lidx-as-f32] (lidx < B <= 512 is exact in f32);
       densify my bucket range (batched one-hot contraction);
       gather: single all_gather on axis 1 ([packed-bitcast-f32 | scale]
-              when QSGD-quantized).
+              when QSGD-quantized). ``scatter`` SKIPS the gather — the
+      quantize->dequantize round-trip runs locally on my shard with my
+      rand bits, so the shard is bit-equal to the replicated result
+      restricted to my columns.
 
     Emulated lowering (coll.native=False — partial-manual regions on
     backends where only psum lowers, DESIGN.md §4): the full dense sum in
     one psum, then the identical per-range QSGD quantize->dequantize
-    applied locally by every rank. Bit-identical results to the native
-    path given the same per-range rand bits.
+    applied locally by every rank; ``scatter`` slices my range off the
+    replicated result (exact parity, no wire saving — scaffolding only).
+    Bit-identical results to the native path given the same per-range
+    rand bits.
 
     rand: stochastic-rounding bits for the QSGD phase — my shard's
     (r*m*B/p,) u32 when native, all ranges' (p, r*m*B/p) when emulated
@@ -417,18 +449,26 @@ def dsar_split_allgather_batched_inside(
     if not coll.native:
         dense = coll.psum(u.densify().astype(jnp.float32))   # (r, m*B)
         if qsgd is None:
-            return dense.astype(out_dtype)
-        if rand is None:
-            raise ValueError("QSGD second phase needs stochastic-rounding bits")
-        bq = qsgd.bucket_size
-        nbq = shard_cols // bq
-        # (r, m*B) -> per-range rows exactly as each native owner would see
-        xs = dense.reshape(r, p, shard_cols).transpose(1, 0, 2)
-        xhat = _qsgd_roundtrip(
-            xs.reshape(p * r * nbq, bq),
-            rand.reshape(p * r * nbq, bq), qsgd, impl, jnp.float32)
-        out = xhat.reshape(p, r, shard_cols).transpose(1, 0, 2)
-        return out.reshape(r, m * b).astype(out_dtype)
+            out = dense
+        else:
+            if rand is None:
+                raise ValueError(
+                    "QSGD second phase needs stochastic-rounding bits")
+            bq = qsgd.bucket_size
+            nbq = shard_cols // bq
+            # (r, m*B) -> per-range rows exactly as each native owner sees
+            xs = dense.reshape(r, p, shard_cols).transpose(1, 0, 2)
+            xhat = _qsgd_roundtrip(
+                xs.reshape(p * r * nbq, bq),
+                rand.reshape(p * r * nbq, bq), qsgd, impl, jnp.float32)
+            out = (xhat.reshape(p, r, shard_cols).transpose(1, 0, 2)
+                   .reshape(r, m * b))
+        if scatter:
+            mine = jax.lax.dynamic_slice_in_dim(
+                out.reshape(r, p, shard_cols),
+                coll.axis_rank(), 1, axis=1)
+            return mine.reshape(r, shard_cols).astype(out_dtype)
+        return out.astype(out_dtype)
 
     assert b <= 1 << 24, "lidx-as-f32 wire format needs exact f32 ints"
     payload = jnp.concatenate(
@@ -441,6 +481,23 @@ def dsar_split_allgather_batched_inside(
     iota = jnp.arange(b, dtype=jnp.int32)
     onehot = (lidx[..., None] == iota).astype(jnp.float32)
     shard = jnp.einsum("rpmkb,rpmk->rmb", onehot, val).reshape(r, shard_cols)
+    if scatter:
+        # Stop at the owner shard: the gather phase never happens. With
+        # QSGD the quantize->dequantize round-trip still runs (locally,
+        # my rand bits) so the shard is bit-equal to the replicated
+        # result restricted to my columns — wire fidelity without wire.
+        if qsgd is None:
+            return shard.astype(out_dtype)
+        if rand is None:
+            raise ValueError(
+                "QSGD second phase needs stochastic-rounding bits")
+        bq = qsgd.bucket_size
+        nbq = shard_cols // bq
+        xhat = _qsgd_roundtrip(
+            shard.reshape(r * nbq, bq),
+            rand.reshape(-1)[: r * nbq * bq].reshape(r * nbq, bq),
+            qsgd, impl, jnp.float32)
+        return xhat.reshape(r, shard_cols).astype(out_dtype)
     if qsgd is None:
         return coll.all_gather(shard.astype(out_dtype), axis=1)
     if rand is None:

@@ -61,6 +61,12 @@ class SyncConfig:
     impl: str = "ref"                # kernel impl inside auto-SPMD regions
     ef_dtype: Any = jnp.float32
     fusion_bucket_bytes: int = 4 << 20  # fused-plan bucket size (DESIGN.md §3.2)
+    # ZeRO-sharded exchange (DESIGN.md §11): 'replicated' re-densifies the
+    # full reduction on every rank; 'scattered' stops at the owner shard
+    # (scatter-capable algorithms skip their final allgather) and the
+    # optimizer update runs on the shard, followed by a dense param
+    # allgather at 1/P per rank.
+    output_mode: str = "replicated"  # 'replicated' | 'scattered'
 
     @property
     def density(self) -> float:

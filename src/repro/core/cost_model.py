@@ -278,12 +278,24 @@ class AlgorithmEntry:
     output_cap_fn(p, k, n) -> post-reduction nnz bound of a capacity-
     clamped algorithm (None = unclamped). A clamped algorithm whose
     bound stays under delta SURVIVES the switchover: its result cannot
-    densify past the bound, whatever the measured fill-in."""
+    densify past the bound, whatever the measured fill-in.
+
+    scatter_cost_fn / scatter_wire_fn (same signatures): the SCATTERED
+    output mode (DESIGN.md §11) — the algorithm terminates at the owner
+    shard instead of re-replicating, dropping its gather/allgather
+    phase. None = not scatter-capable: the executor computes the
+    replicated result and slices, so the replicated charge stands."""
 
     cost_fn: Callable
     wire_fn: Callable
     sparse_result: bool = False
     output_cap_fn: Optional[Callable] = None
+    scatter_cost_fn: Optional[Callable] = None
+    scatter_wire_fn: Optional[Callable] = None
+
+    @property
+    def scatter_capable(self) -> bool:
+        return self.scatter_wire_fn is not None
 
 
 def _clamped_nnz(nnz, cap: float):
@@ -372,6 +384,73 @@ def _rearranged_output_cap(p, k, n):
     return p * (caps[-1][1] if caps else n)
 
 
+# -- scattered variants (DESIGN.md §11): stop at the owner shard ----------
+#
+# Each drops exactly its gather/allgather phase from the replicated
+# accounting above; the split/reduce-scatter phase is unchanged. The
+# dense param allgather that replaces the dropped phase is charged
+# separately (t_param_allgather) — it is algorithm-independent and
+# overlappable with the next step's forward, so folding it in here would
+# make every scattered candidate look identical at the margin.
+
+def _scost_dense(p, k, n, net, value_bits, reduced_nnz):
+    # reduce-scatter half of Rabenseifner: log2(P) alpha + (P-1)/P N beta_d
+    return math.log2(p) * net.alpha + (p - 1) / p * n * net.beta_d
+
+
+def _scost_dsar_split_allgather(p, k, n, net, value_bits, reduced_nnz):
+    # split phase only; the quantized dense gather disappears entirely
+    return (p - 1) * net.alpha + (p - 1) / p * k * net.beta_s
+
+
+def _scost_ssar_balanced_split(p, k, n, net, value_bits, reduced_nnz):
+    # direct split sends, no allgather rounds (the re-top-k'd shard is
+    # the OUTPUT now, not a wire representation)
+    return (p - 1) * net.alpha + (p - 1) / p * k * net.beta_s
+
+
+def _scost_ssar_rearranged_rs(p, k, n, net, value_bits, reduced_nnz):
+    # the log2(P) recursive-halving rounds, expected fill as in
+    # t_ssar_rearranged_rs; the capped-shard allgather disappears
+    caps = rearranged_round_caps(k, n, p)
+    scale = 1.0
+    if reduced_nnz is not None:
+        uniform_final = expected_nnz(k, n, p)
+        if uniform_final > 0:
+            scale = reduced_nnz / uniform_final
+    rs_exp = 0.0
+    for t, (send_cap, _) in enumerate(caps):
+        fill = min(expected_nnz(k, n, 2 ** t) * scale,
+                   float((2 ** t) * k), float(n))
+        rs_exp += min(fill / (1 << (t + 1)), float(send_cap))
+    return math.log2(p) * net.alpha + rs_exp * net.beta_s
+
+
+def _swire_dense(p, k, n, nnz, value_bits, isize):
+    return (p - 1) / p * n * isize
+
+
+def _swire_dsar_split_allgather(p, k, n, nnz, value_bits, isize):
+    return (p - 1) / p * k * (isize + INDEX_BYTES)
+
+
+def _swire_ssar_balanced_split(p, k, n, nnz, value_bits, isize):
+    return (p - 1) / p * k * (isize + INDEX_BYTES)
+
+
+def _swire_ssar_rearranged_rs(p, k, n, nnz, value_bits, isize):
+    caps = rearranged_round_caps(k, n, p)
+    return float(sum(send for send, _ in caps)) * (isize + INDEX_BYTES)
+
+
+def t_param_allgather(p: int, n: int, net: NetworkParams = DEFAULT_NET) -> float:
+    """The dense updated-param allgather scattered mode pays per bucket:
+    log2(P) rounds shipping (P-1)/P N fp32 words per rank. Overlappable
+    with the NEXT step's forward (DESIGN.md §11) — the adaptive
+    controller weighs it by its expected exposed fraction, not at par."""
+    return math.log2(p) * net.alpha + (p - 1) / p * n * net.beta_d
+
+
 ALGORITHM_REGISTRY: dict[str, AlgorithmEntry] = {
     "ssar_recursive_double": AlgorithmEntry(
         _cost_ssar_recursive_double, _wire_ssar_recursive_double,
@@ -380,14 +459,22 @@ ALGORITHM_REGISTRY: dict[str, AlgorithmEntry] = {
         _cost_ssar_split_allgather, _wire_ssar_split_allgather,
         sparse_result=True),
     "dsar_split_allgather": AlgorithmEntry(
-        _cost_dsar_split_allgather, _wire_dsar_split_allgather),
-    "dense": AlgorithmEntry(_cost_dense, _wire_dense),
+        _cost_dsar_split_allgather, _wire_dsar_split_allgather,
+        scatter_cost_fn=_scost_dsar_split_allgather,
+        scatter_wire_fn=_swire_dsar_split_allgather),
+    "dense": AlgorithmEntry(
+        _cost_dense, _wire_dense,
+        scatter_cost_fn=_scost_dense, scatter_wire_fn=_swire_dense),
     "ssar_balanced_split": AlgorithmEntry(
         _cost_ssar_balanced_split, _wire_ssar_balanced_split,
-        sparse_result=True, output_cap_fn=_balanced_output_cap),
+        sparse_result=True, output_cap_fn=_balanced_output_cap,
+        scatter_cost_fn=_scost_ssar_balanced_split,
+        scatter_wire_fn=_swire_ssar_balanced_split),
     "ssar_rearranged_rs": AlgorithmEntry(
         _cost_ssar_rearranged_rs, _wire_ssar_rearranged_rs,
-        sparse_result=True, output_cap_fn=_rearranged_output_cap),
+        sparse_result=True, output_cap_fn=_rearranged_output_cap,
+        scatter_cost_fn=_scost_ssar_rearranged_rs,
+        scatter_wire_fn=_swire_ssar_rearranged_rs),
 }
 
 ALL_ALGORITHMS = tuple(ALGORITHM_REGISTRY)
@@ -412,6 +499,7 @@ def select_algorithm(
     value_bits: int = 32,
     allow: tuple = ALL_ALGORITHMS,
     reduced_nnz: float | None = None,
+    scattered: bool = False,
 ) -> str:
     """THE auto-selection entry point: pick the cheapest registered
     algorithm by expected alpha-beta cost (paper §5.3, DESIGN.md §3.3).
@@ -432,6 +520,12 @@ def select_algorithm(
     ``expected_nnz`` everywhere — both in the sparse-vs-dense delta
     decision and in the gather-phase cost terms — so fill-in growth and
     EF-residual densification feed back into the choice.
+
+    ``scattered`` costs each candidate under the scattered output mode
+    (DESIGN.md §11): scatter-capable algorithms drop their gather phase;
+    the rest keep the replicated charge (the executor computes the full
+    result and slices). The delta-switchover filter is unchanged — the
+    reduce-scatter rounds still densify with fill-in.
     """
     delta = delta_threshold(n, net.isize)
     exp_k = (reduced_nnz if reduced_nnz is not None
@@ -454,8 +548,10 @@ def select_algorithm(
                    if entry.output_cap_fn is not None else None)
             if cap is None or cap >= delta:
                 continue
-        candidates[name] = entry.cost_fn(p, k, n, net, value_bits,
-                                         reduced_nnz)
+        cost_fn = (entry.scatter_cost_fn
+                   if scattered and entry.scatter_cost_fn is not None
+                   else entry.cost_fn)
+        candidates[name] = cost_fn(p, k, n, net, value_bits, reduced_nnz)
     if not candidates:  # everything filtered: dense always works
         return "dense"
     return min(candidates, key=candidates.get)
@@ -469,12 +565,14 @@ def select_bucket_algorithm(
     value_bits: int = 32,
     allow: tuple = ALL_ALGORITHMS,
     reduced_nnz: float | None = None,
+    scattered: bool = False,
 ) -> str:
     """Per-fusion-bucket view of :func:`select_algorithm` (``k`` = the
     bucket's TOTAL selected items: rows x buckets-per-row x k_per_bucket,
     ``n`` its total canonical length). Thin wrapper — the one selection
     implementation lives in :func:`select_algorithm`."""
-    return select_algorithm(p, k, n, net, value_bits, allow, reduced_nnz)
+    return select_algorithm(p, k, n, net, value_bits, allow, reduced_nnz,
+                            scattered)
 
 
 # ---------------------------------------------------------------------------
@@ -483,7 +581,8 @@ def select_bucket_algorithm(
 
 def bucket_time(algorithm: str, p: int, k: int, n: int,
                 net: NetworkParams = DEFAULT_NET, value_bits: int = 32,
-                reduced_nnz: float | None = None) -> float:
+                reduced_nnz: float | None = None,
+                scattered: bool = False) -> float:
     """Expected collective time of ONE fusion bucket under its resolved
     algorithm (the per-bucket term the overlap model hides or exposes).
     ``reduced_nnz`` substitutes a measured post-reduction fill-in for the
@@ -498,15 +597,21 @@ def bucket_time(algorithm: str, p: int, k: int, n: int,
     entry = ALGORITHM_REGISTRY.get(algorithm)
     if entry is None:
         raise ValueError(f"unknown algorithm {algorithm!r}")
+    if scattered and entry.scatter_cost_fn is not None:
+        return entry.scatter_cost_fn(p, k, n, net, value_bits, reduced_nnz)
     return entry.cost_fn(p, k, n, net, value_bits, reduced_nnz)
 
 
 def bucket_wire_bytes(algorithm: str, p: int, k: int, n: int,
-                      nnz=None, value_bits: int = 32, isize: int = 4):
+                      nnz=None, value_bits: int = 32, isize: int = 4,
+                      scattered: bool = False):
     """Per-rank data-axis wire bytes of one bucket for one step. Pure
     arithmetic in ``nnz`` (a traced scalar inside the telemetry emitter,
     or a float on the host), so the executor can report measured wire
-    volume in-graph. ``nnz`` defaults to the worst case (p*k)."""
+    volume in-graph. ``nnz`` defaults to the worst case (p*k).
+    ``scattered`` charges the scatter variant where one exists (the
+    gather phase drops); non-capable algorithms keep the replicated
+    charge — the executor really does run them replicated and slice."""
     if algorithm.startswith("stream_gather"):
         # serve activation exchange: capacity-bound, k is the row width
         return stream_wire_bytes(p, parse_stream_cap(algorithm), k, isize)
@@ -515,6 +620,8 @@ def bucket_wire_bytes(algorithm: str, p: int, k: int, n: int,
         raise ValueError(f"unknown algorithm {algorithm!r}")
     if nnz is None:
         nnz = float(min(n, p * k))
+    if scattered and entry.scatter_wire_fn is not None:
+        return entry.scatter_wire_fn(p, k, n, nnz, value_bits, isize)
     return entry.wire_fn(p, k, n, nnz, value_bits, isize)
 
 
@@ -543,13 +650,14 @@ def plan_bucket_times(plan, p: int | None = None,
     p = p or plan.dp_total
     cfg = plan.cfg
     vb = cfg.qsgd_bits if cfg.qsgd_bits is not None else 32
+    scattered = bool(getattr(plan, "scattered", False))
     out = []
     for g in plan.groups:
         for b in g.buckets:
             k = plan.bucket_k(g, b)
             nnz = None if densities is None else densities.get(b.name)
             out.append(bucket_time(b.algorithm, p, k, b.n, net, vb,
-                                   reduced_nnz=nnz))
+                                   reduced_nnz=nnz, scattered=scattered))
     return out
 
 

@@ -96,6 +96,7 @@ def lower_cell(arch: str, shape_name: str, mesh, sync_override: str | None = Non
         lowered = step_fn.lower(shapes, bshapes, key)
         meta["sync_mode"] = tcfg.sync.mode
         meta["kind"] = "train"
+        meta["state_memory"] = state_memory_breakdown(model, tcfg, mesh)
         meta["model_flops"] = model_flops_train(
             cfg.active_param_count(), shape.global_batch * shape.seq_len)
         return lowered, meta
@@ -144,6 +145,58 @@ def lower_cell(arch: str, shape_name: str, mesh, sync_override: str | None = Non
     return lowered, meta
 
 
+def _tree_device_bytes(shapes, specs, mesh) -> int:
+    """Analytic per-device bytes of one abstract tree: each leaf's byte
+    size divided by the product of the mesh axes its PartitionSpec
+    shards over (None / unnamed dims replicate)."""
+    total = 0
+    s_leaves = jax.tree.leaves(shapes, is_leaf=lambda x: x is None)
+    p_leaves = jax.tree.leaves(specs, is_leaf=lambda x: x is None
+                               or isinstance(x, P))
+    for sd, spec in zip(s_leaves, p_leaves):
+        if sd is None:
+            continue
+        n = int(np.prod(sd.shape, dtype=np.int64)) * np.dtype(sd.dtype).itemsize
+        denom = 1
+        if spec is not None:
+            for dim in spec:
+                for ax in (dim if isinstance(dim, tuple) else (dim,)):
+                    if ax:
+                        denom *= mesh.shape[ax]
+        total += n // denom
+    return total
+
+
+def state_memory_breakdown(model, tcfg, mesh) -> dict:
+    """Per-device persistent TrainState bytes by component — the analytic
+    companion of compiled.memory_analysis() (which reports one opaque
+    argument_bytes blob). Makes the ZeRO win visible: under
+    output_mode='scattered' (DESIGN.md §11) opt_mu/opt_nu drop to ~1/dp
+    of the replicated layout. ``inflight`` is the pipelined runtime's
+    in-flight reduce buffers (zero when not applicable)."""
+    from repro.train import train_step as ts
+
+    shapes, specs, plan = ts.state_shapes(model, tcfg, mesh,
+                                          return_plan=True)
+    out = {
+        "params": _tree_device_bytes(shapes.params, specs.params, mesh),
+        "opt_mu": _tree_device_bytes(shapes.opt["mu"], specs.opt["mu"],
+                                     mesh),
+        "opt_nu": (_tree_device_bytes(shapes.opt["nu"], specs.opt["nu"],
+                                      mesh) if "nu" in shapes.opt else 0),
+        "ef_residual": _tree_device_bytes(shapes.residuals,
+                                          specs.residuals, mesh),
+        "inflight": 0,
+    }
+    if plan is not None:
+        dp_ax = dp_axes_of(mesh)
+        out["inflight"] = _tree_device_bytes(plan.inflight_shapes(),
+                                             plan.inflight_specs(dp_ax),
+                                             mesh)
+    out["total"] = sum(out.values())
+    return out
+
+
 def _fits_replicated(cfg) -> bool:
     """Can bf16 params fit DP-replicated after TP=16? (16 GB HBM heuristic)"""
     return cfg.param_count() * 2 / 16 < 8e9
@@ -187,6 +240,9 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             except Exception:
                 mem_d = {"raw": str(mem)}
             print(f"[{arch}|{shape_name}|{mesh_name}] memory_analysis:", mem_d)
+            if "state_memory" in meta:
+                print(f"[{arch}|{shape_name}|{mesh_name}] state_memory/device:",
+                      meta["state_memory"])
 
             cost = compiled.cost_analysis() or {}
             xla_flops = float(cost.get("flops", 0.0))

@@ -40,7 +40,8 @@ from typing import Callable, Optional
 import numpy as np
 
 from repro.core.cost_model import (DEFAULT_NET, NetworkParams,
-                                   algorithm_output_cap, bucket_time)
+                                   algorithm_output_cap, bucket_time,
+                                   t_param_allgather)
 from repro.core.sparse_stream import delta_threshold
 from repro.obs import resolve as _resolve_obs
 from repro.obs.metrics import record_bucket_telemetry
@@ -251,6 +252,50 @@ class AdaptiveController:
                        densities=densities)
         return accepted
 
+    def recommend_output_mode(self, densities: dict | None = None,
+                              overlap_s: float = 0.0) -> str:
+        """Advisory replicated <-> scattered decision (DESIGN.md §11).
+
+        The output mode changes the OPTIMIZER-STATE LAYOUT (bucket-keyed
+        shard chunks vs per-leaf replicas), so the pipelined runtime pins
+        it for a run's lifetime — this is the restart-barrier decision,
+        never a ``maybe_swap`` candidate. Sticky with the same hysteresis
+        damper as per-bucket switches: the OTHER mode must beat the
+        current one by the ``hysteresis`` fraction of modeled per-step
+        comm time, so a workload hovering at the boundary keeps its
+        layout instead of flapping across restarts.
+
+        Scattered is charged its per-bucket scatter costs plus the dense
+        param allgather's EXPOSED tail after ``overlap_s`` seconds of
+        independent next-step compute (t_param_allgather is overlappable
+        — DESIGN.md §11 — so it is weighed at its uncovered remainder,
+        not at par)."""
+        from repro.core.cost_model import plan_bucket_times
+
+        cfg = self.plan.cfg
+        p = self.plan.dp_total
+        cur = self.plan.output_mode
+        t_mode = {}
+        for mode in ("replicated", "scattered"):
+            trial = (self.plan if mode == cur
+                     else self.plan.replan(output_mode=mode))
+            t = sum(plan_bucket_times(trial, p, self.net,
+                                      densities=densities))
+            if mode == "scattered":
+                t_ag = sum(t_param_allgather(p, b.n, self.net)
+                           for g in trial.groups for b in g.buckets)
+                t += max(0.0, t_ag - max(0.0, float(overlap_s)))
+            t_mode[mode] = t
+        other = "scattered" if cur == "replicated" else "replicated"
+        switch = t_mode[other] <= (1.0 - self.cfg.hysteresis) * t_mode[cur]
+        rec = other if switch else cur
+        self.obs.event("adapt/mode_recommend", current=cur, recommended=rec,
+                       t_replicated_s=t_mode["replicated"],
+                       t_scattered_s=t_mode["scattered"],
+                       overlap_s=overlap_s,
+                       hysteresis=self.cfg.hysteresis)
+        return rec
+
     def force(self, plan) -> None:
         """Install an externally-forced plan NOW, bypassing hysteresis
         and patience — the caller hit a correctness boundary (the serve
@@ -291,6 +336,14 @@ class AdaptiveRuntime:
         p_pod = mesh.shape[dp_ax[0]] if len(dp_ax) > 1 else 1
         self.controller = AdaptiveController(plan, net, cfg, p_pod=p_pod,
                                              obs=self.obs)
+        # The output mode is PINNED for the runtime's lifetime: a mode
+        # change alters the TrainState layout (bucket-keyed opt-state
+        # shard chunks vs per-leaf replicas), which a drain-barrier swap
+        # cannot migrate. Controller replans inherit the mode (SyncPlan.
+        # replan only changes it when asked); the guard in maybe_swap
+        # turns any future violation into a loud failure instead of a
+        # shape error deep inside the swapped-in compiled step.
+        self._output_mode = getattr(plan, "output_mode", "replicated")
         self._build_fn = build_fn or self._default_build
         self._cache: dict = {}
         self._swap_to = None
@@ -347,6 +400,12 @@ class AdaptiveRuntime:
         if self._swap_to is None:
             return None
         plan, self._swap_to = self._swap_to, None
+        if getattr(plan, "output_mode", "replicated") != self._output_mode:
+            raise RuntimeError(
+                "adaptive replan changed output_mode "
+                f"({self._output_mode!r} -> {plan.output_mode!r}); the mode "
+                "is pinned per run — use AdaptiveController."
+                "recommend_output_mode and restart (DESIGN.md §11)")
         return self.step_fn_for(plan), plan
 
 

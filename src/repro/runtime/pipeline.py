@@ -108,8 +108,9 @@ def pipelined_state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh, *,
         shapes = shapes._replace(inflight={
             **plan.inflight_shapes(),
             VALID_KEY: jax.ShapeDtypeStruct((), jnp.float32)})
-        specs = specs._replace(inflight={**plan.inflight_specs(),
-                                         VALID_KEY: P()})
+        specs = specs._replace(inflight={
+            **plan.inflight_specs(ts.dp_axes_of(mesh)),
+            VALID_KEY: P()})
     return shapes, specs, plan
 
 
@@ -121,7 +122,7 @@ def attach_inflight(state: TrainState, plan, mesh: Mesh) -> TrainState:
     if state.inflight is not None:
         return state
     shapes = plan.inflight_shapes()
-    specs = plan.inflight_specs()
+    specs = plan.inflight_specs(ts.dp_axes_of(mesh))
     zeros = {
         k: jax.device_put(jnp.zeros(s.shape, s.dtype),
                           NamedSharding(mesh, specs[k]))
@@ -166,6 +167,12 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
     pod_axis = dp_ax[0] if len(dp_ax) > 1 else None
     p_pod = mesh.shape[pod_axis] if pod_axis else 1
     grad_clip = tcfg.optimizer.grad_clip
+    # Scattered plans (DESIGN.md §11): the in-flight buffers are owner
+    # CHUNKS; the apply half is the shard update itself (no grad-side
+    # allgather ever runs) and the dense param allgather it issues sits
+    # at the tail of step t's graph next to the reduce — independent of
+    # it — so both drain while step t+1's forward runs ahead.
+    scattered = plan.scattered
 
     def _finish(state, applied, loss, lr, new_res, new_inflight, telem, *,
                 zero1_update):
@@ -219,16 +226,30 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                 reduced, new_res, telem = comm.reduce_buckets_spmd(
                     plan, leaves_r, state.residuals, key,
                     p_data=p_data, p_pod=p_pod)
-                applied_leaves = comm.apply_buckets_spmd(
-                    plan, reduced, leaves_r)
+                chunks = reduced
                 new_inflight = None
             else:
-                applied_leaves = comm.apply_buckets_spmd(
-                    plan, state.inflight, leaves_r)
+                chunks = state.inflight
                 new_inflight, new_res, telem = comm.reduce_buckets_spmd(
                     plan, leaves_r, state.residuals, key,
                     p_data=p_data, p_pod=p_pod)
                 new_inflight[VALID_KEY] = jnp.ones((), jnp.float32)
+            if scattered:
+                applied_leaves = comm.apply_buckets_spmd(
+                    plan, comm.unchunk_buckets_spmd(plan, chunks), leaves_r)
+                applied = gtree.unflatten(applied_leaves)
+                applied, gnorm = clip_by_global_norm(applied, grad_clip)
+                lr_eff = (lr if staleness == 0
+                          else lr * state.inflight[VALID_KEY])
+                new_p, new_opt = ts._zero_scattered_update_spmd(
+                    state.params, applied, state.opt, lr_eff, tcfg, plan)
+                new_state = TrainState(new_p, new_opt, new_res,
+                                       state.step + 1, new_inflight)
+                metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr_eff}
+                if telemetry:
+                    metrics["telemetry"] = telem
+                return new_state, metrics
+            applied_leaves = comm.apply_buckets_spmd(plan, chunks, leaves_r)
             applied = gtree.unflatten(applied_leaves)
             return _finish(
                 state, applied, loss, lr, new_res, new_inflight, telem,
@@ -255,6 +276,29 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
             data_axis=data_axis, p_data=p_data, pod_axis=pod_axis,
             p_pod=p_pod, native=native, data_rank=data_rank,
             pod_rank=pod_rank)
+        if scattered:
+            if staleness == 0:
+                reduced, new_res, telem = comm.reduce_buckets(
+                    plan, leaves_g, state.residuals, key, **coll_kwargs)
+                chunks = reduced
+                new_inflight = None
+            else:
+                chunks = state.inflight
+                new_inflight, new_res, telem = comm.reduce_buckets(
+                    plan, leaves_g, state.residuals, key, **coll_kwargs)
+                new_inflight[VALID_KEY] = jnp.ones((), jnp.float32)
+            lr_eff = (lr if staleness == 0
+                      else lr * state.inflight[VALID_KEY])
+            coll = comm.CollectiveContext(data_axis, p_data, native=native,
+                                          rank=data_rank)
+            new_p, new_opt, gnorm = ts._zero_scattered_update(
+                state.params, chunks, state.opt, lr_eff, tcfg, plan, coll)
+            new_state = TrainState(new_p, new_opt, new_res, state.step + 1,
+                                   new_inflight)
+            metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr_eff}
+            if telemetry:
+                metrics["telemetry"] = telem
+            return new_state, metrics
         if staleness == 0:
             # execute_plan minus the telemetry drop (same ops, same order).
             reduced, new_res, telem = comm.reduce_buckets(

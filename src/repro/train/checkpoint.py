@@ -41,11 +41,16 @@ def _flatten_with_paths(tree):
 
 def save(directory: str, state: TrainState, *, dp_total: int,
          keep_last: int = 3, async_save: bool = False,
-         extra_meta: Optional[dict] = None) -> str:
+         extra_meta: Optional[dict] = None,
+         opt_layout: Optional[str] = None) -> str:
     """``extra_meta`` is merged into meta.json (JSON-serializable only) —
     the adaptive runtime stores the ACTIVE plan's signature and per-bucket
     algorithm map there, so a restart resumes onto the adapted plan
-    (DESIGN.md §7) instead of re-warming from the static one."""
+    (DESIGN.md §7) instead of re-warming from the static one.
+
+    ``opt_layout`` stamps the optimizer-state layout (one of
+    ``OPT_LAYOUTS``) into meta so a reader under the OTHER ZeRO layout can
+    convert on resume (DESIGN.md §11); omitted = reader assumes its own."""
     step = int(state.step)
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
@@ -62,6 +67,10 @@ def save(directory: str, state: TrainState, *, dp_total: int,
             "paths": paths,
             "none_leaves": [i for i, a in enumerate(host_leaves) if a is None],
         }
+        if opt_layout is not None:
+            if opt_layout not in OPT_LAYOUTS:
+                raise ValueError(f"unknown opt_layout {opt_layout!r}")
+            meta["opt_layout"] = opt_layout
         if extra_meta:
             meta.update(extra_meta)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
@@ -150,6 +159,101 @@ def restore(directory: str, like: TrainState, *, dp_total: int,
     if shardings is not None:
         state = jax.device_put(state, shardings)
     return state
+
+
+# --------------------------------------------------------------------------
+# Optimizer-layout interop (DESIGN.md §11)
+# --------------------------------------------------------------------------
+# Three on-disk optimizer layouts exist:
+#   "full"           param-shaped moments (dense mode / zero1=False)
+#   "zero1_leaf"     per-LEAF canonical chunks (dp, rows, cols_leaf/dp)
+#   "zero_scattered" per-BUCKET owned-range chunks (dp, rows, cols_bkt/dp)
+# The two ZeRO layouts are different partitions of the SAME canonical
+# coordinates, and the optimizer is elementwise, so conversion through the
+# full canonical group buffer is value-exact: a run checkpointed under
+# either mode resumes under the other with identical per-coordinate
+# moments. Writers stamp meta["opt_layout"]; readers convert when theirs
+# differs (Trainer.init_or_resume).
+
+OPT_LAYOUTS = ("full", "zero1_leaf", "zero_scattered")
+
+
+def opt_layout_of(tcfg) -> str:
+    """The optimizer-state layout a TrainConfig trains under — fully
+    determined by the config (state_shapes enforces the same mapping)."""
+    if tcfg.sync.mode == "sparcml":
+        if getattr(tcfg.sync, "output_mode", "replicated") == "scattered":
+            return "zero_scattered"
+        if tcfg.zero1:
+            return "zero1_leaf"
+    return "full"
+
+
+def _moment_scattered_to_leaf(moment: dict, plan, params):
+    """{bucket: (dp, rows, w)} -> params-structured tree of per-leaf
+    (dp, rows, cols_leaf/dp) chunks, via the full group buffer."""
+    p = plan.dp_total
+    leaf_chunks: list = [None] * plan.num_leaves
+    for g in plan.groups:
+        buf = None
+        for b in g.buckets:
+            ch = np.asarray(moment[b.name])           # (dp, rows, w)
+            if buf is None:
+                buf = np.zeros((g.rows, g.cols), ch.dtype)
+            full = ch.transpose(1, 0, 2).reshape(g.rows, b.cols)
+            buf[:, b.col_start:b.col_start + b.cols] = full
+        for s in g.slots:
+            seg = buf[:, s.offset:s.offset + s.cols]
+            w = s.cols // p
+            leaf_chunks[s.leaf_id] = jnp.asarray(
+                seg.reshape(g.rows, p, w).transpose(1, 0, 2))
+    treedef = jax.tree_util.tree_structure(params)
+    return jax.tree_util.tree_unflatten(treedef, leaf_chunks)
+
+
+def _moment_leaf_to_scattered(moment, plan) -> dict:
+    """params-structured tree of per-leaf chunks -> {bucket: (dp, rows, w)}
+    owned-range chunks. Padding/gap columns zero-fill (they carry no
+    parameter and their moments start — and in the leaf layout remain —
+    zero)."""
+    p = plan.dp_total
+    leaves = jax.tree_util.tree_leaves(moment)        # leaf_id order
+    out: dict = {}
+    for g in plan.groups:
+        dtype = np.asarray(leaves[g.slots[0].leaf_id]).dtype
+        buf = np.zeros((g.rows, g.cols), dtype)
+        for s in g.slots:
+            ch = np.asarray(leaves[s.leaf_id])        # (dp, rows, w_leaf)
+            buf[:, s.offset:s.offset + s.cols] = \
+                ch.transpose(1, 0, 2).reshape(g.rows, s.cols)
+        for b in g.buckets:
+            seg = buf[:, b.col_start:b.col_start + b.cols]
+            w = b.cols // p
+            out[b.name] = jnp.asarray(
+                seg.reshape(g.rows, p, w).transpose(1, 0, 2))
+    return out
+
+
+def convert_opt_layout(state: TrainState, plan, source: str,
+                       target: str) -> TrainState:
+    """Convert ``state.opt`` between the two ZeRO layouts (value-exact,
+    see module note above). ``plan`` is the SyncPlan whose geometry both
+    layouts chunk against. full <-> sharded is not supported: the full
+    layout has no canonical chunking to map through."""
+    if source == target:
+        return state
+    pair = {source, target}
+    if pair != {"zero1_leaf", "zero_scattered"}:
+        raise ValueError(
+            f"cannot convert opt layout {source!r} -> {target!r}; only "
+            "zero1_leaf <-> zero_scattered interop is supported")
+    conv = (_moment_leaf_to_scattered if target == "zero_scattered"
+            else lambda m, pl: _moment_scattered_to_leaf(m, pl, state.params))
+    opt = dict(state.opt)
+    opt["mu"] = conv(state.opt["mu"], plan)
+    if "nu" in state.opt:
+        opt["nu"] = conv(state.opt["nu"], plan)
+    return state._replace(opt=opt)
 
 
 def _rechunk(arr: np.ndarray, want: tuple, old_dp: int, new_dp: int) -> np.ndarray:

@@ -110,6 +110,40 @@ def zero1_state_specs(param_shapes, specs, tcfg: TrainConfig, dp_axes):
 
 
 # --------------------------------------------------------------------------
+# ZeRO scattered chunking (sparcml + output_mode='scattered', DESIGN.md §11)
+# --------------------------------------------------------------------------
+
+def zero_scattered_state_shapes(plan, tcfg: TrainConfig):
+    """Optimizer moments partitioned by the plan's OWNED RANGES: one
+    (dp_total, rows, cols/dp) chunk per fusion BUCKET (keyed like the
+    residuals, by bucket name) instead of per leaf — the same ranges the
+    scattered reduce terminates at, so the update never reshuffles the
+    exchange output. Every bucket carries moments (raw-dense buckets
+    still own their params' update)."""
+
+    def chunks():
+        return {
+            b.name: jax.ShapeDtypeStruct(
+                (plan.dp_total, g.rows, plan.owned_cols(b)),
+                tcfg.optimizer.state_dtype)
+            for g in plan.groups for b in g.buckets
+        }
+
+    out = {"mu": chunks(), "count": jax.ShapeDtypeStruct((), jnp.int32)}
+    if tcfg.optimizer.kind == "adamw":
+        out["nu"] = chunks()
+    return out
+
+
+def zero_scattered_state_specs(plan, tcfg: TrainConfig, dp_axes):
+    sp = plan.scattered_specs(dp_axes)
+    out = {"mu": dict(sp), "count": P()}
+    if tcfg.optimizer.kind == "adamw":
+        out["nu"] = dict(sp)
+    return out
+
+
+# --------------------------------------------------------------------------
 # State construction
 # --------------------------------------------------------------------------
 
@@ -127,7 +161,27 @@ def state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh, key=None,
     dp_total = dp_total_of(mesh)
     dp_ax = dp_axes_of(mesh)
 
-    if tcfg.sync.mode == "sparcml" and tcfg.zero1:
+    plan = None
+    if tcfg.sync.mode == "sparcml":
+        # Fusion plan (DESIGN.md §3): residual state is keyed BY BUCKET.
+        plan = comm.build_sync_plan(pshapes, pspecs, tcfg.sync, dp_total)
+        rshapes = plan.residual_shapes()
+        rspecs = plan.residual_specs(dp_ax)
+    else:
+        rshapes = rspecs = None
+        if getattr(tcfg.sync, "output_mode", "replicated") == "scattered":
+            raise ValueError(
+                "output_mode='scattered' requires sync.mode='sparcml' "
+                "(dense mode has no plan to scatter; use fsdp for ZeRO-3)")
+
+    if plan is not None and plan.scattered:
+        if not tcfg.zero1:
+            raise ValueError(
+                "output_mode='scattered' IS the sharded-optimizer layout "
+                "— it requires zero1=True (DESIGN.md §11)")
+        oshapes = zero_scattered_state_shapes(plan, tcfg)
+        ospecs = zero_scattered_state_specs(plan, tcfg, dp_ax)
+    elif tcfg.sync.mode == "sparcml" and tcfg.zero1:
         oshapes = zero1_state_shapes(pshapes, pspecs, tcfg, dp_total)
         ospecs = zero1_state_specs(pshapes, pspecs, tcfg, dp_ax)
     else:
@@ -137,15 +191,6 @@ def state_shapes(model: Model, tcfg: TrainConfig, mesh: Mesh, key=None,
         ospecs = {"mu": pspecs, "count": P()}
         if n_opt == 2:
             ospecs["nu"] = pspecs
-
-    plan = None
-    if tcfg.sync.mode == "sparcml":
-        # Fusion plan (DESIGN.md §3): residual state is keyed BY BUCKET.
-        plan = comm.build_sync_plan(pshapes, pspecs, tcfg.sync, dp_total)
-        rshapes = plan.residual_shapes()
-        rspecs = plan.residual_specs(dp_ax)
-    else:
-        rshapes = rspecs = None
 
     shapes = TrainState(params=pshapes, opt=oshapes, residuals=rshapes,
                         step=jax.ShapeDtypeStruct((), jnp.int32))
@@ -347,6 +392,156 @@ def _zero1_update_spmd(params, grads, opt, lr, tcfg: TrainConfig, pspecs,
     return treedef.unflatten(new_p), out_opt
 
 
+def _zero_scattered_update(params, reduced, opt, lr, tcfg: TrainConfig,
+                           plan, coll):
+    """ZeRO scattered update (DESIGN.md §11), manual lowering: consume the
+    owner GRAD CHUNKS straight off the scattered reduce (no grad-side
+    allgather ever ran), update my param/moment shard, then ONE dense
+    param all_gather per BUCKET rebuilds the full params — the per-step
+    collective count stays O(num_buckets), not O(num_leaves).
+
+    reduced: bucket-keyed {name: (1, rows, w)} chunks (replica axis of
+    size 1 inside shard_map); extra keys (the in-flight validity flag)
+    are ignored. Returns (new_params, new_opt, grad_norm). The global
+    grad norm is EXACT from the shards: owned ranges are disjoint and
+    cover the buffers (padding contributes zero), so one scalar psum of
+    the per-shard sums of squares is the global sum — only the summation
+    order differs from the replicated path (allclose, not bitwise).
+    """
+    from repro.comm.buckets import pack_group, unpack_group
+
+    sync = tcfg.sync
+    ocfg = tcfg.optimizer
+    p = plan.dp_total
+    rank = coll.axis_rank()
+
+    gnorm = jnp.sqrt(coll.psum(sum(
+        jnp.sum(jnp.square(reduced[b.name][0].astype(jnp.float32)))
+        for g in plan.groups for b in g.buckets)))
+    factor = (jnp.minimum(1.0, ocfg.grad_clip / (gnorm + 1e-9))
+              if ocfg.grad_clip else jnp.float32(1.0))
+
+    count = opt["count"] + 1
+    b1, b2 = ocfg.beta1, ocfg.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    leaves_p, ptree = jax.tree.flatten(params)
+    new_leaves: list = [None] * plan.num_leaves
+    new_mu: dict = {}
+    new_nu: dict = {}
+    for group in plan.groups:
+        pbuf = pack_group(group, leaves_p, sync.bucket_size)  # (rows, cols)
+        parts = []
+        for b in group.buckets:
+            w = plan.owned_cols(b)
+            seg = jax.lax.slice_in_dim(pbuf, b.col_start,
+                                       b.col_start + b.cols, axis=1)
+            my_p = jax.lax.dynamic_slice_in_dim(
+                seg.reshape(group.rows, p, w), rank, 1, axis=1
+            ).reshape(group.rows, w)
+            g = reduced[b.name][0].astype(jnp.float32) * factor
+            mul = opt["mu"][b.name]
+            m = mul[0].astype(jnp.float32)
+            if ocfg.kind == "adamw":
+                nul = opt["nu"][b.name]
+                v = nul[0].astype(jnp.float32)
+                m2 = b1 * m + (1 - b1) * g
+                v2 = b2 * v + (1 - b2) * g * g
+                step = (m2 / c1) / (jnp.sqrt(v2 / c2) + ocfg.eps)
+                step = step + ocfg.weight_decay * my_p
+                new_nu[b.name] = v2.astype(nul.dtype)[None]
+            else:
+                m2 = ocfg.momentum * m + g
+                step = m2
+            new_mu[b.name] = m2.astype(mul.dtype)[None]
+            upd = my_p - lr * step                            # f32 shard
+            parts.append(coll.all_gather(upd, axis=1))        # (rows, b.cols)
+        out_buf = parts[0] if len(parts) == 1 else jnp.concatenate(parts,
+                                                                   axis=1)
+        for leaf_id, arr in unpack_group(group, out_buf, leaves_p):
+            new_leaves[leaf_id] = arr
+    out_opt = {"mu": new_mu, "count": count}
+    if ocfg.kind == "adamw":
+        out_opt["nu"] = new_nu
+    return ptree.unflatten(new_leaves), out_opt, gnorm
+
+
+def _zero_scattered_update_spmd(params, grads, opt, lr, tcfg: TrainConfig,
+                                plan):
+    """Auto-SPMD twin of :func:`_zero_scattered_update`: moments live as
+    full (dp_total, rows, w) bucket-chunk stacks, the per-chunk math
+    vectorizes over the leading axis, and the param 'allgather' is the
+    chunk->buffer reshape XLA re-materializes from the sharded stacks.
+    ``grads`` are the CLIPPED synced leaves (the caller computes the clip
+    exactly as the replicated reference so the factor — and therefore
+    every parameter — is bitwise identical to replicated training).
+
+    The params are deliberately NEVER packed into the group buffer here:
+    only the moment-derived update direction flows through the bucket
+    domain, and the actual parameter step — ``p - lr*(delta + wd*p)`` —
+    runs per leaf with exactly the replicated :func:`adamw` fp ops.
+    Packing the params alongside the vmapped grad computation trips a
+    GSPMD partial-sum mislabel on the XLA-CPU fallback (the packed
+    buffer comes back multiplied by dp_total); the delta-only
+    formulation both avoids that and keeps per-coordinate bit parity
+    with replicated training."""
+    from repro.comm.buckets import from_canonical, pack_group
+
+    sync = tcfg.sync
+    ocfg = tcfg.optimizer
+    p = plan.dp_total
+    count = opt["count"] + 1
+    b1, b2 = ocfg.beta1, ocfg.beta2
+    c1 = 1.0 - b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - b2 ** count.astype(jnp.float32)
+
+    leaves_p, ptree = jax.tree.flatten(params)
+    leaves_g = ptree.flatten_up_to(grads)
+    new_leaves: list = [None] * plan.num_leaves
+    new_mu: dict = {}
+    new_nu: dict = {}
+    for group in plan.groups:
+        gbuf = pack_group(group, leaves_g, sync.bucket_size)
+        parts = []
+        for b in group.buckets:
+            w = plan.owned_cols(b)
+            g = jax.lax.slice_in_dim(
+                gbuf, b.col_start, b.col_start + b.cols, axis=1
+            ).reshape(group.rows, p, w).transpose(1, 0, 2)  # (p, rows, w)
+            mul = opt["mu"][b.name]
+            m = mul.astype(jnp.float32)
+            if ocfg.kind == "adamw":
+                nul = opt["nu"][b.name]
+                v = nul.astype(jnp.float32)
+                m2 = b1 * m + (1 - b1) * g
+                v2 = b2 * v + (1 - b2) * g * g
+                delta = (m2 / c1) / (jnp.sqrt(v2 / c2) + ocfg.eps)
+                new_nu[b.name] = v2.astype(nul.dtype)
+            else:
+                m2 = ocfg.momentum * m + g
+                delta = m2
+            new_mu[b.name] = m2.astype(mul.dtype)
+            parts.append(delta.transpose(1, 0, 2).reshape(group.rows,
+                                                          b.cols))
+        dbuf = parts[0] if len(parts) == 1 else jnp.concatenate(parts,
+                                                                axis=1)
+        for slot in group.slots:
+            seg = jax.lax.slice_in_dim(dbuf, slot.offset,
+                                       slot.offset + slot.cols, axis=1)
+            delta_leaf = from_canonical(seg, slot.shape, slot.spec)  # f32
+            pl = leaves_p[slot.leaf_id]
+            pf = pl.astype(jnp.float32)
+            step = delta_leaf
+            if ocfg.kind == "adamw":
+                step = step + ocfg.weight_decay * pf
+            new_leaves[slot.leaf_id] = (pf - lr * step).astype(pl.dtype)
+    out_opt = {"mu": new_mu, "count": count}
+    if ocfg.kind == "adamw":
+        out_opt["nu"] = new_nu
+    return ptree.unflatten(new_leaves), out_opt
+
+
 def sparcml_uses_manual_collectives(mesh: Mesh) -> bool:
     """True when the sparcml step lowers through the shard_map manual-dp
     region (native collectives: all-to-all/all-gather appear in HLO);
@@ -435,6 +630,25 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
                                              *(s if s is not None else ()))))
                 for g, s in zip(leaves_r, leaves_spec)
             ]
+            if plan.scattered:
+                # Scattered (DESIGN.md §11): owner chunks in, shard
+                # update, chunk->buffer rebuild. The clip reuses the
+                # replicated code path on the rebuilt leaves so the
+                # factor — and therefore training — is BIT-identical.
+                reduced, new_res, _ = comm.reduce_buckets_spmd(
+                    plan, leaves_r, state.residuals, key,
+                    p_data=p_data, p_pod=p_pod)
+                synced_leaves = comm.apply_buckets_spmd(
+                    plan, comm.unchunk_buckets_spmd(plan, reduced), leaves_r)
+                synced = gtree.unflatten(synced_leaves)
+                synced, gnorm = clip_by_global_norm(
+                    synced, tcfg.optimizer.grad_clip)
+                new_p, new_opt = _zero_scattered_update_spmd(
+                    state.params, synced, state.opt, lr, tcfg, plan)
+                new_state = TrainState(new_p, new_opt, new_res,
+                                       state.step + 1)
+                return new_state, {"loss": loss, "grad_norm": gnorm,
+                                   "lr": lr}
             synced_leaves, new_res = comm.execute_plan_spmd(
                 plan, leaves_r, state.residuals, key,
                 p_data=p_data, p_pod=p_pod)
@@ -472,6 +686,22 @@ def build_train_step(model: Model, tcfg: TrainConfig, mesh: Mesh):
         data_rank = dp_index % p_data
         pod_rank = dp_index // p_data if pod_axis else None
         leaves_g, gtree = jax.tree.flatten(grads)
+        if plan.scattered:
+            # Scattered (DESIGN.md §11): the reduce stops at the owner
+            # shard, the update runs there, and the only gather left is
+            # the dense param allgather inside the update (one per
+            # bucket). Grad norm comes back exactly from the shards.
+            reduced, new_res, _ = comm.reduce_buckets(
+                plan, leaves_g, state.residuals, key,
+                data_axis=data_axis, p_data=p_data,
+                pod_axis=pod_axis, p_pod=p_pod,
+                native=native, data_rank=data_rank, pod_rank=pod_rank)
+            coll = comm.CollectiveContext(data_axis, p_data, native=native,
+                                          rank=data_rank)
+            new_p, new_opt, gnorm = _zero_scattered_update(
+                state.params, reduced, state.opt, lr, tcfg, plan, coll)
+            new_state = TrainState(new_p, new_opt, new_res, state.step + 1)
+            return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
         synced_leaves, new_res = comm.execute_plan(
             plan, leaves_g, state.residuals, key,
             data_axis=data_axis, p_data=p_data,

@@ -68,10 +68,44 @@ class Trainer:
     def init_or_resume(self):
         self.state, _ = init_state(self.model, self.tcfg, self.mesh)
         if self.ckpt_dir and ckpt.latest_step(self.ckpt_dir) is not None:
-            self.state = ckpt.restore(
-                self.ckpt_dir, self.state, dp_total=dp_total_of(self.mesh))
+            self.state = self._restore_any_layout()
             self.log.restarts += 1
         return int(self.state.step)
+
+    def _restore_any_layout(self):
+        """Restore the latest checkpoint, converting the optimizer state
+        when it was written under the OTHER ZeRO layout (DESIGN.md §11):
+        restore into a template of the checkpoint's own layout, then map
+        the moments through the full canonical buffer — value-exact, so a
+        scattered run resumes a replicated checkpoint (and vice versa)
+        with identical per-coordinate optimizer state."""
+        import dataclasses
+
+        from repro.train import train_step as ts
+
+        dp_total = dp_total_of(self.mesh)
+        my_layout = ckpt.opt_layout_of(self.tcfg)
+        meta = ckpt.load_meta(self.ckpt_dir)
+        ck_layout = meta.get("opt_layout", my_layout)
+        if ck_layout == my_layout:
+            return ckpt.restore(self.ckpt_dir, self.state, dp_total=dp_total)
+        other_mode = {"zero_scattered": "scattered",
+                      "zero1_leaf": "replicated"}.get(ck_layout)
+        if other_mode is None or my_layout == "full":
+            raise ValueError(
+                f"checkpoint opt layout {ck_layout!r} is not resumable "
+                f"under {my_layout!r} (only zero1_leaf <-> zero_scattered)")
+        other_tcfg = dataclasses.replace(
+            self.tcfg,
+            sync=dataclasses.replace(self.tcfg.sync, output_mode=other_mode))
+        other_shapes, _, _ = ts.state_shapes(self.model, other_tcfg,
+                                             self.mesh, return_plan=True)
+        restored = ckpt.restore(self.ckpt_dir, other_shapes,
+                                dp_total=dp_total)
+        _, _, plan = ts.state_shapes(self.model, self.tcfg, self.mesh,
+                                     return_plan=True)
+        return ckpt.convert_opt_layout(restored, plan, source=ck_layout,
+                                       target=my_layout)
 
     def resume_elastic(self, new_mesh):
         """Elastic restart onto a different mesh (pod count change)."""
@@ -123,9 +157,11 @@ class Trainer:
                             self.straggler_factor)
                 if self.ckpt_dir and (step + 1) % self.ckpt_every == 0:
                     ckpt.save(self.ckpt_dir, self.state,
-                              dp_total=dp_total_of(self.mesh))
+                              dp_total=dp_total_of(self.mesh),
+                              opt_layout=ckpt.opt_layout_of(self.tcfg))
         if self.ckpt_dir:
-            ckpt.save(self.ckpt_dir, self.state, dp_total=dp_total_of(self.mesh))
+            ckpt.save(self.ckpt_dir, self.state, dp_total=dp_total_of(self.mesh),
+                      opt_layout=ckpt.opt_layout_of(self.tcfg))
         return self.log
 
     # -- non-blocking runtime (DESIGN.md §6/§7) ----------------------------
@@ -214,7 +250,8 @@ class Trainer:
                          "plan_algorithms": active.algorithms(),
                          "plan_pod_sparse": active.pod_sparse_flags()}
             ckpt.save(self.ckpt_dir, s._replace(inflight=None),
-                      dp_total=dp_total, extra_meta=extra)
+                      dp_total=dp_total, extra_meta=extra,
+                      opt_layout=ckpt.opt_layout_of(self.tcfg))
 
         def restore_fn():
             restored = ckpt.restore(
