@@ -1,0 +1,134 @@
+"""Observability + health-engine overhead (DESIGN.md §10.5-§10.7).
+
+One paired measurement: the pipelined training step with the FULL
+compression-health observability stack on — in-graph (4,) mass
+telemetry, per-step ``record_bucket_telemetry`` into a live metrics
+registry, and a windowed ``HealthMonitor.evaluate()`` at every would-be
+drain barrier — versus everything off (``telemetry=False`` compiles the
+in-graph stats out entirely; the registry is disabled so every host-side
+record is a no-op). Acceptance: <= 15% overhead. The bound is wider
+than bench_adapt's bare-telemetry 5% because this arm also pays the
+host-side histogram folds and the rule sweep.
+
+Methodology matches ``bench_adapt._telemetry_overhead``: ABBA-paired
+rounds, best-of-min per arm (noise-robust on shared CI runners).
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compressor import SyncConfig
+
+P_DATA = 4
+STEPS = 12
+ROUNDS = 6
+HEALTH_EVERY = 4   # steps between HealthMonitor sweeps (a drain cadence)
+
+
+def bench_meta() -> dict:
+    return {"p_data": P_DATA, "steps_per_block": STEPS, "rounds": ROUNDS,
+            "health_every": HEALTH_EVERY}
+
+
+def _build(telemetry: bool):
+    from repro.compat import make_mesh
+    from repro.models.config import ModelConfig
+    from repro.models.model import build_model
+    from repro.optim.optimizers import OptimizerConfig
+    from repro.optim.schedule import ScheduleConfig
+    from repro.runtime import pipeline as rp
+    from repro.train.state import TrainConfig
+    from repro.train.train_step import init_state
+
+    cfg = ModelConfig(name="oh", family="dense", num_layers=1, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                      dtype=jnp.float32, param_dtype=jnp.float32,
+                      max_seq_len=32)
+    sync = SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=128,
+                      algorithm="dsar_split_allgather", min_sparse_size=1024,
+                      impl="ref")
+    tcfg = TrainConfig(sync=sync, optimizer=OptimizerConfig(),
+                       schedule=ScheduleConfig(peak_lr=1e-3, warmup_steps=5,
+                                               total_steps=100000),
+                       zero1=False)
+    model = build_model(cfg)
+    mesh = make_mesh((P_DATA, 2), ("data", "model"))
+    fn, _, plan = rp.build_pipelined_step(model, tcfg, mesh, staleness=1,
+                                          telemetry=telemetry)
+    st, _ = init_state(model, tcfg, mesh)
+    st = rp.attach_inflight(st, plan, mesh)
+    return mesh, fn, st
+
+
+def _overhead() -> list[tuple[str, float, str]]:
+    from repro.data.pipeline import DataConfig, synthetic_batch
+    from repro.obs.health import HealthConfig, HealthMonitor
+    from repro.obs.metrics import MetricsRegistry, record_bucket_telemetry
+
+    dcfg = DataConfig(global_batch=8, seq_len=16, vocab_size=256)
+    key = jax.random.PRNGKey(0)
+
+    mesh_on, fn_on, st_on = _build(telemetry=True)
+    _, fn_off, st_off = _build(telemetry=False)
+    states = {"on": st_on, "off": st_off}
+    fns = {"on": fn_on, "off": fn_off}
+    reg_on = MetricsRegistry(enabled=True)
+    reg_off = MetricsRegistry(enabled=False)
+    regs = {"on": reg_on, "off": reg_off}
+    # a small window so the rule sweep actually fires during the run
+    monitors = {tag: HealthMonitor(regs[tag],
+                                   HealthConfig(window=8, min_samples=4))
+                for tag in ("on", "off")}
+    n_events = 0
+
+    def block(tag, start):
+        nonlocal n_events
+        reg, mon = regs[tag], monitors[tag]
+        t0 = time.perf_counter()
+        st = states[tag]
+        for i in range(start, start + STEPS):
+            batch = jax.tree.map(jnp.asarray, synthetic_batch(dcfg, i))
+            ts = time.perf_counter()
+            st, m = fns[tag](st, batch, jax.random.fold_in(key, i))
+            jax.block_until_ready(m["loss"])
+            reg.series("train/step_time_s").append(time.perf_counter() - ts)
+            if "telemetry" in m:
+                record_bucket_telemetry(reg, m["telemetry"])
+            if (i + 1) % HEALTH_EVERY == 0:
+                n_events += len(mon.evaluate())
+        states[tag] = st
+        return (time.perf_counter() - t0) / STEPS * 1e6
+
+    with mesh_on:
+        block("on", 0), block("off", 0)           # compile + warm
+        t_on, t_off = [], []
+        for r in range(ROUNDS):                   # ABBA-paired rounds
+            start = (r + 1) * STEPS
+            if r % 2 == 0:
+                a = block("on", start)
+                b = block("off", start)
+            else:
+                b = block("off", start)
+                a = block("on", start)
+            t_on.append(a)
+            t_off.append(b)
+    us_on = min(t_on)
+    us_off = min(t_off)
+    overhead = us_on / us_off - 1.0
+    n_buckets = sum(1 for k in reg_on.metrics if k.startswith("bucket/"))
+    return [("obs_health_overhead", us_on,
+             f"off={us_off:.1f}us,overhead={overhead:+.1%},"
+             f"le_15pct={overhead <= 0.15},hists={n_buckets},"
+             f"health_events={n_events}")]
+
+
+def run() -> list[tuple[str, float, str]]:
+    return _overhead()

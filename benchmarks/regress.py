@@ -17,14 +17,22 @@ what the paper claims —
                        derived wire_bytes (modeled; deterministic) —
                        lower is better
 
-A cell regressing by more than ``--tol`` (fractional, default 0.25)
-fails the run with exit code 1. Missing files or rows only warn: the CI
-smoke job runs a module subset, and a renamed row should not brick CI
-silently-forever (the warning is the signal to refresh baselines).
-``--update`` copies the fresh files over the baselines instead of
-comparing (run it locally after an intentional perf change and commit
-the result). Both BENCH schemas load: v1 (flat row list) and v2
-({schema_version, meta, rows}).
+Tolerances are PER CELL: a flat band is simultaneously too loose for
+the analytic cells (wire/state bytes are deterministic — a 25% wire
+regression is a real algorithmic change, not noise) and too tight for
+the wall-clock ones (shared CI runners jitter timing well past 25%).
+Each cell gets its band from, in priority order: the baseline file's
+``meta.tolerances[label]`` (committed alongside the numbers so an
+intentional band change reviews like any perf change), a built-in
+per-kind default (``CELL_TOL``), then ``--tol``. A cell regressing
+beyond its band fails the run with exit code 1. Missing files or rows
+only warn: the CI smoke job runs a module subset, and a renamed row
+should not brick CI silently-forever (the warning is the signal to
+refresh baselines). ``--update`` copies the fresh files over the
+baselines instead of comparing, PRESERVING any ``meta.tolerances``
+already committed (run it locally after an intentional perf change and
+commit the result). Both BENCH schemas load: v1 (flat row list) and
+v2 ({schema_version, meta, rows}).
 """
 from __future__ import annotations
 
@@ -36,16 +44,50 @@ import sys
 
 DEFAULT_TOL = 0.25
 
+# Built-in per-kind bands (overridable per baseline file via
+# meta.tolerances): analytic cells tight, wall-clock cells wide.
+CELL_TOL = {
+    "adapt_drift_adaptive.us_per_call": 0.25,   # modeled cost, mild jitter
+    "serve_continuous.tok_per_s": 0.35,         # wall-clock throughput
+    "obs_health_overhead.us_per_call": 0.50,    # wall-clock step timing
+    "zero_state_scattered_P8.us_per_call": 0.02,   # analytic bytes
+    "zero_wire_scattered_P8.us_per_call": 0.05,    # analytic bytes
+}
+WIRE_BYTES_TOL = 0.05   # portfolio_*.wire_bytes: modeled, deterministic
+
 BASELINE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                             "baselines")
 
 
+def load_doc(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
 def load_rows(path: str) -> dict[str, dict]:
     """name -> row for either BENCH schema (v1 list, v2 object)."""
-    with open(path) as f:
-        doc = json.load(f)
+    doc = load_doc(path)
     rows = doc["rows"] if isinstance(doc, dict) else doc
     return {r["name"]: r for r in rows}
+
+
+def load_tolerances(path: str) -> dict[str, float]:
+    """The committed per-cell bands of a baseline file (v2 meta only)."""
+    doc = load_doc(path)
+    if isinstance(doc, dict):
+        tols = doc.get("meta", {}).get("tolerances", {})
+        return {str(k): float(v) for k, v in tols.items()}
+    return {}
+
+
+def cell_tol(label: str, overrides: dict[str, float]) -> float | None:
+    if label in overrides:
+        return overrides[label]
+    if label in CELL_TOL:
+        return CELL_TOL[label]
+    if label.endswith(".wire_bytes"):
+        return WIRE_BYTES_TOL
+    return None
 
 
 def parse_derived(derived: str) -> dict[str, str]:
@@ -68,7 +110,7 @@ def _cell_derived(row: dict, field: str) -> float:
 
 def headline_cells(fresh_dir: str, baseline_dir: str) -> list[dict]:
     """Resolve every headline cell present in BOTH trees. Each cell:
-    {label, fresh, baseline, higher_better}."""
+    {label, fresh, baseline, higher_better[, tol]}."""
     cells = []
 
     def both(fname):
@@ -79,46 +121,47 @@ def headline_cells(fresh_dir: str, baseline_dir: str) -> list[dict]:
                   f"(fresh={os.path.exists(fp)}, "
                   f"baseline={os.path.exists(bp)})", file=sys.stderr)
             return None
-        return load_rows(fp), load_rows(bp)
+        return load_rows(fp), load_rows(bp), load_tolerances(bp)
+
+    def add(label, fresh_v, base_v, higher_better, overrides):
+        c = {"label": label, "fresh": fresh_v, "baseline": base_v,
+             "higher_better": higher_better}
+        t = cell_tol(label, overrides)
+        if t is not None:
+            c["tol"] = t
+        cells.append(c)
 
     pair = both("BENCH_bench_adapt.json")
     if pair:
-        fresh, base = pair
+        fresh, base, tols = pair
         name = "adapt_drift_adaptive"
         if name in fresh and name in base:
-            cells.append({"label": f"{name}.us_per_call",
-                          "fresh": _cell_us(fresh[name]),
-                          "baseline": _cell_us(base[name]),
-                          "higher_better": False})
+            add(f"{name}.us_per_call", _cell_us(fresh[name]),
+                _cell_us(base[name]), False, tols)
         else:
             print(f"regress: row {name!r} missing", file=sys.stderr)
 
     pair = both("BENCH_bench_serve.json")
     if pair:
-        fresh, base = pair
+        fresh, base, tols = pair
         name = "serve_continuous"
         try:
-            cells.append({"label": f"{name}.tok_per_s",
-                          "fresh": _cell_derived(fresh[name], "tok_per_s"),
-                          "baseline": _cell_derived(base[name], "tok_per_s"),
-                          "higher_better": True})
+            add(f"{name}.tok_per_s", _cell_derived(fresh[name], "tok_per_s"),
+                _cell_derived(base[name], "tok_per_s"), True, tols)
         except KeyError:
             print(f"regress: {name!r} tok_per_s missing", file=sys.stderr)
 
     pair = both("BENCH_bench_allreduce.json")
     if pair:
-        fresh, base = pair
+        fresh, base, tols = pair
         shared = [n for n in base
                   if n.startswith("portfolio_") and "win" not in n
                   and n in fresh]
         for name in shared:
             try:
-                cells.append({"label": f"{name}.wire_bytes",
-                              "fresh": _cell_derived(fresh[name],
-                                                     "wire_bytes"),
-                              "baseline": _cell_derived(base[name],
-                                                        "wire_bytes"),
-                              "higher_better": False})
+                add(f"{name}.wire_bytes",
+                    _cell_derived(fresh[name], "wire_bytes"),
+                    _cell_derived(base[name], "wire_bytes"), False, tols)
             except KeyError:
                 print(f"regress: {name!r} wire_bytes missing",
                       file=sys.stderr)
@@ -127,7 +170,7 @@ def headline_cells(fresh_dir: str, baseline_dir: str) -> list[dict]:
 
     pair = both("BENCH_bench_zero.json")
     if pair:
-        fresh, base = pair
+        fresh, base, tols = pair
         # the two ZeRO acceptance quantities: per-device state bytes of
         # the scattered layout (memory claim) and its per-rank gradient
         # wire bytes (exchange claim) — both analytic, so near-zero
@@ -135,17 +178,26 @@ def headline_cells(fresh_dir: str, baseline_dir: str) -> list[dict]:
         # emulated-CPU host is too jittery to gate on)
         for name in ("zero_state_scattered_P8", "zero_wire_scattered_P8"):
             if name in fresh and name in base:
-                cells.append({"label": f"{name}.us_per_call",
-                              "fresh": _cell_us(fresh[name]),
-                              "baseline": _cell_us(base[name]),
-                              "higher_better": False})
+                add(f"{name}.us_per_call", _cell_us(fresh[name]),
+                    _cell_us(base[name]), False, tols)
             else:
                 print(f"regress: row {name!r} missing", file=sys.stderr)
+
+    pair = both("BENCH_bench_obs_health.json")
+    if pair:
+        fresh, base, tols = pair
+        name = "obs_health_overhead"
+        if name in fresh and name in base:
+            add(f"{name}.us_per_call", _cell_us(fresh[name]),
+                _cell_us(base[name]), False, tols)
+        else:
+            print(f"regress: row {name!r} missing", file=sys.stderr)
     return cells
 
 
 def compare(cells: list[dict], tol: float) -> list[dict]:
-    """Returns the regressed cells (worse than baseline by > tol)."""
+    """Returns the regressed cells (worse than baseline by more than
+    their band: the cell's own ``tol`` when present, else ``tol``)."""
     bad = []
     for c in cells:
         base, fresh = c["baseline"], c["fresh"]
@@ -155,7 +207,7 @@ def compare(cells: list[dict], tol: float) -> list[dict]:
         reg = (base - fresh) / base if c["higher_better"] \
             else (fresh - base) / base
         c["regression"] = reg
-        if reg > tol:
+        if reg > c.get("tol", tol):
             bad.append(c)
     return bad
 
@@ -166,10 +218,12 @@ def main() -> None:
                     help="directory with freshly produced BENCH_*.json")
     ap.add_argument("--baselines", type=str, default=BASELINE_DIR)
     ap.add_argument("--tol", type=float, default=DEFAULT_TOL,
-                    help="max fractional regression per headline cell")
+                    help="fallback fractional band for cells with no "
+                         "per-cell tolerance")
     ap.add_argument("--update", action="store_true",
                     help="copy fresh BENCH files over the baselines "
-                         "instead of comparing")
+                         "instead of comparing (meta.tolerances of an "
+                         "existing baseline is preserved)")
     args = ap.parse_args()
 
     if args.update:
@@ -179,7 +233,14 @@ def main() -> None:
         for src in sorted(glob.glob(os.path.join(args.fresh,
                                                  "BENCH_*.json"))):
             dst = os.path.join(args.baselines, os.path.basename(src))
-            shutil.copy(src, dst)
+            tols = load_tolerances(dst) if os.path.exists(dst) else {}
+            doc = load_doc(src)
+            if tols and isinstance(doc, dict):
+                doc.setdefault("meta", {})["tolerances"] = tols
+                with open(dst, "w") as f:
+                    json.dump(doc, f, indent=1)
+            else:
+                shutil.copy(src, dst)
             print(f"regress: updated {dst}")
         return
 
@@ -193,11 +254,12 @@ def main() -> None:
         mark = "REGRESSED" if c in bad else "ok"
         print(f"  {c['label']:<{w}}  baseline={c['baseline']:<12.4g} "
               f"fresh={c['fresh']:<12.4g} "
-              f"delta={c.get('regression', 0.0):+7.1%}  {mark}")
+              f"delta={c.get('regression', 0.0):+7.1%} "
+              f"tol={c.get('tol', args.tol):.0%}  {mark}")
     if bad:
         raise SystemExit(
             f"bench-regress: {len(bad)} headline cell(s) regressed beyond "
-            f"{args.tol:.0%} — intentional? refresh with --update and "
+            f"their band — intentional? refresh with --update and "
             f"commit benchmarks/baselines/")
 
 

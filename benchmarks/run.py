@@ -52,6 +52,7 @@ MODULES = {
     "adapt": "benchmarks.bench_adapt",              # DESIGN.md §7 re-planning
     "bench_serve": "benchmarks.bench_serve",        # DESIGN.md §8 serving
     "zero": "benchmarks.bench_zero",                # DESIGN.md §11 ZeRO state
+    "obs_health": "benchmarks.bench_obs_health",    # DESIGN.md §10.5-§10.7
 }
 
 
@@ -105,6 +106,10 @@ def main() -> None:
     obs = obs_mod.configure(trace=args.trace,
                             metrics=bool(args.metrics_out) or args.trace)
     meta = run_meta()
+    # open the sink at run START so a crashed/killed invocation still
+    # leaves a complete, parseable JSONL of everything up to that point
+    sink = (obs.metrics.jsonl_sink(args.metrics_out, meta=meta)
+            if args.metrics_out else None)
 
     print("name,us_per_call,derived")
     failed = []
@@ -149,8 +154,8 @@ def main() -> None:
             failed.append(name)
             print(f"{name},ERROR,{type(e).__name__}:{e}", file=sys.stderr)
             traceback.print_exc()
-    if args.metrics_out:
-        obs.metrics.dump_jsonl(args.metrics_out, meta=meta)
+    if sink is not None:
+        sink.close()
     if failed:
         raise SystemExit(f"benchmark modules failed: {failed}")
 

@@ -26,6 +26,7 @@ from repro.models.model import build_model
 from repro.serve import (
     ContinuousServeEngine,
     Request,
+    ServeConfig,
     ServeEngine,
     poisson_trace,
 )
@@ -63,7 +64,8 @@ def run_static(mesh, model, params, batch: int, tokens: int, obs=None):
     print("greedy decode is deterministic: OK")
 
 
-def run_continuous(mesh, model, params, batch: int, tokens: int, obs=None):
+def run_continuous(mesh, model, params, batch: int, tokens: int, obs=None,
+                   slo: "ServeConfig | None" = None):
     rng = np.random.default_rng(0)
     n_req = 2 * batch
     arrivals = poisson_trace(n_req, rate=0.5, seed=0)
@@ -74,7 +76,7 @@ def run_continuous(mesh, model, params, batch: int, tokens: int, obs=None):
             for i in range(n_req)]
     engine = ContinuousServeEngine(model, mesh, params, cache_len=128,
                                    batch_size=batch, dispatch="adaptive",
-                                   obs=obs)
+                                   obs=obs, serve_cfg=slo)
     res = engine.run(reqs)
     occ = [r["active"] for r in res.step_log]
     print(f"continuous: {len(reqs)} requests, {res.tokens} tokens in "
@@ -89,6 +91,12 @@ def run_continuous(mesh, model, params, batch: int, tokens: int, obs=None):
               f"ttft p50={lat['ttft']['p50']:.1f} p99={lat['ttft']['p99']:.1f}; "
               f"tpot p50={lat['tpot']['p50']:.2f}; "
               f"e2e p99={lat['e2e']['p99']:.1f}")
+    if slo is not None and obs is not None and obs.metrics_on:
+        # res.health only carries verdicts when the registry was live
+        misses = [(e.severity, e.subject) for e in res.health]
+        print(f"SLO targets {slo.slo_targets()}: "
+              + (f"{len(misses)} miss(es) {misses}" if misses
+                 else "all attained"))
     assert len(res.outputs) == n_req
     print("all requests completed: OK")
     return engine
@@ -111,6 +119,13 @@ def main():
                     help="write the metrics/event JSONL (occupancy/queue/"
                          "wire histograms, latency percentiles, plan "
                          "swaps) and run a serve-plan drift audit")
+    ap.add_argument("--slo-ttft", type=float, default=16.0,
+                    help="p99 time-to-first-token target in decode-step "
+                         "units (DESIGN.md §10.5); misses become ranked "
+                         "health/serve_slo events")
+    ap.add_argument("--slo-e2e", type=float, default=96.0,
+                    help="p99 arrival->retirement target in decode-step "
+                         "units")
     args = ap.parse_args()
     tokens = args.tokens if args.tokens is not None else (8 if args.fast else 24)
 
@@ -122,8 +137,10 @@ def main():
     mesh, model, params = build(args.fast)
     engine = None
     if args.continuous:
+        slo = ServeConfig(slo_ttft_p99=args.slo_ttft,
+                          slo_e2e_p99=args.slo_e2e)
         engine = run_continuous(mesh, model, params, args.batch, tokens,
-                                obs=obs)
+                                obs=obs, slo=slo)
     else:
         run_static(mesh, model, params, args.batch, tokens, obs=obs)
 

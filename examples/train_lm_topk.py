@@ -65,13 +65,21 @@ def main():
                     help="write the metrics/event JSONL (per-bucket "
                          "nnz/wire histograms, plan swaps, step times) "
                          "and run a cost-model drift audit at the end")
+    ap.add_argument("--blackbox", type=str, default=None, metavar="PATH",
+                    help="attach the flight recorder (DESIGN.md §10.6): "
+                         "a bounded ring of driver retires dumped to this "
+                         "path on exception, watchdog fire, or SIGTERM/"
+                         "SIGINT — the post-mortem for a killed run")
     args = ap.parse_args()
 
     from repro import obs as obs_mod
 
     obs = obs_mod.configure(trace=bool(args.trace),
                             metrics=bool(args.metrics_out) or bool(args.trace),
-                            audit=bool(args.metrics_out))
+                            audit=bool(args.metrics_out),
+                            recorder=args.blackbox or False)
+    if obs.recorder is not None:
+        obs.recorder.install_signal_handlers()
 
     if args.fast:
         cfg = ModelConfig(name="lm-12m", family="dense", num_layers=4,
@@ -167,6 +175,16 @@ def main():
                             net=getattr(trainer, "_net_cal", None),
                             auditor=obs.audit, registry=obs.metrics)
             print(obs.audit.summary())
+        if obs.metrics_on:
+            # compression-health verdict over the whole run (DESIGN.md
+            # §10.5): EF growth, coverage floor, step-time p99 — reuse
+            # the monitor the pipelined driver evaluated at drains
+            from repro.obs import HealthMonitor
+
+            mon = trainer.last_health or HealthMonitor(
+                obs.metrics, audit=obs.audit)
+            mon.evaluate()
+            print("health:", mon.summary())
         obs.export(trace_path=args.trace, metrics_path=args.metrics_out)
         if obs.metrics_on:
             print(obs.metrics.summary())

@@ -66,18 +66,29 @@ def _qsgd_rand(key, bucket_idx: int, coll: CollectiveContext,
 
 
 def _bucket_telemetry(out, plan, group, b, p_data: int, p_pod: int,
-                      coll: Optional[CollectiveContext] = None):
-    """In-graph per-bucket stats (DESIGN.md §7): a (2,) f32 vector of
-    [post-reduction nnz, modeled wire bytes at the measured nnz]. The nnz
-    count runs on the already-materialized reduced buffer — O(n) local
-    work, no collectives — and is replicated across ranks because the
-    buffer is. Scattered manual lowerings are the exception: ``out`` is
-    my owned shard only, so the global nnz is one scalar psum over the
-    disjoint shards (``coll`` supplies it; the SPMD formulation sees the
-    full buffer and needs none). The adaptive controller windows these
-    on the host. Emitted for EF (compressed) buckets only: raw-dense
-    buckets have no replan freedom, so their stats could never influence
-    a decision."""
+                      coll: Optional[CollectiveContext] = None,
+                      mass: Optional[jax.Array] = None):
+    """In-graph per-bucket stats (DESIGN.md §7, §10.5): a (2,) f32 vector
+    of [post-reduction nnz, modeled wire bytes at the measured nnz] — or,
+    when ``mass`` is supplied, a (4,) vector extended with
+    [compressed-mass coverage, EF-residual norm]. The nnz count runs on
+    the already-materialized reduced buffer — O(n) local work, no
+    collectives — and is replicated across ranks because the buffer is.
+    Scattered manual lowerings are the exception: ``out`` is my owned
+    shard only, so the global nnz is one scalar psum over the disjoint
+    shards (``coll`` supplies it; the SPMD formulation sees the full
+    buffer and needs none). The adaptive controller windows these on the
+    host. Emitted for EF (compressed) buckets only: raw-dense buckets
+    have no replan freedom, so their stats could never influence a
+    decision.
+
+    ``mass`` is the globally-summed (3,) vector
+    [Σ‖topk‖², Σ‖g+r‖², Σ‖r'‖²] (callers psum it where the formulation
+    is per-rank): coverage = ‖topk‖²/‖g+r‖² — the fraction of
+    pre-compression gradient mass the wire actually carried this step —
+    and ef_norm = ‖r'‖₂, the post-step residual magnitude the health
+    engine watches for EF blowup. An all-zero accumulator counts as full
+    coverage (nothing to carry)."""
     from repro.core.cost_model import bucket_wire_bytes, pod_wire_bytes
 
     cfg = plan.cfg
@@ -92,7 +103,26 @@ def _bucket_telemetry(out, plan, group, b, p_data: int, p_pod: int,
         sparse_pod = b.pod_sparse and group.rows == 1
         wire = wire + pod_wire_bytes(p_pod, b.n, min(b.n, p_data * k),
                                      pod_sparse=sparse_pod)
-    return jnp.stack([nnz, jnp.asarray(wire, jnp.float32)])
+    base = jnp.stack([nnz, jnp.asarray(wire, jnp.float32)])
+    if mass is None:
+        return base
+    coverage = jnp.where(mass[1] > 0,
+                         mass[0] / jnp.maximum(mass[1], jnp.float32(1e-30)),
+                         jnp.float32(1.0))
+    ef_norm = jnp.sqrt(mass[2])
+    return jnp.concatenate([base, jnp.stack([coverage, ef_norm])])
+
+
+def _local_mass(u_val, acc, residual) -> jax.Array:
+    """Per-rank (3,) f32 [Σ‖topk‖², Σ‖g+r‖², Σ‖r'‖²] — the summands of
+    the mass-coverage/EF-norm telemetry. Sums over EVERY axis so the
+    same helper serves the per-rank manual slices and the (R, ...) SPMD
+    stacks (where the leading-axis sum already makes it global)."""
+    return jnp.stack([
+        jnp.sum(jnp.square(u_val.astype(jnp.float32))),
+        jnp.sum(jnp.square(acc.astype(jnp.float32))),
+        jnp.sum(jnp.square(residual.astype(jnp.float32))),
+    ])
 
 
 def _pod_sparse_exchange(out, pod_axis: str, cap: int) -> jax.Array:
@@ -177,16 +207,20 @@ def reduce_buckets(
     native: bool = True,
     data_rank: Optional[jax.Array] = None,
     pod_rank: Optional[jax.Array] = None,
+    telemetry: bool = True,
 ):
     """The REDUCE half of the bucket pipeline: pack -> EF add -> TopK ->
     per-bucket collective. Returns (reduced, new_residuals, telemetry)
     where ``reduced`` maps bucket name -> the fully reduced, scaled
     (rows, cols) f32 buffer (replicated over the dp axes once the
     collective is done) and ``telemetry`` maps each EF bucket's name ->
-    the (2,) f32 [post-reduction nnz, wire bytes] stats vector
-    (DESIGN.md §7) — cheap in-graph counts the adaptive controller
-    consumes on the host (raw-dense buckets are not re-plannable and
-    emit none).
+    the (4,) f32 [post-reduction nnz, wire bytes, mass coverage,
+    EF-residual norm] stats vector (DESIGN.md §7, §10.5) — cheap
+    in-graph counts the adaptive controller and health engine consume on
+    the host (raw-dense buckets are not re-plannable and emit none).
+    ``telemetry=False`` compiles the stats out entirely: the returned
+    dict is empty and NO telemetry ops (including the mass psum) are
+    traced — not merely DCE'd, absent from the jaxpr.
 
     Splitting here is what makes the non-blocking runtime possible
     (DESIGN.md §6): the pipelined superstep holds ``reduced`` in flight as
@@ -252,7 +286,7 @@ def reduce_buckets(
 
     reduced: dict = {}
     new_residuals: dict = {}
-    telemetry: dict = {}
+    telem: dict = {}
     bucket_idx = 0
     for group in plan.groups:
         buf = pack_group(group, leaves, cfg.bucket_size)     # (rows, cols) f32
@@ -331,18 +365,27 @@ def reduce_buckets(
                 else:
                     out = safe_psum(out, pod_axis)            # hierarchical
             reduced[b.name] = (out * scale)[None] if scattered else out * scale
-            telemetry[b.name] = _bucket_telemetry(out, plan, group, b,
-                                                  p_data, p_pod, coll=coll)
             if fold is not None:
                 # Global-residual rule (DESIGN.md §9): mass clamped off
                 # the wire by a portfolio algorithm re-enters THIS rank's
                 # EF residual at pre-scale magnitude, so it is
                 # contributed exactly once on a later step — no gradient
-                # mass is silently lost.
+                # mass is silently lost. Folded BEFORE the telemetry
+                # read so the reported EF norm covers the clamped mass.
                 residual = residual + fold[None, :]
+            if telemetry:
+                # Mass stats are per-rank sums here; ONE extra (3,) psum
+                # per EF bucket makes them global (in-graph collective —
+                # no host sync point, the no-added-sync invariant holds).
+                m = coll.psum(_local_mass(u.val, acc, residual))
+                if pod_axis is not None and p_pod > 1:
+                    m = safe_psum(m, pod_axis)
+                telem[b.name] = _bucket_telemetry(out, plan, group, b,
+                                                  p_data, p_pod, coll=coll,
+                                                  mass=m)
             new_residuals[b.name] = residual.astype(res.dtype)[None]
             bucket_idx += 1
-    return reduced, new_residuals, telemetry
+    return reduced, new_residuals, telem
 
 
 def apply_buckets(plan: SyncPlan, reduced: dict, leaves: Sequence[jax.Array]):
@@ -394,12 +437,12 @@ def execute_plan(
 ):
     """Synchronous sync of the planned leaves: :func:`reduce_buckets`
     composed immediately with :func:`apply_buckets` (the staleness=0
-    path). Returns (new_leaves, new_residuals); the telemetry dict is
-    dropped here — callers that want it compose the halves themselves."""
+    path). Returns (new_leaves, new_residuals); telemetry is compiled
+    out here — callers that want it compose the halves themselves."""
     reduced, new_residuals, _ = reduce_buckets(
         plan, leaves, residuals, key, data_axis=data_axis, p_data=p_data,
         pod_axis=pod_axis, p_pod=p_pod, native=native,
-        data_rank=data_rank, pod_rank=pod_rank)
+        data_rank=data_rank, pod_rank=pod_rank, telemetry=False)
     return apply_buckets(plan, reduced, leaves), new_residuals
 
 
@@ -431,6 +474,7 @@ def reduce_buckets_spmd(
     *,
     p_data: int,
     p_pod: int = 1,
+    telemetry: bool = True,
 ):
     """The same REDUCE half as :func:`reduce_buckets`, expressed as
     plain auto-SPMD array ops OUTSIDE any shard_map.
@@ -447,8 +491,11 @@ def reduce_buckets_spmd(
     residuals: bucket-keyed, FULL (R, rows, cols) arrays (not slices).
 
     Returns (reduced {bucket name -> (rows, cols) f32 buffer}, new
-    bucket-keyed residuals (full arrays), telemetry {name -> (2,) f32
-    [nnz, wire bytes]}). Numerics match the manual executor: sums over
+    bucket-keyed residuals (full arrays), telemetry {name -> (4,) f32
+    [nnz, wire bytes, mass coverage, EF norm]; empty and fully compiled
+    out under ``telemetry=False``). The mass sums need no collective
+    here — the (R, ...) stacks already hold every rank's slice, so the
+    all-axis sums ARE global. Numerics match the manual executor: sums over
     the leading axis are the allreduce; DSAR+QSGD replays every (pod,
     range-owner) quantization on the pod-local sums. SSAR algorithms
     reduce exactly (their wire layout has no numeric effect), so they
@@ -484,7 +531,7 @@ def reduce_buckets_spmd(
 
     reduced: dict = {}
     new_residuals: dict = {}
-    telemetry: dict = {}
+    telem: dict = {}
     bucket_idx = 0
     for group in plan.groups:
         segs = [
@@ -529,11 +576,13 @@ def reduce_buckets_spmd(
             out = dpod.sum(axis=0)
             reduced[b.name] = (_chunked(out * scale) if scattered
                                else out * scale)
-            telemetry[b.name] = _bucket_telemetry(out, plan, group, b,
-                                                  p_data, p_pod)
+            if telemetry:
+                telem[b.name] = _bucket_telemetry(
+                    out, plan, group, b, p_data, p_pod,
+                    mass=_local_mass(u.val, acc, residual))
             new_residuals[b.name] = residual.astype(res.dtype)
             bucket_idx += 1
-    return reduced, new_residuals, telemetry
+    return reduced, new_residuals, telem
 
 
 def unchunk_buckets_spmd(plan: SyncPlan, reduced: dict) -> dict:
@@ -573,10 +622,11 @@ def execute_plan_spmd(
 ):
     """Synchronous auto-SPMD sync: :func:`reduce_buckets_spmd` composed
     immediately with :func:`apply_buckets_spmd` (the staleness=0 path).
-    Returns (synced leaves in original layout, new residuals); the
-    telemetry dict is dropped, as in :func:`execute_plan`."""
+    Returns (synced leaves in original layout, new residuals); telemetry
+    is compiled out, as in :func:`execute_plan`."""
     reduced, new_residuals, _ = reduce_buckets_spmd(
-        plan, leaves_r, residuals, key, p_data=p_data, p_pod=p_pod)
+        plan, leaves_r, residuals, key, p_data=p_data, p_pod=p_pod,
+        telemetry=False)
     return apply_buckets_spmd(plan, reduced, leaves_r), new_residuals
 
 

@@ -1,12 +1,20 @@
-"""repro.obs — unified observability: tracing, metrics, drift audit.
+"""repro.obs — unified observability: tracing, metrics, drift audit,
+health rules, flight recorder.
 
-One facade object (:class:`Observability`) bundles the three concerns so
+One facade object (:class:`Observability`) bundles the concerns so
 every layer threads a single handle:
 
-    obs = configure(trace=True, metrics=True)
+    obs = configure(trace=True, metrics=True, recorder="blackbox.json")
     with obs.span("driver/dispatch", step=i): ...
     obs.event("adapt/replan_accepted", signature=sig)
     obs.export(trace_path="trace.json", metrics_path="metrics.jsonl")
+
+The second tier (DESIGN.md §10.5–§10.7) layers on the same registry:
+:class:`~repro.obs.health.HealthMonitor` runs windowed compression-
+health rules over it, :class:`~repro.obs.recorder.FlightRecorder`
+(``obs.recorder``) dumps a bounded ring to ``blackbox.json`` on
+crashes, and ``python -m repro.obs.report`` renders the exported
+artifacts into a terminal summary.
 
 The module-level default is OFF (``obs.OFF``): every span is a shared
 no-op context manager, every event a single attribute check — the
@@ -24,24 +32,37 @@ from repro.obs.audit import (
     audit_sync_plan,
     time_phases,
 )
+from repro.obs.health import (
+    HealthConfig,
+    HealthEvent,
+    HealthMonitor,
+    rank_events,
+)
 from repro.obs.metrics import (
     SCHEMA_VERSION,
+    JsonlSink,
     MetricsRegistry,
     record_bucket_telemetry,
 )
+from repro.obs.recorder import FlightRecorder
 from repro.obs.trace import NULL_TRACER, Tracer, validate_span_tree
 
 
 class Observability:
-    """Tracer + metrics registry + drift auditor behind one handle."""
+    """Tracer + metrics registry + drift auditor (+ optional flight
+    recorder) behind one handle."""
 
     def __init__(self, tracer: Tracer | None = None,
                  metrics: MetricsRegistry | None = None,
-                 audit: DriftAuditor | None = None):
+                 audit: DriftAuditor | None = None,
+                 recorder=None):
         self.tracer = tracer if tracer is not None else NULL_TRACER
         self.metrics = metrics if metrics is not None \
             else MetricsRegistry(enabled=False)
         self.audit = audit
+        # FlightRecorder (repro.obs.recorder) or None; runtime loops
+        # check the attribute and dump on exception/watchdog/signal.
+        self.recorder = recorder
 
     @property
     def trace_on(self) -> bool:
@@ -95,13 +116,26 @@ _default = OFF
 
 def configure(trace: bool = False, metrics: bool = False,
               audit: bool = False, *, set_as_default: bool = True,
-              flag_ratio: float = 3.0) -> Observability:
-    """Build (and by default install) an Observability handle."""
+              flag_ratio: float = 3.0,
+              recorder: str | bool = False,
+              recorder_capacity: int = 256) -> Observability:
+    """Build (and by default install) an Observability handle.
+
+    ``recorder`` attaches a :class:`~repro.obs.recorder.FlightRecorder`:
+    pass a path for its ``blackbox.json`` (or ``True`` for the default
+    name in the CWD). The runtime driver and serve engine dump it on
+    exception and watchdog fire; call
+    ``obs.recorder.install_signal_handlers()`` from the main thread to
+    add the signal trigger."""
     ob = Observability(
         tracer=Tracer(enabled=True) if trace else NULL_TRACER,
         metrics=MetricsRegistry(enabled=metrics),
         audit=DriftAuditor(flag_ratio=flag_ratio) if audit else None,
     )
+    if recorder:
+        path = recorder if isinstance(recorder, str) else "blackbox.json"
+        ob.recorder = FlightRecorder(path, capacity=recorder_capacity,
+                                     obs=ob)
     if set_as_default:
         set_default(ob)
     return ob
@@ -124,6 +158,11 @@ def resolve(ob: Observability | None) -> Observability:
 __all__ = [
     "SCHEMA_VERSION",
     "DriftAuditor",
+    "FlightRecorder",
+    "HealthConfig",
+    "HealthEvent",
+    "HealthMonitor",
+    "JsonlSink",
     "MetricsRegistry",
     "NULL_TRACER",
     "Observability",
@@ -134,6 +173,7 @@ __all__ = [
     "audit_sync_plan",
     "configure",
     "get_default",
+    "rank_events",
     "record_bucket_telemetry",
     "resolve",
     "set_default",

@@ -202,10 +202,14 @@ class MetricsRegistry:
     def dump_jsonl(self, path: str, meta: dict | None = None) -> str:
         """JSONL sink: header line, then one line per metric, then one per
         event. The header carries ``schema_version`` and run metadata so
-        files are joinable across PRs."""
+        files are joinable across PRs. The write is atomic (tmp file +
+        flush + fsync + rename) so an abnormal exit mid-dump can never
+        leave a truncated file — readers see the previous complete dump
+        or the new one, nothing in between."""
         d = os.path.dirname(os.path.abspath(path))
         os.makedirs(d, exist_ok=True)
-        with open(path, "w") as f:
+        tmp = os.path.join(d, f".{os.path.basename(path)}.tmp.{os.getpid()}")
+        with open(tmp, "w") as f:
             f.write(json.dumps({
                 "kind": "header", "schema_version": SCHEMA_VERSION,
                 "meta": _jsonable(meta or {}),
@@ -217,7 +221,18 @@ class MetricsRegistry:
                 }) + "\n")
             for ev in self.events:
                 f.write(json.dumps({"kind": "event", **ev}) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
         return path
+
+    def jsonl_sink(self, path: str, meta: dict | None = None) -> "JsonlSink":
+        """Open a context-managed JSONL sink bound to this registry: a
+        handle that re-dumps the registry on ``flush()``, on context
+        exit (including exceptions), and — as a last resort — at
+        interpreter exit via ``atexit``, so a run killed halfway still
+        leaves a valid, parseable JSONL behind instead of nothing."""
+        return JsonlSink(self, path, meta)
 
     def summary(self) -> str:
         """Aligned terminal table of every metric plus event counts."""
@@ -236,19 +251,81 @@ class MetricsRegistry:
         return "\n".join(lines) if lines else "  (no metrics recorded)"
 
 
+class JsonlSink:
+    """Crash-safe handle on a metrics JSONL file (DESIGN.md §10.2).
+
+    ``MetricsRegistry.dump_jsonl`` alone only writes when the program
+    reaches the final export call — a run that dies early leaves no
+    metrics at all. The sink closes that gap: open it at run START, and
+    every exit path (normal return, exception via the ``with`` block,
+    SIGTERM-free interpreter shutdown via ``atexit``) re-dumps whatever
+    the registry holds at that moment. Each dump is the atomic
+    whole-file write of ``dump_jsonl``, so the file on disk is always a
+    complete, parseable JSONL — partial runs included. ``meta`` may be
+    mutated (or replaced via the attribute) before the final flush."""
+
+    def __init__(self, registry: MetricsRegistry, path: str,
+                 meta: dict | None = None):
+        import atexit
+
+        self.registry = registry
+        self.path = path
+        self.meta = dict(meta or {})
+        self._closed = False
+        self._atexit = atexit
+        atexit.register(self._atexit_flush)
+
+    def flush(self) -> str:
+        return self.registry.dump_jsonl(self.path, self.meta)
+
+    def _atexit_flush(self) -> None:
+        if not self._closed:
+            try:
+                self.flush()
+            except Exception:
+                pass  # interpreter teardown — never raise from atexit
+
+    def close(self) -> str:
+        """Final flush + atexit deregistration (idempotent)."""
+        if not self._closed:
+            self._closed = True
+            try:
+                self._atexit.unregister(self._atexit_flush)
+            except Exception:
+                pass
+            return self.flush()
+        return self.path
+
+    def __enter__(self) -> "JsonlSink":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+
 NULL_REGISTRY = MetricsRegistry(enabled=False)
 
 
 def record_bucket_telemetry(registry: MetricsRegistry, telemetry: dict,
                             *, prefix: str = "bucket") -> None:
-    """Fold one step's in-graph telemetry (name -> (k, 2) [nnz, wire]
-    host arrays, the PR-3 format AdaptiveRuntime.observe consumes) into
-    per-bucket nnz / wire-bytes histograms."""
+    """Fold one step's in-graph telemetry into per-bucket histograms.
+
+    Accepts both wire widths: (k, 2) [nnz, wire] (the PR-3 format the
+    serve activation exchange still emits) and (k, 4) [nnz, wire, mass
+    coverage, EF-residual norm] (the training executor, DESIGN.md
+    §10.5). The extra columns land in ``<prefix>/<name>/mass_coverage``
+    and ``.../ef_norm`` histograms the health engine windows over."""
     if not registry.enabled:
         return
     for name, arr in telemetry.items():
-        a = np.asarray(arr)
-        if a.ndim != 2 or a.shape[-1] != 2:
+        # a single step's (2,)/(4,) row is one-row 2-D
+        a = np.atleast_2d(np.asarray(arr))
+        if a.ndim != 2 or a.shape[-1] not in (2, 4):
             continue
         registry.histogram(f"{prefix}/{name}/nnz").observe_many(a[:, 0])
         registry.histogram(f"{prefix}/{name}/wire_bytes").observe_many(a[:, 1])
+        if a.shape[-1] == 4:
+            registry.histogram(
+                f"{prefix}/{name}/mass_coverage").observe_many(a[:, 2])
+            registry.histogram(
+                f"{prefix}/{name}/ef_norm").observe_many(a[:, 3])

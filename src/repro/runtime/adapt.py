@@ -110,7 +110,29 @@ class AdaptiveController:
         self._pending_sig: Optional[str] = None
         self._pending_plan = None
         self._pending_count = 0
+        self._urgent = False
         self.swaps = 0
+
+    # -- health advisory ---------------------------------------------------
+    def advise(self, events) -> None:
+        """Drain-barrier advisory from the health engine (DESIGN.md
+        §10.5): CRITICAL compression-health findings (EF-residual
+        blowup, mass-coverage collapse) mark the controller urgent — its
+        next pending proposal is accepted after a single agreeing window
+        instead of waiting out the full ``patience``. Advisory only:
+        nothing is forced, hysteresis still applies, and the flag clears
+        at the next accepted swap (a persisting condition simply
+        re-advises at the next barrier)."""
+        crit = [e for e in events
+                if getattr(e, "severity", None) == "critical"
+                and getattr(e, "rule", None) in ("ef_growth",
+                                                 "coverage_floor")]
+        if not crit:
+            return
+        self._urgent = True
+        self.obs.event("adapt/health_advisory",
+                       buckets=sorted({e.subject for e in crit}),
+                       rules=sorted({e.rule for e in crit}))
 
     # -- telemetry ingest --------------------------------------------------
     def observe_step(self, nnz_by_bucket: dict):
@@ -238,7 +260,8 @@ class AdaptiveController:
         else:
             self._pending_sig, self._pending_plan = sig, candidate
             self._pending_count = 1
-        if self._pending_count < self.cfg.patience:
+        need = 1 if self._urgent else self.cfg.patience
+        if self._pending_count < need:
             self.obs.event("adapt/replan_pending", signature=sig,
                            count=self._pending_count,
                            patience=self.cfg.patience, densities=densities)
@@ -246,6 +269,7 @@ class AdaptiveController:
         accepted = self._pending_plan
         self.plan = accepted
         self._pending_sig, self._pending_count = None, 0
+        self._urgent = False
         self.swaps += 1
         self.obs.event("adapt/replan_accepted", signature=accepted.signature(),
                        version=accepted.version, swaps=self.swaps,
@@ -384,7 +408,10 @@ class AdaptiveRuntime:
         if not telem:
             return
         arrs = {name: np.atleast_2d(np.asarray(v)) for name, v in
-                telem.items()}            # (k, 2) rows of [nnz, wire]
+                telem.items()}
+        # (k, 2) [nnz, wire] or (k, 4) [nnz, wire, mass coverage, EF
+        # norm] rows — col 0 (nnz) drives replans either way; the mass
+        # cols feed the health-engine histograms via the recorder below.
         record_bucket_telemetry(self.obs.metrics, arrs)
         k = min(a.shape[0] for a in arrs.values())
         for i in range(k):
@@ -392,6 +419,11 @@ class AdaptiveRuntime:
             accepted = self.controller.observe_step(row)
             if accepted is not None:
                 self._swap_to = accepted
+
+    def advise(self, events) -> None:
+        """Forward the driver's drain-barrier health advisory to the
+        controller (see AdaptiveController.advise)."""
+        self.controller.advise(events)
 
     def maybe_swap(self):
         """Returns (new_step_fn, new_plan) once after each accepted

@@ -208,6 +208,7 @@ def run_pipelined(
     adapt=None,
     obs=None,
     phase_attr: Optional[Callable[[float], list]] = None,
+    health=None,
 ):
     """Drive ``step_fn`` from ``start_step`` to ``num_steps`` (absolute).
 
@@ -230,11 +231,20 @@ def run_pipelined(
     phase_attr: ``dt_unit_s -> [phase dict]`` (see
     ``obs.attribute_step_phases``); when tracing, each retire interval
     is tiled with the derived compute/exposed-comm device spans.
+    health: a ``repro.obs.health.HealthMonitor`` — evaluated at drain
+    barriers and at end of run (host-side registry reads, no sync);
+    verdicts land as ``health/*`` events, and when ``adapt`` exposes an
+    ``advise`` hook the critical findings are handed to it as the
+    drain-barrier advisory (DESIGN.md §10.5).
+    The flight recorder (``obs.recorder``, when attached) notes every
+    retired unit and dumps ``blackbox.json`` on watchdog fire and on any
+    exception — including ones the restore path survives.
     Returns (final state, log).
     """
     if cfg.depth < 1 or cfg.prefetch < 1 or cfg.steps_per_unit < 1:
         raise ValueError(f"DriverConfig fields must be >= 1: {cfg}")
     obs = _resolve_obs(obs)
+    rec = getattr(obs, "recorder", None)
     if log is None:
         log = DriverLog(registry=obs.metrics if obs.metrics_on else None)
     k_unit = cfg.steps_per_unit
@@ -255,12 +265,18 @@ def run_pipelined(
         prev_t = last_retire_t
         last_retire_t = now
         losses = np.atleast_1d(np.asarray(metrics["loss"]))
+        n_stragglers = len(log.straggler_events)
         for i in range(k):
             record_step(log, s0 + i, dt,
                         float(losses[i] if k > 1 else losses[0]),
                         straggler_factor)
         if obs.metrics_on:
             obs.metrics.histogram("driver/retire_wall_s").observe(dt_unit)
+        if rec is not None:
+            rec.note("driver/retire", step=s0, k=k, dt_unit_s=dt_unit,
+                     loss=float(losses[-1] if k > 1 else losses[0]))
+            if len(log.straggler_events) > n_stragglers:
+                rec._safe_dump("watchdog")
         if obs.trace_on and phase_attr is not None:
             # Lay the derived device phases into the measured interval
             # [prev retire, this retire] on their own trace track.
@@ -274,11 +290,21 @@ def run_pipelined(
             adapt.observe(s0, k, metrics)
 
     def drain():
-        if not window:
+        if window:
+            with obs.span("driver/drain", inflight=len(window)):
+                while window:
+                    retire_one()
+        health_check()
+
+    def health_check():
+        """Drain-barrier health evaluation: windowed rules over whatever
+        the registry holds, critical findings handed to the adaptive
+        controller as its urgency advisory. Pure host-side reads."""
+        if health is None:
             return
-        with obs.span("driver/drain", inflight=len(window)):
-            while window:
-                retire_one()
+        events = health.evaluate()
+        if events and adapt is not None and hasattr(adapt, "advise"):
+            adapt.advise(events)
 
     def check_swap():
         """Install a controller-accepted replan (DESIGN.md §7). Called
@@ -344,6 +370,10 @@ def run_pipelined(
                     with obs.span("driver/checkpoint", step=step):
                         ckpt_fn(state)
             except Exception as e:
+                if rec is not None:
+                    # blackbox BEFORE restore or re-raise: the ring still
+                    # holds the pre-failure steps a restart would erase
+                    rec._safe_dump(f"exception:{type(e).__name__}")
                 if restore_fn is None:
                     raise
                 window.clear()
@@ -354,6 +384,7 @@ def run_pipelined(
                 step = int(state.step)
                 prefetcher.start(step, num_steps)
                 last_retire_t = time.perf_counter()
+        health_check()  # end-of-run verdicts over the full registry
     finally:
         prefetcher.stop()
     return state, log

@@ -150,8 +150,11 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
 
     ``plan`` runs a replanned SyncPlan (adaptive runtime, DESIGN.md §7)
     instead of the derived base plan. ``telemetry=False`` drops the
-    per-bucket stats from the metrics dict, letting XLA dead-code the
-    counts away (the overhead A/B in benchmarks/bench_adapt.py)."""
+    per-bucket stats from the metrics dict AND from the traced graph:
+    the flag is threaded into the executor so the nnz/wire/mass counts
+    (and the mass psum) are never emitted, not merely DCE'd — asserted
+    at the jaxpr level in tests (the overhead A/B in
+    benchmarks/bench_adapt.py and bench_obs_health.py)."""
     cfg = model.cfg
     sched = make_schedule(tcfg.schedule)
     lowering = resolve_lowering(mesh, lowering)
@@ -225,14 +228,14 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                 # same order (the staleness=0 == synchronous invariant).
                 reduced, new_res, telem = comm.reduce_buckets_spmd(
                     plan, leaves_r, state.residuals, key,
-                    p_data=p_data, p_pod=p_pod)
+                    p_data=p_data, p_pod=p_pod, telemetry=telemetry)
                 chunks = reduced
                 new_inflight = None
             else:
                 chunks = state.inflight
                 new_inflight, new_res, telem = comm.reduce_buckets_spmd(
                     plan, leaves_r, state.residuals, key,
-                    p_data=p_data, p_pod=p_pod)
+                    p_data=p_data, p_pod=p_pod, telemetry=telemetry)
                 new_inflight[VALID_KEY] = jnp.ones((), jnp.float32)
             if scattered:
                 applied_leaves = comm.apply_buckets_spmd(
@@ -275,7 +278,7 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
         coll_kwargs = dict(
             data_axis=data_axis, p_data=p_data, pod_axis=pod_axis,
             p_pod=p_pod, native=native, data_rank=data_rank,
-            pod_rank=pod_rank)
+            pod_rank=pod_rank, telemetry=telemetry)
         if scattered:
             if staleness == 0:
                 reduced, new_res, telem = comm.reduce_buckets(

@@ -4,6 +4,7 @@ from repro.serve.engine import ServeEngine, build_serve_step  # noqa: F401
 from repro.serve.scheduler import (  # noqa: F401
     ContinuousScheduler,
     Request,
+    ServeConfig,
     poisson_trace,
     truncate_at_eos,
 )

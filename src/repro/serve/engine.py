@@ -162,6 +162,16 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(prompts)}
         if image_embeds is not None:
             batch["image_embeds"] = jnp.asarray(image_embeds)
+        rec = getattr(self.obs, "recorder", None)
+        try:
+            return self._generate(batch, max_new_tokens)
+        except Exception as e:
+            if rec is not None:
+                rec._safe_dump(f"exception:{type(e).__name__}")
+            raise
+
+    def _generate(self, batch: dict, max_new_tokens: int) -> np.ndarray:
+        prompts = batch["tokens"]
         with self.mesh:
             with self.obs.span("serve/prefill",
                                batch=int(np.asarray(prompts).shape[0]),

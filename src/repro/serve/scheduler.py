@@ -58,6 +58,34 @@ class Slot:
     max_new: int = 0
 
 
+@dataclass(frozen=True)
+class ServeConfig:
+    """Operator-declared serving objectives (DESIGN.md §10.5).
+
+    SLO targets are p99 bounds in the scheduler's deterministic
+    DECODE-STEP units (the same units :meth:`ContinuousScheduler.
+    latency_stats` reports), so attainment over a fixed Poisson trace is
+    exactly reproducible. ``None`` leaves a dimension untargeted. The
+    engine emits the declared targets as a ``serve/slo_targets`` event
+    at end of run and hands them to the health engine
+    (:class:`repro.obs.health.HealthMonitor`), which turns misses into
+    severity-ranked ``health/serve_slo`` events; ``repro.obs.report``
+    renders the attainment table from both."""
+
+    slo_ttft_p99: Optional[float] = None         # admission -> first token
+    slo_tpot_p99: Optional[float] = None         # steps per output token
+    slo_queue_delay_p99: Optional[float] = None  # arrival -> admission
+    slo_e2e_p99: Optional[float] = None          # arrival -> retirement
+
+    def slo_targets(self) -> dict:
+        """{latency key -> target}, omitting untargeted dimensions —
+        the mapping HealthMonitor(serve_slo=...) consumes."""
+        pairs = {"ttft": self.slo_ttft_p99, "tpot": self.slo_tpot_p99,
+                 "queue_delay": self.slo_queue_delay_p99,
+                 "e2e": self.slo_e2e_p99}
+        return {k: float(v) for k, v in pairs.items() if v is not None}
+
+
 def poisson_trace(n: int, rate: float, seed: int = 0,
                   start: float = 0.0) -> np.ndarray:
     """n Poisson arrival times (decode-step units) at ``rate`` requests

@@ -146,6 +146,9 @@ class ServeResult:
     # per-retired-request latency percentiles in DECODE-STEP units
     # (deterministic on a fixed trace) — {metric: {p50, p90, p99, mean}}
     latency: dict = field(default_factory=dict)
+    # HealthEvent verdicts from the end-of-run SLO evaluation (empty
+    # without a ServeConfig carrying targets, or with metrics off)
+    health: list = field(default_factory=list)
 
     @property
     def tok_per_s(self) -> float:
@@ -175,9 +178,13 @@ class ContinuousServeEngine:
                  dispatch: str = "adaptive", eos_id: Optional[int] = None,
                  adapt: Optional[AdaptConfig] = None,
                  net: NetworkParams = DEFAULT_NET,
-                 min_cap: int = 4, headroom: float = 2.0, obs=None):
+                 min_cap: int = 4, headroom: float = 2.0, obs=None,
+                 serve_cfg=None):
         assert dispatch in ("dense", "adaptive"), dispatch
         cfg = model.cfg
+        # ServeConfig (serve/scheduler.py) or None: declared SLO targets
+        # evaluated by the health engine at end of each run.
+        self.serve_cfg = serve_cfg
         if cfg.family == "vlm" or not cfg.is_decoder:
             raise NotImplementedError(
                 f"continuous batching: family {cfg.family!r}")
@@ -298,6 +305,49 @@ class ContinuousServeEngine:
         res = ServeResult(outputs=sched.completed, swap_log=self.swap_log)
         t0 = time.perf_counter()
         obs = self.obs
+        rec = getattr(obs, "recorder", None)
+        try:
+            self._run_loop(sched, state, next_tok, res, max_steps)
+        except Exception as e:
+            # flight-recorder trigger (DESIGN.md §10.6): leave a
+            # parseable blackbox behind before surfacing the failure
+            if rec is not None:
+                rec._safe_dump(f"exception:{type(e).__name__}")
+            raise
+        res.wall_s = time.perf_counter() - t0
+        stats = sched.latency_stats()
+        res.latency = {
+            name: {"p50": float(np.percentile(v, 50)),
+                   "p90": float(np.percentile(v, 90)),
+                   "p99": float(np.percentile(v, 99)),
+                   "mean": float(np.mean(v))}
+            for name, v in stats.items()
+            if name in ("queue_delay", "ttft", "tpot", "e2e") and v.size
+        }
+        if obs.metrics_on:
+            m = obs.metrics
+            for name in ("queue_delay", "ttft", "tpot", "e2e"):
+                if stats[name].size:
+                    m.histogram(f"serve/{name}_steps").observe_many(
+                        stats[name])
+            m.gauge("serve/tok_per_s").set(res.tok_per_s)
+            m.gauge("serve/decode_steps").set(res.decode_steps)
+            targets = (self.serve_cfg.slo_targets()
+                       if self.serve_cfg is not None else {})
+            if targets:
+                # declared objectives ride the JSONL so the report CLI
+                # can join them against the measured percentiles, and
+                # the health engine ranks the misses
+                from repro.obs.health import HealthMonitor
+
+                m.event("serve/slo_targets", **targets)
+                res.health = HealthMonitor(
+                    m, serve_slo=targets, audit=obs.audit).evaluate()
+        return res
+
+    def _run_loop(self, sched, state, next_tok, res, max_steps: int):
+        obs = self.obs
+        rec = getattr(obs, "recorder", None)
         with self.mesh:
             while not sched.done and res.decode_steps < max_steps:
                 for slot_idx, req in sched.admit_ready():
@@ -333,6 +383,9 @@ class ContinuousServeEngine:
                     "wire_bytes": wire,
                     "signature": (self._plan.signature()
                                   if self._plan is not None else "-")})
+                if rec is not None:
+                    rec.note("serve/step", step=sched.clock,
+                             active=n_active, wire_bytes=wire)
                 if obs.metrics_on:
                     m = obs.metrics
                     m.histogram("serve/occupancy").observe(n_active)
@@ -353,22 +406,3 @@ class ContinuousServeEngine:
                         self._install(sw[0], sw[1], sched.clock, "telemetry")
                 sched.advance()
                 res.decode_steps += 1
-        res.wall_s = time.perf_counter() - t0
-        stats = sched.latency_stats()
-        res.latency = {
-            name: {"p50": float(np.percentile(v, 50)),
-                   "p90": float(np.percentile(v, 90)),
-                   "p99": float(np.percentile(v, 99)),
-                   "mean": float(np.mean(v))}
-            for name, v in stats.items()
-            if name in ("queue_delay", "ttft", "tpot", "e2e") and v.size
-        }
-        if obs.metrics_on:
-            m = obs.metrics
-            for name in ("queue_delay", "ttft", "tpot", "e2e"):
-                if stats[name].size:
-                    m.histogram(f"serve/{name}_steps").observe_many(
-                        stats[name])
-            m.gauge("serve/tok_per_s").set(res.tok_per_s)
-            m.gauge("serve/decode_steps").set(res.decode_steps)
-        return res

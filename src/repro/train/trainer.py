@@ -63,6 +63,9 @@ class Trainer:
         # (adaptive runs: the plan active at exit) — what the examples
         # hand to obs.audit_sync_plan after the run
         self.last_plan = None
+        # the HealthMonitor of the most recent metrics-on run_pipelined
+        # (None otherwise) — its .history holds the ranked verdicts
+        self.last_health = None
 
     # -- lifecycle ---------------------------------------------------------
     def init_or_resume(self):
@@ -287,6 +290,18 @@ class Trainer:
                                for ph in per)
                 return out
 
+        health = None
+        if self.obs.metrics_on:
+            # compression-health rules over the run's registry: EF-norm
+            # growth / mass-coverage floor on the executor's mass
+            # telemetry, step-time p99 regression on the driver series;
+            # evaluated at drain barriers + end of run (DESIGN.md §10.5)
+            from repro.obs.health import HealthMonitor
+
+            health = HealthMonitor(self.obs.metrics,
+                                   audit=getattr(self.obs, "audit", None))
+            self.last_health = health
+
         with self.mesh:
             state, _ = rt_driver.run_pipelined(
                 fn, state,
@@ -301,6 +316,7 @@ class Trainer:
                 restore_fn=restore_fn if self.ckpt_dir else None,
                 adapt=runtime,
                 obs=self.obs, phase_attr=phase_attr,
+                health=health,
             )
         self.state = state
         self.last_plan = getattr(runtime, "current_plan", None) or plan

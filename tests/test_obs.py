@@ -176,6 +176,83 @@ def test_histogram_percentiles():
     assert reg.histogram("h").percentile(90) == pytest.approx(90.1)
 
 
+def test_histogram_percentiles_empty_and_single_sample():
+    reg = MetricsRegistry()
+    h = reg.histogram("empty")
+    # empty: NaN percentile (never a crash), count-0 snapshot, renderable
+    assert np.isnan(h.percentile(99))
+    assert h.snapshot() == {"count": 0}
+    assert h.brief() == "empty"
+    # single sample: every percentile IS that sample
+    one = reg.histogram("one")
+    one.observe(7.5)
+    s = one.snapshot()
+    assert s["count"] == 1
+    for q in ("p50", "p90", "p99", "min", "max", "mean"):
+        assert s[q] == 7.5
+    assert one.percentile(0) == one.percentile(100) == 7.5
+
+
+def test_series_view_survives_registry_disabled_mid_run():
+    """DriverLog holds Series ``.data`` views for the run's lifetime; a
+    registry toggled off mid-run must keep those views alive (same list,
+    appends land) while the event log goes quiet."""
+    reg = MetricsRegistry()
+    view = reg.series("train/loss").data
+    view.append(1.0)
+    reg.event("before", x=1)
+    reg.enabled = False
+    # same backing object, not a fresh one
+    assert reg.series("train/loss") is reg.series("train/loss")
+    assert reg.series("train/loss").data is view
+    view.append(2.0)
+    reg.series("train/loss").append(3.0)
+    assert view == [1.0, 2.0, 3.0]
+    reg.event("after", x=2)   # dropped: registry is off
+    assert [e["event"] for e in reg.events] == ["before"]
+    # re-enable: the history was never lost
+    reg.enabled = True
+    reg.event("resumed")
+    assert len(reg.events) == 2 and reg.series("train/loss").data is view
+
+
+def test_validate_span_tree_out_of_order_events():
+    """Spans record on EXIT, so the event list is naturally child-first
+    and may interleave arbitrarily across tracks — the validator must
+    sort per track, not trust input order."""
+    nested = [
+        {"name": "root", "ph": "X", "ts": 0.0, "dur": 100.0,
+         "pid": 1, "tid": 1},
+        {"name": "mid", "ph": "X", "ts": 10.0, "dur": 50.0,
+         "pid": 1, "tid": 1},
+        {"name": "leaf", "ph": "X", "ts": 20.0, "dur": 10.0,
+         "pid": 1, "tid": 1},
+        {"name": "tail", "ph": "X", "ts": 70.0, "dur": 20.0,
+         "pid": 1, "tid": 1},
+    ]
+    # every permutation of a well-formed tree validates clean
+    import itertools
+
+    for perm in itertools.permutations(nested):
+        assert validate_span_tree(list(perm)) == []
+    # an overlap is caught regardless of where it sits in the list
+    bad_ev = {"name": "ovl", "ph": "X", "ts": 45.0, "dur": 20.0,
+              "pid": 1, "tid": 1}
+    for pos in range(len(nested) + 1):
+        evs = nested[:pos] + [bad_ev] + nested[pos:]
+        bad = validate_span_tree(evs)
+        assert len(bad) == 1 and "ovl" in bad[0]
+    # same-ts siblings: longer span is the parent (tiebreak), zero-dur
+    # markers nest anywhere, non-X events are ignored
+    twins = [
+        {"name": "p", "ph": "X", "ts": 0.0, "dur": 100.0, "pid": 1, "tid": 1},
+        {"name": "c", "ph": "X", "ts": 0.0, "dur": 40.0, "pid": 1, "tid": 1},
+        {"name": "dot", "ph": "X", "ts": 99.9, "dur": 0.0, "pid": 1, "tid": 1},
+        {"name": "i", "ph": "i", "ts": 1e9, "pid": 1, "tid": 1},
+    ]
+    assert validate_span_tree(twins) == []
+
+
 # --------------------------------------------------------------------------
 # Drift auditor units
 # --------------------------------------------------------------------------
@@ -493,14 +570,45 @@ def test_regress_loads_both_schemas_and_compares(tmp_path):
 
     cells = regress.headline_cells(str(fresh), str(base))
     by = {c["label"]: c for c in cells}
-    # adapt: 10% slower (lower-better) — inside the 25% band
-    # serve: 40% fewer tok/s (higher-better) — regressed
-    bad = regress.compare(cells, tol=0.25)
+    # per-cell bands attached from the built-in table
+    assert by["adapt_drift_adaptive.us_per_call"]["tol"] == 0.25
+    assert by["serve_continuous.tok_per_s"]["tol"] == 0.35
+    # adapt: 10% slower (lower-better) — inside its 25% band
+    # serve: 40% fewer tok/s (higher-better) — beyond its 35% band,
+    # even under a flat fallback wide enough to let it pass
+    bad = regress.compare(cells, tol=0.5)
     assert by["adapt_drift_adaptive.us_per_call"] not in bad
     assert by["serve_continuous.tok_per_s"] in bad
     assert by["serve_continuous.tok_per_s"]["regression"] == pytest.approx(0.4)
-    # widen the band: nothing regresses
+    # cells without their own band fall back to the flat tol
+    for c in cells:
+        c.pop("tol", None)
     assert regress.compare(cells, tol=0.5) == []
+    assert by["serve_continuous.tok_per_s"] in regress.compare(cells,
+                                                               tol=0.25)
+
+
+def test_regress_per_cell_tolerance_from_baseline_meta(tmp_path):
+    """A band committed in the baseline file's meta.tolerances overrides
+    the built-in table, and --update-style merges preserve it."""
+    regress = _regress()
+    fresh, base = tmp_path / "fresh", tmp_path / "base"
+    fresh.mkdir(), base.mkdir()
+    (base / "BENCH_bench_serve.json").write_text(json.dumps(
+        {"schema_version": 2,
+         "meta": {"tolerances": {"serve_continuous.tok_per_s": 0.6}},
+         "rows": [{"name": "serve_continuous", "us_per_call": 1.0,
+                   "derived": "tok_per_s=100.0"}]}))
+    (fresh / "BENCH_bench_serve.json").write_text(json.dumps(
+        [{"name": "serve_continuous", "us_per_call": 1.0,
+          "derived": "tok_per_s=60.0"}]))
+    cells = regress.headline_cells(str(fresh), str(base))
+    assert cells[0]["tol"] == 0.6
+    # 40% regression sits inside the committed 60% band
+    assert regress.compare(cells, tol=0.25) == []
+    # wire_bytes cells default to the tight analytic band
+    assert regress.cell_tol("portfolio_x_d01.wire_bytes", {}) == \
+        regress.WIRE_BYTES_TOL
 
 
 def test_regress_parse_derived_and_improvements():

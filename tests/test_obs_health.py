@@ -1,0 +1,571 @@
+"""Compression-health observability (DESIGN.md §10.5-§10.7): in-graph
+mass telemetry, the windowed health rule engine, the flight recorder,
+and the report CLI.
+
+The acceptance criteria pinned here:
+
+* mass telemetry — per-bucket coverage + EF norm agree with an eager
+  reference on all THREE lowerings (manual-native, emulated, auto-SPMD)
+  and compile out entirely under ``telemetry=False`` (jaxpr-asserted,
+  not just DCE'd);
+* health engine — a synthetic EF-blowup registry and a synthetic serve
+  SLO-violation trace each produce the expected severity-ranked events
+  DETERMINISTICALLY;
+* flight recorder — a killed driver run leaves a parseable
+  ``blackbox.json`` holding the last steps; signal and watchdog
+  triggers dump too;
+* report CLI — renders the artifacts of a run without jax.
+"""
+import json
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import obs as obs_mod
+from repro.compat import make_mesh, shard_map
+from repro import comm
+from repro.core.compressor import SyncConfig
+from repro.obs import FlightRecorder, MetricsRegistry
+from repro.obs.health import (
+    HealthConfig,
+    HealthEvent,
+    HealthMonitor,
+    rank_events,
+)
+
+KEY = jax.random.PRNGKey(0)
+P_DATA = 8
+
+
+def _plan(algorithm="dsar_split_allgather", n=3000):
+    cfg = SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=128,
+                     algorithm=algorithm, min_sparse_size=1024, impl="ref",
+                     fusion_bucket_bytes=1 << 14)
+    shapes = {"a": jax.ShapeDtypeStruct((n,), jnp.float32),
+              "b": jax.ShapeDtypeStruct((77,), jnp.float32)}
+    return comm.build_sync_plan(shapes, {"a": P(), "b": P()}, cfg, P_DATA)
+
+
+def _grads(n=3000, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal((P_DATA, n)).astype(np.float32))
+
+
+def _leaves_r(g):
+    """(R, 3000) grads -> per-leaf (R, *leaf) stacks (leaf b rides as a
+    deterministic non-zero tail so every bucket carries signal)."""
+    tail = jnp.tile(jnp.arange(77, dtype=jnp.float32)[None] * 0.1,
+                    (P_DATA, 1))
+    return [g, tail]
+
+
+def _ef_names(plan):
+    return [b.name for grp in plan.groups for b in grp.buckets
+            if b.has_residual]
+
+
+def _acc_ref(plan, leaves_r, residuals):
+    """The global accumulator each EF bucket compressed, rebuilt with
+    the executor's own packing: {name: (R, rows, cols) res + seg}."""
+    from repro.comm.buckets import pack_group
+
+    accs = {}
+    for grp in plan.groups:
+        bufs = np.stack([
+            np.asarray(pack_group(grp, [np.asarray(lv)[r] for lv in leaves_r],
+                                  plan.cfg.bucket_size))
+            for r in range(P_DATA)])                    # (R, rows, cols)
+        for b in grp.buckets:
+            if b.has_residual:
+                seg = bufs[:, :, b.col_start:b.col_start + b.cols]
+                accs[b.name] = (np.asarray(residuals[b.name], np.float64)
+                                .reshape(seg.shape) + seg)
+    return accs
+
+
+# --------------------------------------------------------------------------
+# mass telemetry: eager reference on all three lowerings
+# --------------------------------------------------------------------------
+
+def _check_mass(telem, new_res, *, acc=None):
+    """Shared reference: reported ef_norm must equal the norm of the
+    RETURNED residuals (valid for every algorithm — clamp folds are
+    added before the telemetry read), and, when ``acc`` (the global
+    (R, rows, cols) pre-compression accumulator per bucket) is given,
+    coverage must equal ‖acc - r'‖²/‖acc‖² (fold-free algorithms only).
+    """
+    for name, t in telem.items():
+        t = np.asarray(t)
+        assert t.shape == (4,)
+        nnz, wire, coverage, ef_norm = t
+        r = np.asarray(new_res[name], dtype=np.float64)
+        assert ef_norm == pytest.approx(np.sqrt((r ** 2).sum()), rel=1e-5)
+        assert 0.0 <= coverage <= 1.0 + 1e-6
+        assert nnz >= 0 and wire > 0
+        if acc is not None:
+            a = np.asarray(acc[name], dtype=np.float64)
+            u = a - r.reshape(a.shape)
+            ref = (u ** 2).sum() / max((a ** 2).sum(), 1e-30)
+            assert coverage == pytest.approx(ref, rel=1e-5)
+
+
+def test_mass_telemetry_spmd_matches_eager_reference():
+    plan = _plan()
+    g = _grads()
+    res = plan.init_residuals()
+    # two steps so the second's accumulator carries real residual mass
+    for step in range(2):
+        leaves = _leaves_r(g)
+        accs = _acc_ref(plan, leaves, res)
+        reduced, res, telem = comm.reduce_buckets_spmd(
+            plan, leaves, res, jax.random.fold_in(KEY, step), p_data=P_DATA)
+        assert set(telem) == set(_ef_names(plan)) == set(accs)
+        _check_mass(telem, res, acc=accs)
+        g = g * 0.5
+
+
+def _run_manual(plan, g, native, key=KEY):
+    """shard_map harness over the manual executor; returns the gathered
+    (R, rows, cols) residuals and the replicated telemetry vectors."""
+    mesh = make_mesh((P_DATA,), ("data",))
+    res = plan.init_residuals()
+    rspecs = {k: P("data", None, None) for k in res}
+    tspecs = {k: P() for k in _ef_names(plan)}
+    rid = jnp.arange(P_DATA, dtype=jnp.int32)
+    leaves = _leaves_r(g)
+
+    def inner(ga, gb, r, rid):
+        _, new_res, telem = comm.reduce_buckets(
+            plan, [ga[0], gb[0]], r, key, data_axis="data",
+            p_data=P_DATA, native=native, data_rank=rid[0])
+        return new_res, telem
+
+    f = shard_map(inner, mesh=mesh,
+                  in_specs=(P("data", None), P("data", None), rspecs,
+                            P("data")),
+                  out_specs=(rspecs, tspecs), check_vma=False)
+    new_res, telem = f(leaves[0], leaves[1], res, rid)
+    accs = _acc_ref(plan, leaves, res)
+    return ({k: np.asarray(v) for k, v in new_res.items()},
+            {k: np.asarray(v) for k, v in telem.items()}, accs)
+
+
+@pytest.mark.parametrize("native", [True, False],
+                         ids=["manual", "emulated"])
+@pytest.mark.parametrize("algorithm", ["dsar_split_allgather",
+                                       "ssar_balanced_split"])
+def test_mass_telemetry_manual_lowerings(native, algorithm):
+    plan = _plan(algorithm=algorithm)
+    new_res, telem, accs = _run_manual(plan, _grads(seed=3), native)
+    assert set(telem) == set(_ef_names(plan))
+    # ef_norm reference holds for all algorithms (fold precedes the
+    # telemetry read); the coverage identity only for fold-free DSAR
+    _check_mass(telem, new_res,
+                acc=accs if algorithm == "dsar_split_allgather" else None)
+
+
+def test_mass_telemetry_manual_emulated_agree():
+    """The (4,) vectors themselves must agree across the two manual
+    lowerings of the SAME plan (the executor-parity invariant extends to
+    telemetry: emulated reroutes SSAR->DSAR but reduces the same sum)."""
+    plan = _plan()
+    g = _grads(seed=11)
+    res_n, tel_n, _ = _run_manual(plan, g, True)
+    res_e, tel_e, _ = _run_manual(plan, g, False)
+    for name in tel_n:
+        np.testing.assert_allclose(tel_n[name], tel_e[name], rtol=1e-5)
+    for name in res_n:
+        np.testing.assert_allclose(res_n[name], res_e[name], rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# compile-out: telemetry=False leaves NO trace in the jaxpr
+# --------------------------------------------------------------------------
+
+def test_telemetry_compiles_out_spmd_jaxpr():
+    plan = _plan()
+    res = plan.init_residuals()
+
+    def fn(telemetry):
+        def step(leaves, res, key):
+            return comm.reduce_buckets_spmd(plan, leaves, res, key,
+                                            p_data=P_DATA,
+                                            telemetry=telemetry)
+        return step
+
+    leaves = _leaves_r(_grads())
+    jx_on = jax.make_jaxpr(fn(True))(leaves, res, KEY)
+    jx_off = jax.make_jaxpr(fn(False))(leaves, res, KEY)
+    _, _, telem_off = fn(False)(leaves, res, KEY)
+    assert telem_off == {}
+    # absent from the jaxpr, not merely unused: strictly fewer equations
+    assert len(jx_off.jaxpr.eqns) < len(jx_on.jaxpr.eqns)
+    # sqrt only appears in the ef_norm read
+    assert "sqrt" in str(jx_on) and "sqrt" not in str(jx_off)
+
+
+def test_telemetry_compiles_out_manual_psum_count():
+    """Manual lowering: telemetry ON adds exactly ONE psum per EF bucket
+    (the (3,) mass vector); OFF traces the identical collective set as
+    the telemetry-free executor always did."""
+    plan = _plan()
+    res = plan.init_residuals()
+    mesh = make_mesh((P_DATA,), ("data",))
+    rspecs = {k: P("data", None, None) for k in res}
+    rid = jnp.arange(P_DATA, dtype=jnp.int32)
+
+    def traced(telemetry):
+        def inner(gr, r, rid):
+            reduced, new_res, _ = comm.reduce_buckets(
+                plan, [gr[0], jnp.zeros((77,), jnp.float32)], r, KEY,
+                data_axis="data", p_data=P_DATA, native=False,
+                data_rank=rid[0], telemetry=telemetry)
+            return reduced, new_res
+
+        f = shard_map(inner, mesh=mesh,
+                      in_specs=(P("data", None), rspecs, P("data")),
+                      out_specs=({b.name: P() for b in plan.buckets},
+                                 rspecs), check_vma=False)
+        return str(jax.make_jaxpr(f)(_grads(), res, rid))
+
+    on, off = traced(True), traced(False)
+    n_ef = len(_ef_names(plan))
+    assert n_ef >= 1
+    assert on.count("psum") == off.count("psum") + n_ef
+    assert "sqrt" in on and "sqrt" not in off
+
+
+# --------------------------------------------------------------------------
+# health engine: deterministic ranked verdicts on synthetic traces
+# --------------------------------------------------------------------------
+
+def _ef_blowup_registry():
+    """Synthetic EF blowup: bucket g0b0's residual norm grows
+    geometrically while its coverage decays under the floor; g0b1 stays
+    healthy; step times spike in the recent window."""
+    reg = MetricsRegistry()
+    for i in range(32):
+        reg.histogram("bucket/g0b0/ef_norm").observe(
+            1.0 * (1.3 ** i))                       # geometric growth
+        reg.histogram("bucket/g0b0/mass_coverage").observe(
+            max(0.05, 0.9 - 0.05 * i))              # decays to 0.05
+        reg.histogram("bucket/g0b1/ef_norm").observe(
+            1.0 + 0.01 * (i % 3))                   # hovers
+        reg.histogram("bucket/g0b1/mass_coverage").observe(0.95)
+        reg.series("train/step_time_s").append(
+            0.01 if i < 24 else 0.11)               # 11x spike at the end
+    return reg
+
+
+def test_health_ef_blowup_ranked_deterministically():
+    cfg = HealthConfig(window=8, min_samples=4)
+    ev1 = HealthMonitor(_ef_blowup_registry(), cfg).evaluate()
+    ev2 = HealthMonitor(_ef_blowup_registry(), cfg).evaluate()
+    assert ev1 == ev2                                # deterministic
+    key = [(e.severity, e.rule, e.subject) for e in ev1]
+    # 1.3^8 ~ 8.2x growth >= 2*critical_factor -> critical; coverage
+    # median 0.05 < 0.5/2 -> critical; step p99 11x -> critical.
+    assert key == [
+        ("critical", "coverage_floor", "g0b0"),
+        ("critical", "ef_growth", "g0b0"),
+        ("critical", "step_time_p99", "train/step_time_s"),
+    ]
+    for e in ev1:
+        assert e.value > e.threshold or e.rule == "coverage_floor"
+    # healthy bucket stayed silent
+    assert not any(e.subject == "g0b1" for e in ev1)
+
+
+def test_health_events_mirrored_and_advisory():
+    reg = _ef_blowup_registry()
+    mon = HealthMonitor(reg, HealthConfig(window=8, min_samples=4))
+    events = mon.evaluate()
+    mirrored = [e for e in reg.events
+                if str(e["event"]).startswith("health/")]
+    assert len(mirrored) == len(events)
+    assert {e["severity"] for e in mirrored} == {"critical"}
+    adv = mon.advisory()
+    assert adv["critical_buckets"] == ["g0b0"]
+    assert adv["worst"] == "critical" and adv["n_events"] == len(events)
+    # empty registries stay silent, advisory empty
+    quiet = HealthMonitor(MetricsRegistry())
+    assert quiet.evaluate() == []
+    assert quiet.advisory() == {"critical_buckets": [], "worst": None,
+                                "n_events": 0}
+    assert "no findings" in quiet.summary()
+    assert "g0b0" in mon.summary()
+
+
+def test_health_underfilled_windows_stay_silent():
+    reg = MetricsRegistry()
+    for _ in range(7):   # < 2*min_samples
+        reg.histogram("bucket/b0/ef_norm").observe(100.0)
+        reg.histogram("bucket/b0/mass_coverage").observe(0.01)
+    mon = HealthMonitor(reg, HealthConfig(window=8, min_samples=4))
+    rules = {e.rule for e in mon.evaluate()}
+    assert "ef_growth" not in rules   # needs both windows filled
+    # coverage only needs min_samples -> it MAY fire; ef growth cannot
+
+
+def test_health_serve_slo_and_drift_rules():
+    from repro.obs import DriftAuditor
+
+    reg = MetricsRegistry()
+    # ttft p99 ~ 30 vs target 10 (beyond 2x -> critical); tpot ~ 1.5 vs
+    # 1.2 (warn); e2e within target (silent)
+    reg.histogram("serve/ttft_steps").observe_many([30.0] * 20)
+    reg.histogram("serve/tpot_steps").observe_many([1.5] * 20)
+    reg.histogram("serve/e2e_steps").observe_many([40.0] * 20)
+    aud = DriftAuditor(flag_ratio=3.0)
+    for i in range(3):
+        aud.record("warn_alg", f"b{i}", 1e-3, 4e-3)    # 4x: warn
+        aud.record("crit_alg", f"b{i}", 1e-3, 1e-2)    # 10x > 9: critical
+    mon = HealthMonitor(reg, serve_slo={"ttft": 10.0, "tpot": 1.2,
+                                        "e2e": 100.0}, audit=aud)
+    ev1 = mon.evaluate()
+    key = [(e.severity, e.rule, e.subject) for e in ev1]
+    assert key == [
+        ("critical", "drift_flag", "crit_alg"),
+        ("critical", "serve_slo", "ttft"),
+        ("warn", "drift_flag", "warn_alg"),
+        ("warn", "serve_slo", "tpot"),
+    ]
+    # identical inputs -> identical list (ranking is total)
+    mon2 = HealthMonitor(reg, serve_slo={"ttft": 10.0, "tpot": 1.2,
+                                         "e2e": 100.0}, audit=aud)
+    assert mon2.evaluate() == ev1
+
+
+def test_rank_events_total_order():
+    evs = [HealthEvent("info", "b_rule", "x", "", 1.0, 1.0),
+           HealthEvent("critical", "z_rule", "b", "", 1.0, 1.0),
+           HealthEvent("critical", "a_rule", "z", "", 1.0, 1.0),
+           HealthEvent("warn", "a_rule", "a", "", 1.0, 1.0),
+           HealthEvent("critical", "a_rule", "a", "", 1.0, 1.0)]
+    ranked = rank_events(evs)
+    assert [(e.severity, e.rule, e.subject) for e in ranked] == [
+        ("critical", "a_rule", "a"), ("critical", "a_rule", "z"),
+        ("critical", "z_rule", "b"), ("warn", "a_rule", "a"),
+        ("info", "b_rule", "x")]
+
+
+# --------------------------------------------------------------------------
+# flight recorder
+# --------------------------------------------------------------------------
+
+def test_recorder_ring_bounded_and_atomic_dump(tmp_path):
+    obs = obs_mod.configure(trace=True, metrics=True, set_as_default=False)
+    rec = FlightRecorder(str(tmp_path / "blackbox.json"), capacity=16,
+                         obs=obs)
+    obs.metrics.series("train/loss").append(1.0)
+    with obs.span("unit"):
+        obs.metrics.event("step/ev", step=1)
+    for i in range(100):
+        rec.note("driver/retire", step=i, loss=float(i))
+    assert len(rec.notes) == 16                        # bounded
+    assert rec.notes[0]["step"] == 84
+    path = rec.dump("test")
+    doc = json.load(open(path))
+    assert doc["kind"] == "blackbox" and doc["reason"] == "test"
+    assert [n["step"] for n in doc["notes"]] == list(range(84, 100))
+    assert doc["series_tail"]["train/loss"] == [1.0]
+    assert any(e["event"] == "step/ev" for e in doc["event_tail"])
+    assert any(e.get("name") == "unit" for e in doc["trace_tail"])
+    # repeated dumps refresh the same file, no temp litter
+    rec.dump("again")
+    assert rec.dumps == 2 and rec.last_reason == "again"
+    assert [p for p in os.listdir(tmp_path) if p.startswith(".")] == []
+
+
+def test_recorder_signal_trigger_chains(tmp_path):
+    rec = FlightRecorder(str(tmp_path / "bb.json"), obs=obs_mod.Observability())
+    seen = []
+    prev = signal.signal(signal.SIGUSR1, lambda n, f: seen.append(n))
+    try:
+        installed = rec.install_signal_handlers(("SIGUSR1", "SIGNOPE"))
+        assert installed == ["SIGUSR1"]
+        rec.note("before", step=1)
+        os.kill(os.getpid(), signal.SIGUSR1)
+        doc = json.load(open(tmp_path / "bb.json"))
+        assert doc["reason"] == "signal:SIGUSR1"
+        assert doc["notes"][0]["step"] == 1
+        assert seen == [signal.SIGUSR1]               # chained through
+    finally:
+        rec.uninstall_signal_handlers()
+        signal.signal(signal.SIGUSR1, prev)
+
+
+def test_killed_driver_leaves_parseable_blackbox(tmp_path):
+    """A step_fn that dies mid-run with NO restore_fn must still leave a
+    blackbox.json holding the steps retired before the failure."""
+    from repro.runtime import driver as rt_driver
+
+    obs = obs_mod.configure(trace=False, metrics=True, set_as_default=False,
+                            recorder=str(tmp_path / "blackbox.json"))
+    boom_at = 6
+
+    def step_fn(state, batch, key):
+        step = int(state["step"])
+        if step >= boom_at:
+            raise RuntimeError("injected device fault")
+        return ({"step": jnp.asarray(step + 1)},
+                {"loss": jnp.asarray(1.0 / (step + 1))})
+
+    with pytest.raises(RuntimeError, match="injected device fault"):
+        rt_driver.run_pipelined(
+            step_fn, {"step": jnp.asarray(0)}, start_step=0, num_steps=16,
+            batch_fn=lambda s: {"x": np.zeros(1)},
+            key_fn=lambda s: jax.random.fold_in(KEY, s),
+            cfg=rt_driver.DriverConfig(depth=2, prefetch=1), obs=obs)
+    doc = json.load(open(tmp_path / "blackbox.json"))
+    assert doc["reason"] == "exception:RuntimeError"
+    retires = [n for n in doc["notes"] if n["kind"] == "driver/retire"]
+    assert retires and retires[-1]["step"] >= boom_at - 2
+    assert [n["step"] for n in retires] == sorted(n["step"] for n in retires)
+    assert doc["series_tail"]["train/loss"]          # losses made it out
+
+
+def test_driver_watchdog_dumps_blackbox(tmp_path, monkeypatch):
+    from repro.runtime import driver as rt_driver
+
+    obs = obs_mod.configure(metrics=True, set_as_default=False,
+                            recorder=str(tmp_path / "bb.json"))
+    slow = {}
+
+    def step_fn(state, batch, key):
+        step = int(state["step"])
+        if step == 10:
+            slow["hit"] = True
+        return ({"step": jnp.asarray(step + 1)}, {"loss": jnp.asarray(1.0)})
+
+    real = jax.block_until_ready
+
+    def maybe_slow(x):
+        import time as _t
+        if slow.pop("hit", False):
+            _t.sleep(0.3)
+        return real(x)
+
+    monkeypatch.setattr(jax, "block_until_ready", maybe_slow)
+    rt_driver.run_pipelined(
+        step_fn, {"step": jnp.asarray(0)}, start_step=0, num_steps=16,
+        batch_fn=lambda s: {"x": np.zeros(1)},
+        key_fn=lambda s: jax.random.fold_in(KEY, s),
+        cfg=rt_driver.DriverConfig(depth=1, prefetch=1),
+        straggler_factor=3.0, obs=obs)
+    assert obs.recorder.dumps >= 1
+    assert obs.recorder.last_reason == "watchdog"
+    assert json.load(open(tmp_path / "bb.json"))["reason"] == "watchdog"
+
+
+def test_jsonl_sink_flushes_on_exception(tmp_path):
+    reg = MetricsRegistry()
+    path = tmp_path / "m.jsonl"
+    with pytest.raises(ValueError):
+        with reg.jsonl_sink(str(path), meta={"run": "t"}):
+            reg.counter("steps").inc(3)
+            raise ValueError("die mid-run")
+    lines = [json.loads(ln) for ln in open(path)]
+    assert lines[0]["kind"] == "header" and lines[0]["meta"]["run"] == "t"
+    assert any(ln.get("name") == "steps" and ln["value"] == 3
+               for ln in lines)
+    # close is idempotent; atexit was deregistered
+    sink = reg.jsonl_sink(str(path))
+    assert sink.close() == sink.close() == str(path)
+
+
+# --------------------------------------------------------------------------
+# serve SLO integration + report CLI
+# --------------------------------------------------------------------------
+
+def _serve_run(tmp_path, obs):
+    from repro.models.model import build_model
+    from repro.models.config import ModelConfig
+    from repro.serve import ContinuousServeEngine, Request, ServeConfig
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                      dtype=jnp.float32, param_dtype=jnp.float32,
+                      max_seq_len=64)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    mesh = make_mesh((4, 2), ("data", "model"))
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 256, 4),
+                    max_new_tokens=6, arrival=float(i)) for i in range(4)]
+    # impossible ttft target (sub-step) -> guaranteed critical miss;
+    # loose e2e target -> silent
+    scfg = ServeConfig(slo_ttft_p99=0.01, slo_e2e_p99=1e6)
+    eng = ContinuousServeEngine(model, mesh, params, cache_len=32,
+                                batch_size=2, obs=obs, serve_cfg=scfg)
+    return eng.run(reqs)
+
+
+def test_serve_slo_violation_events_deterministic(tmp_path):
+    obs = obs_mod.configure(metrics=True, set_as_default=False)
+    res = _serve_run(tmp_path, obs)
+    assert res.health, "sub-step ttft SLO must be missed"
+    worst = res.health[0]
+    assert (worst.severity, worst.rule, worst.subject) == \
+        ("critical", "serve_slo", "ttft")
+    assert not any(e.subject == "e2e" for e in res.health)
+    targets = obs.metrics.events_named("serve/slo_targets")
+    assert len(targets) == 1 and targets[0]["ttft"] == 0.01
+    # a second identical run produces the identical verdict list
+    obs2 = obs_mod.configure(metrics=True, set_as_default=False)
+    res2 = _serve_run(tmp_path, obs2)
+    assert [(e.severity, e.rule, e.subject) for e in res2.health] == \
+        [(e.severity, e.rule, e.subject) for e in res.health]
+
+
+def test_report_cli_renders_run_artifacts(tmp_path, capsys):
+    from repro.obs import report
+
+    obs = obs_mod.configure(trace=True, metrics=True, set_as_default=False,
+                            recorder=str(tmp_path / "bb.json"))
+    res = _serve_run(tmp_path, obs)
+    assert res.tokens > 0
+    # bucket telemetry rows so the spectra table has content
+    obs.metrics.histogram("bucket/g0b0/nnz").observe_many([8, 9, 10])
+    obs.metrics.histogram("bucket/g0b0/mass_coverage").observe_many(
+        [0.8, 0.9])
+    obs.metrics.histogram("bucket/g0b0/ef_norm").observe_many([1.0, 1.1])
+    obs.recorder.note("serve/step", step=1)
+    obs.recorder.dump("test")
+    out = obs.export(trace_path=str(tmp_path / "t.json"),
+                     metrics_path=str(tmp_path / "m.jsonl"))
+    rc = report.main([out["metrics"], "--trace", out["trace"],
+                      "--blackbox", str(tmp_path / "bb.json")])
+    assert rc == 0
+    text = capsys.readouterr().out
+    assert "per-bucket density/mass spectra" in text
+    assert "g0b0" in text
+    assert "health timeline" in text and "serve_slo" in text
+    assert "serve SLO attainment" in text
+    assert "ttft" in text and "NO" in text     # the missed SLO row
+    assert "e2e" in text and "yes" in text     # the attained one
+    assert "span tree OK" in text
+    assert "reason='test'" in text
+
+
+def test_report_tolerates_truncated_jsonl(tmp_path):
+    from repro.obs import report
+
+    reg = MetricsRegistry()
+    reg.counter("c").inc()
+    reg.event("health/ef_growth", severity="warn", subject="b0",
+              message="m")
+    path = reg.dump_jsonl(str(tmp_path / "m.jsonl"))
+    with open(path, "a") as f:
+        f.write('{"kind": "event", "event": "torn-mid-wr')   # torn tail
+    text = report.render(path)
+    assert "ef_growth" in text and "b0" in text
+    # header missing entirely -> a clear error, not a traceback
+    (tmp_path / "junk.jsonl").write_text('{"kind": "counter", "name": "x"}\n')
+    with pytest.raises(ValueError, match="header"):
+        report.render(str(tmp_path / "junk.jsonl"))
