@@ -1,0 +1,215 @@
+"""Fault-tolerance cost (DESIGN.md §12): guard overhead + recovery latency.
+
+Two claims behind the fault-tolerant runtime:
+
+* ``guard_overhead`` — the guarded step (in-graph all-finite check over
+  the grad leaves + the conditional no-op apply + the injection select)
+  versus the identical unguarded step. The guard is a handful of
+  reductions over already-materialized gradients, so it must be nearly
+  free: acceptance <= 5%. ABBA-paired rounds, best-of-min per arm
+  (methodology of ``bench_obs_health``).
+* ``recovery_<class>`` — wall-clock cost of surviving one injected
+  fault of each recoverable class under the async driver (collective
+  raise, data-pipeline stall, non-finite escalation), measured as the
+  faulted run's wall time minus the clean run's on the same compiled
+  step and checkpoint wiring. Includes detection, backoff, CRC-verified
+  restore, and the replayed steps — the end-to-end price of one
+  recovery, not just the restore. Informational (wall-clock on a shared
+  runner); the gated cell is the overhead row.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import shutil
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compressor import SyncConfig
+
+P_DATA = 4
+STEPS = 8       # steps per timed block (overhead) / per driver run
+ROUNDS = 4
+CKPT_EVERY = 2
+
+
+def bench_meta() -> dict:
+    return {"p_data": P_DATA, "steps_per_block": STEPS, "rounds": ROUNDS,
+            "ckpt_every": CKPT_EVERY}
+
+
+def _configs():
+    from repro.models.config import ModelConfig
+    from repro.optim.optimizers import OptimizerConfig
+    from repro.optim.schedule import ScheduleConfig
+    from repro.train.state import TrainConfig
+
+    cfg = ModelConfig(name="ft", family="dense", num_layers=1, d_model=64,
+                      num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                      dtype=jnp.float32, param_dtype=jnp.float32,
+                      max_seq_len=32)
+    sync = SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=128,
+                      algorithm="dsar_split_allgather", min_sparse_size=1024,
+                      impl="ref")
+    tcfg = TrainConfig(sync=sync, optimizer=OptimizerConfig(),
+                       schedule=ScheduleConfig(peak_lr=1e-3, warmup_steps=5,
+                                               total_steps=100000),
+                       zero1=False)
+    return cfg, tcfg
+
+
+def _build(guard: bool):
+    from repro.compat import make_mesh
+    from repro.models.model import build_model
+    from repro.runtime import pipeline as rp
+    from repro.train.train_step import init_state
+
+    cfg, tcfg = _configs()
+    model = build_model(cfg)
+    mesh = make_mesh((P_DATA, 2), ("data", "model"))
+    # staleness=0: the plain synchronous step, so the guarded driver runs
+    # below can rewind to a checkpoint with no in-flight buffers to lose
+    fn, _, _ = rp.build_pipelined_step(model, tcfg, mesh, staleness=0,
+                                       telemetry=False, guard=guard,
+                                       inject=guard)
+    st, _ = init_state(model, tcfg, mesh)
+    return mesh, model, tcfg, fn, st
+
+
+def _guard_overhead():
+    from repro.data.pipeline import DataConfig, synthetic_batch
+    from repro.runtime.faults import FAULT_KEY
+
+    dcfg = DataConfig(global_batch=8, seq_len=16, vocab_size=256)
+    key = jax.random.PRNGKey(0)
+
+    mesh, model, tcfg, fn_on, st_on = _build(guard=True)
+    _, _, _, fn_off, st_off = _build(guard=False)
+    n_leaves = len(jax.tree.leaves(st_on.params))
+    clean_flag = jnp.zeros((n_leaves,), jnp.float32)
+    states = {"on": st_on, "off": st_off}
+    fns = {"on": fn_on, "off": fn_off}
+
+    def block(tag, start):
+        t0 = time.perf_counter()
+        st = states[tag]
+        for i in range(start, start + STEPS):
+            batch = jax.tree.map(jnp.asarray, synthetic_batch(dcfg, i))
+            if tag == "on":
+                batch[FAULT_KEY] = clean_flag
+            st, m = fns[tag](st, batch, jax.random.fold_in(key, i))
+            jax.block_until_ready(m["loss"])
+        states[tag] = st
+        return (time.perf_counter() - t0) / STEPS * 1e6
+
+    with mesh:
+        block("on", 0), block("off", 0)           # compile + warm
+        t_on, t_off = [], []
+        for r in range(ROUNDS):                   # ABBA-paired rounds
+            start = (r + 1) * STEPS
+            if r % 2 == 0:
+                a = block("on", start)
+                b = block("off", start)
+            else:
+                b = block("off", start)
+                a = block("on", start)
+            t_on.append(a)
+            t_off.append(b)
+    us_on, us_off = min(t_on), min(t_off)
+    overhead = us_on / us_off - 1.0
+    rows = [("guard_overhead", us_on,
+             f"off={us_off:.1f}us,overhead={overhead:+.1%},"
+             f"le_5pct={overhead <= 0.05}")]
+    return rows, (mesh, model, tcfg, fn_on)
+
+
+def _driver_run(mesh, model, tcfg, fn, injector, *, recovery=None,
+                timeout_s=60.0):
+    from repro import obs as obs_mod
+    from repro.data.pipeline import DataConfig, synthetic_batch
+    from repro.runtime import driver as rt_driver
+    from repro.train import checkpoint as ckpt
+    from repro.train.train_step import init_state
+
+    dcfg = DataConfig(global_batch=8, seq_len=16, vocab_size=256)
+    key = jax.random.PRNGKey(0)
+    obs = obs_mod.configure(metrics=True, set_as_default=False)
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_faults_ck_")
+    try:
+        def ckpt_fn(s):
+            ckpt.save(ckpt_dir, s, dp_total=P_DATA,
+                      opt_layout=ckpt.opt_layout_of(tcfg))
+
+        def restore_fn():
+            like, _ = init_state(model, tcfg, mesh)
+            return ckpt.restore(ckpt_dir, like, dp_total=P_DATA,
+                                step=ckpt.latest_valid_step(ckpt_dir),
+                                verify=True)
+
+        with mesh:
+            state, _ = init_state(model, tcfg, mesh)
+            injector.bind(n_leaves=len(jax.tree.leaves(state.params)))
+            t0 = time.perf_counter()
+            state, log = rt_driver.run_pipelined(
+                fn, state, start_step=0, num_steps=STEPS,
+                batch_fn=lambda s: synthetic_batch(dcfg, s),
+                key_fn=lambda s: jax.random.fold_in(key, s),
+                cfg=rt_driver.DriverConfig(depth=1, prefetch=1,
+                                           prefetch_timeout_s=timeout_s),
+                ckpt_every=CKPT_EVERY, ckpt_fn=ckpt_fn,
+                restore_fn=restore_fn, obs=obs, recovery=recovery,
+                injector=injector)
+            wall = time.perf_counter() - t0
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+    return wall, log
+
+
+def _recovery_latency(built):
+    from repro.runtime.faults import (FaultInjector, FaultPlan,
+                                      RecoveryConfig)
+
+    mesh, model, tcfg, fn = built
+    fast = RecoveryConfig(backoff_base_s=0.001, backoff_max_s=0.005)
+    # clean reference on the same compiled step + checkpoint cadence
+    clean_wall, _ = _driver_run(mesh, model, tcfg, fn,
+                                FaultInjector(FaultPlan()), recovery=fast)
+
+    cases = {
+        "collective": dict(
+            injector=FaultInjector(FaultPlan.single("collective", 3)),
+            timeout_s=60.0),
+        # the stall must outlast the take() deadline to be detected; its
+        # recovery price is dominated by that bounded wait, not the nap
+        # (the sleeping producer is a daemon thread)
+        "stall": dict(
+            injector=FaultInjector(
+                FaultPlan.single("stall", 2, duration_s=4.0)),
+            timeout_s=0.3),
+        "nonfinite": dict(
+            injector=FaultInjector(
+                FaultPlan.single("nonfinite", 3, mode="nan", repeat=2)),
+            timeout_s=60.0),
+    }
+    rows = []
+    for cls, kw in cases.items():
+        rec = fast if cls != "nonfinite" else RecoveryConfig(
+            backoff_base_s=0.001, backoff_max_s=0.005,
+            max_consecutive_nonfinite=2)
+        wall, log = _driver_run(mesh, model, tcfg, fn, kw["injector"],
+                                recovery=rec, timeout_s=kw["timeout_s"])
+        rows.append((f"recovery_{cls}", max(0.0, wall - clean_wall) * 1e6,
+                     f"restarts={log.restarts},wall={wall:.2f}s,"
+                     f"clean={clean_wall:.2f}s"))
+    return rows
+
+
+def run() -> list[tuple[str, float, str]]:
+    rows, built = _guard_overhead()
+    rows.extend(_recovery_latency(built))
+    return rows

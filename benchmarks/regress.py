@@ -50,6 +50,7 @@ CELL_TOL = {
     "adapt_drift_adaptive.us_per_call": 0.25,   # modeled cost, mild jitter
     "serve_continuous.tok_per_s": 0.35,         # wall-clock throughput
     "obs_health_overhead.us_per_call": 0.50,    # wall-clock step timing
+    "guard_overhead.us_per_call": 0.50,         # wall-clock step timing
     "zero_state_scattered_P8.us_per_call": 0.02,   # analytic bytes
     "zero_wire_scattered_P8.us_per_call": 0.05,    # analytic bytes
 }
@@ -187,6 +188,19 @@ def headline_cells(fresh_dir: str, baseline_dir: str) -> list[dict]:
     if pair:
         fresh, base, tols = pair
         name = "obs_health_overhead"
+        if name in fresh and name in base:
+            add(f"{name}.us_per_call", _cell_us(fresh[name]),
+                _cell_us(base[name]), False, tols)
+        else:
+            print(f"regress: row {name!r} missing", file=sys.stderr)
+
+    pair = both("BENCH_bench_faults.json")
+    if pair:
+        fresh, base, tols = pair
+        # the gated cell is the guarded-step overhead; the per-class
+        # recovery_<cls> rows stay informational (one-shot wall-clock
+        # deltas on a shared runner are far too jittery to gate on)
+        name = "guard_overhead"
         if name in fresh and name in base:
             add(f"{name}.us_per_call", _cell_us(fresh[name]),
                 _cell_us(base[name]), False, tols)

@@ -53,6 +53,7 @@ MODULES = {
     "bench_serve": "benchmarks.bench_serve",        # DESIGN.md §8 serving
     "zero": "benchmarks.bench_zero",                # DESIGN.md §11 ZeRO state
     "obs_health": "benchmarks.bench_obs_health",    # DESIGN.md §10.5-§10.7
+    "faults": "benchmarks.bench_faults",            # DESIGN.md §12 recovery
 }
 
 

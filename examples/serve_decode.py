@@ -65,7 +65,7 @@ def run_static(mesh, model, params, batch: int, tokens: int, obs=None):
 
 
 def run_continuous(mesh, model, params, batch: int, tokens: int, obs=None,
-                   slo: "ServeConfig | None" = None):
+                   slo: "ServeConfig | None" = None, injector=None):
     rng = np.random.default_rng(0)
     n_req = 2 * batch
     arrivals = poisson_trace(n_req, rate=0.5, seed=0)
@@ -76,7 +76,7 @@ def run_continuous(mesh, model, params, batch: int, tokens: int, obs=None,
             for i in range(n_req)]
     engine = ContinuousServeEngine(model, mesh, params, cache_len=128,
                                    batch_size=batch, dispatch="adaptive",
-                                   obs=obs, serve_cfg=slo)
+                                   obs=obs, serve_cfg=slo, injector=injector)
     res = engine.run(reqs)
     occ = [r["active"] for r in res.step_log]
     print(f"continuous: {len(reqs)} requests, {res.tokens} tokens in "
@@ -97,8 +97,23 @@ def run_continuous(mesh, model, params, batch: int, tokens: int, obs=None,
         print(f"SLO targets {slo.slo_targets()}: "
               + (f"{len(misses)} miss(es) {misses}" if misses
                  else "all attained"))
-    assert len(res.outputs) == n_req
-    print("all requests completed: OK")
+    # under load shedding (queue_limit / shed deadline) a request may be
+    # retired via the shed list instead of outputs; every request must
+    # still be accounted for exactly once
+    assert len(res.outputs) + len(res.shed) == n_req
+    if res.shed:
+        print(f"load shed: {len(res.shed)} request(s) {sorted(res.shed)}")
+    if injector is not None:
+        retries = obs.metrics.counter("serve/retries").value if (
+            obs is not None and obs.metrics_on) else 0
+        print("chaos recovery: survived "
+              f"{injector.fired_total} injected fault(s), "
+              f"tick retries={retries}, shed={len(res.shed)}")
+        if injector.fired_total == 0:
+            raise SystemExit("chaos: the plan injected nothing — seed/step "
+                             "range mismatch, the smoke proved nothing")
+    else:
+        print("all requests completed: OK")
     return engine
 
 
@@ -126,21 +141,43 @@ def main():
     ap.add_argument("--slo-e2e", type=float, default=96.0,
                     help="p99 arrival->retirement target in decode-step "
                          "units")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="chaos-injection smoke (DESIGN.md §12): a "
+                         "seed-derived FaultPlan of recoverable serve "
+                         "faults (collective raise, straggler, pipeline "
+                         "stall) against the decode loop; the run must "
+                         "complete via pre-dispatch tick retries "
+                         "(implies --continuous)")
     args = ap.parse_args()
     tokens = args.tokens if args.tokens is not None else (8 if args.fast else 24)
 
     from repro import obs as obs_mod
 
+    chaos = args.chaos is not None
+    if chaos:
+        args.continuous = True  # tick retry/shed hooks live in the scheduler
     obs = obs_mod.configure(trace=bool(args.trace),
-                            metrics=bool(args.metrics_out) or bool(args.trace),
+                            metrics=bool(args.metrics_out) or bool(args.trace)
+                            or chaos,
                             audit=bool(args.metrics_out))
     mesh, model, params = build(args.fast)
+    injector = None
+    if chaos:
+        from repro.runtime.faults import FaultInjector, FaultPlan
+
+        # recoverable serve classes only: nonfinite/sigterm abort a
+        # decode run by design (donated state cannot be replayed)
+        plan = FaultPlan.chaos(args.chaos, 16,
+                               classes=("collective", "straggler", "stall"))
+        injector = FaultInjector(plan)
+        print("chaos plan (seed {}): ".format(args.chaos)
+              + ", ".join(f"{s.kind}@tick{s.step}" for s in plan.specs))
     engine = None
     if args.continuous:
         slo = ServeConfig(slo_ttft_p99=args.slo_ttft,
                           slo_e2e_p99=args.slo_e2e)
         engine = run_continuous(mesh, model, params, args.batch, tokens,
-                                obs=obs, slo=slo)
+                                obs=obs, slo=slo, injector=injector)
     else:
         run_static(mesh, model, params, args.batch, tokens, obs=obs)
 

@@ -70,12 +70,24 @@ def main():
                          "a bounded ring of driver retires dumped to this "
                          "path on exception, watchdog fire, or SIGTERM/"
                          "SIGINT — the post-mortem for a killed run")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="chaos-injection smoke (DESIGN.md §12): run a "
+                         "seed-derived FaultPlan of recoverable faults "
+                         "(grad NaN/Inf, straggler, data stall, collective "
+                         "raise, checkpoint corruption) against the "
+                         "pipelined runtime; the run must complete via the "
+                         "guarded step + retry/backoff recovery (implies "
+                         "--pipeline)")
     args = ap.parse_args()
 
     from repro import obs as obs_mod
 
+    chaos = args.chaos is not None
+    if chaos:
+        args.pipeline = True  # guard/inject hooks live in the async driver
     obs = obs_mod.configure(trace=bool(args.trace),
-                            metrics=bool(args.metrics_out) or bool(args.trace),
+                            metrics=bool(args.metrics_out) or bool(args.trace)
+                            or chaos,
                             audit=bool(args.metrics_out),
                             recorder=args.blackbox or False)
     if obs.recorder is not None:
@@ -119,17 +131,33 @@ def main():
         mem = state_memory_breakdown(model, tcfg, mesh)
         print("zero: per-device state "
               + ", ".join(f"{k}={v/1e6:.1f}MB" for k, v in mem.items()))
+    # shorter checkpoint cadence under chaos: the corrupt-then-restore
+    # pair needs steps > 2*ckpt_every, and a CI-sized smoke (~30 steps)
+    # should still cross several save boundaries
+    ckpt_every = 10 if chaos else 25
     trainer = Trainer(model, tcfg, mesh, data, ckpt_dir=args.ckpt_dir,
-                      ckpt_every=25, obs=obs)
+                      ckpt_every=ckpt_every, obs=obs)
     start = trainer.init_or_resume()
     print(f"starting at step {start} (resume={'yes' if start else 'no'})")
 
     def med(times):
         return sorted(times)[len(times) // 2]
 
+    injector = recovery = None
+    if chaos:
+        from repro.runtime.faults import (FaultInjector, FaultPlan,
+                                          RecoveryConfig)
+
+        plan = FaultPlan.chaos(args.chaos, steps, ckpt_every=ckpt_every)
+        injector = FaultInjector(plan)
+        recovery = RecoveryConfig(backoff_base_s=0.01, backoff_max_s=0.1)
+        print("chaos plan (seed {}): ".format(args.chaos)
+              + ", ".join(f"{s.kind}@{s.step}" for s in plan.specs))
+
     if args.pipeline:
         # short synchronous probe first, so the overlap win is measurable
-        probe_to = min(start + 8, steps)
+        # (skipped under chaos: the probe loop has no recovery hooks)
+        probe_to = start if chaos else min(start + 8, steps)
         if probe_to > start:
             trainer.run(probe_to)
         n_sync = len(trainer.log.step_times)
@@ -142,7 +170,8 @@ def main():
         sync_times = trainer.log.step_times[1:n_sync]
         log = trainer.run_pipelined(steps, staleness=1,
                                     superstep=args.superstep, depth=2,
-                                    adapt=args.adapt)
+                                    adapt=args.adapt, injector=injector,
+                                    recovery=recovery)
         pipe_times = log.step_times[n_sync:]
         if sync_times and pipe_times:
             sync_avg = sum(sync_times) / len(sync_times)
@@ -162,6 +191,18 @@ def main():
           f"avg step {sum(log.step_times)/len(log.step_times)*1e3:.0f} ms "
           f"(median {med(log.step_times)*1e3:.0f} ms), "
           f"restarts={log.restarts}, stragglers={len(log.straggler_events)}")
+    if chaos:
+        m = obs.metrics
+        counters = {n: c.value for n, c in sorted(m.metrics.items())
+                    if getattr(c, "kind", None) == "counter"
+                    and n.startswith(("faults/", "recovery/", "guard/"))}
+        print("chaos recovery: survived "
+              f"{injector.fired_total} injected fault(s), "
+              f"restarts={log.restarts}; "
+              + " ".join(f"{n}={v}" for n, v in counters.items()))
+        if injector.fired_total == 0:
+            raise SystemExit("chaos: the plan injected nothing — seed/step "
+                             "range mismatch, the smoke proved nothing")
 
     if obs.enabled:
         # drift audit: probe each distinct (algorithm, n, k) bucket of

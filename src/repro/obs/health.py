@@ -26,6 +26,9 @@ evaluation also mirrors the events into the registry
                    median — pipelined-runtime regression watch
   serve_slo        p99 of ``serve/<key>_steps`` vs the SLO targets a
                    :class:`repro.serve.ServeConfig` declares
+  nonfinite        guarded-step trips (``guard/nonfinite_trips``) since
+                   the last evaluation — always critical; feeds the
+                   controller's fault demotion (DESIGN.md §12)
   drift_flag       DriftAuditor escalation: a flagged algorithm is a
                    warn; a median measured/predicted ratio beyond
                    flag_ratio² is critical
@@ -121,6 +124,7 @@ class HealthMonitor:
         self.serve_slo = dict(serve_slo or {})
         self.audit = audit
         self.history: list[HealthEvent] = []
+        self._nonfinite_seen = 0
 
     # -- rule helpers ------------------------------------------------------
     def _bucket_histograms(self, suffix: str):
@@ -212,6 +216,23 @@ class HealthMonitor:
                     f"serve {key} p99 of {p99:.3g} decode steps misses the "
                     f"{target:.3g}-step SLO target", p99, target)
 
+    def _rule_nonfinite(self):
+        """Guard trips since the last evaluation (DESIGN.md §12.2). The
+        guarded step already skipped the apply and preserved EF/optimizer
+        state; this verdict is the drain-barrier signal the
+        AdaptiveController keys its fault demotion on."""
+        m = self.registry.metrics.get("guard/nonfinite_trips")
+        total = int(getattr(m, "value", 0) or 0)
+        new = total - self._nonfinite_seen
+        self._nonfinite_seen = total
+        if new <= 0:
+            return
+        yield HealthEvent(
+            "critical", "nonfinite", "grads",
+            f"{new} guarded step(s) tripped on non-finite gradients since "
+            f"the last evaluation ({total} total): apply skipped, EF "
+            "residuals and optimizer state preserved", float(new), 0.0)
+
     def _rule_drift_flag(self):
         if self.audit is None or not len(self.audit):
             return
@@ -236,7 +257,7 @@ class HealthMonitor:
         events: list[HealthEvent] = []
         for rule in (self._rule_ef_growth, self._rule_coverage_floor,
                      self._rule_step_time, self._rule_serve_slo,
-                     self._rule_drift_flag):
+                     self._rule_nonfinite, self._rule_drift_flag):
             events.extend(rule() or ())
         ranked = rank_events(events)
         for ev in ranked:

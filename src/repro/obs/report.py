@@ -9,6 +9,8 @@ terminal summary a human wants after (or instead of) opening Perfetto:
     EF-residual norm percentiles per fusion bucket (DESIGN.md §10.5)
   * the health timeline: every ``health/*`` event in time order with
     severity markers
+  * the recovery timeline: injected faults, guard trips, retries,
+    checkpoint fallbacks, demotions and serve sheds (DESIGN.md §12)
   * the serve SLO attainment table: declared ServeConfig targets vs the
     measured p99s (``serve/slo_targets`` event + ``serve/*_steps``
     histograms)
@@ -112,6 +114,36 @@ def _health_timeline(events: list) -> list[str]:
     return lines
 
 
+def _recovery_timeline(metrics: dict, events: list) -> list[str]:
+    """Fault/recovery story of the run (DESIGN.md §12): injected faults,
+    guard trips, retries/aborts, checkpoint fallbacks, demotions and
+    serve sheds in time order, closed by the recovery counters. Works on
+    torn tails too — load_metrics_jsonl already dropped them."""
+    prefixes = ("faults/", "recovery/", "serve/shed", "adapt/fault_")
+    rows = [e for e in events
+            if str(e.get("event", "")).startswith(prefixes)
+            or e.get("event") in ("driver/restart", "health/nonfinite")]
+    counters = {n: r.get("value") for n, r in sorted(metrics.items())
+                if r.get("kind") == "counter"
+                and n.startswith(("faults/", "recovery/", "guard/",
+                                  "serve/shed", "serve/retries"))}
+    if not rows and not counters:
+        return ["  (no fault/recovery activity in this run)"]
+    lines = []
+    for e in sorted(rows, key=lambda e: e.get("t", 0.0)):
+        detail = " ".join(
+            f"{k}={e[k]}" for k in sorted(e)
+            if k not in ("event", "t", "kind", "message"))
+        msg = e.get("message", "")
+        lines.append(f"  t+{float(e.get('t', 0.0)):7.2f}s "
+                     f"{e['event']:<24} {detail}"
+                     + (f"  {msg}" if msg else ""))
+    if counters:
+        lines.append("  counters: " + " ".join(
+            f"{n}={v}" for n, v in counters.items()))
+    return lines
+
+
 def _slo_table(metrics: dict, events: list) -> list[str]:
     targets: dict = {}
     for e in events:
@@ -183,6 +215,9 @@ def render(metrics_path: str, trace_path: str | None = None,
     out.append("")
     out.append("-- health timeline --")
     out.extend(_health_timeline(doc["events"]))
+    out.append("")
+    out.append("-- recovery timeline --")
+    out.extend(_recovery_timeline(doc["metrics"], doc["events"]))
     out.append("")
     out.append("-- serve SLO attainment --")
     out.extend(_slo_table(doc["metrics"], doc["events"]))

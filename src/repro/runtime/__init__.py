@@ -15,6 +15,10 @@ Three mechanisms on top of the fusion-bucket sync engine:
                each bucket's algorithm; accepted replans swap the
                compiled superstep at drain barriers (hysteresis +
                patience damp flapping)
+  faults.py    fault-tolerant runtime (DESIGN.md §12): deterministic
+               chaos injection (FaultPlan/FaultInjector), fault
+               classification, and the retry/backoff supervisor the
+               driver escalates through (RecoveryConfig/RetrySupervisor)
 """
 from repro.runtime.adapt import (
     AdaptConfig,
@@ -23,6 +27,21 @@ from repro.runtime.adapt import (
     TelemetryWindow,
 )
 from repro.runtime.driver import DriverConfig, run_pipelined
+from repro.runtime.faults import (
+    FAULT_CLASSES,
+    FAULT_KEY,
+    FaultError,
+    FaultInjectionError,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    NonFiniteEscalation,
+    PrefetchStalled,
+    RecoveryConfig,
+    RetryBudgetExhausted,
+    RetrySupervisor,
+    classify_fault,
+)
 from repro.runtime.pipeline import (
     attach_inflight,
     build_pipelined_step,
@@ -36,10 +55,23 @@ __all__ = [
     "AdaptiveController",
     "AdaptiveRuntime",
     "DriverConfig",
+    "FAULT_CLASSES",
+    "FAULT_KEY",
+    "FaultError",
+    "FaultInjectionError",
+    "FaultInjector",
+    "FaultPlan",
+    "FaultSpec",
+    "NonFiniteEscalation",
+    "PrefetchStalled",
+    "RecoveryConfig",
+    "RetryBudgetExhausted",
+    "RetrySupervisor",
     "TelemetryWindow",
     "attach_inflight",
     "build_pipelined_step",
     "build_superstep",
+    "classify_fault",
     "pipelined_state_shapes",
     "resolve_lowering",
     "run_pipelined",

@@ -57,6 +57,10 @@ class AdaptConfig:
     calibrate: bool = True   # fit NetworkParams from measured timings once
     pod_sparse: bool = True  # allow demoting the cross-pod dense psum
     allow: Optional[tuple] = None  # restrict replan candidates (None = all)
+    # Fault demotion (DESIGN.md §12.5): decision windows a fault-demoted
+    # bucket is HELD on the dense/exact algorithm before the normal
+    # hysteresis+patience machinery may re-promote it.
+    demote_hold: int = 4
 
 
 class TelemetryWindow:
@@ -111,6 +115,9 @@ class AdaptiveController:
         self._pending_plan = None
         self._pending_count = 0
         self._urgent = False
+        # fault-demoted buckets -> remaining hold windows (§12.5): while
+        # held, _decide pins the bucket to "dense" whatever the model says
+        self._demoted: dict = {}
         self.swaps = 0
 
     # -- health advisory ---------------------------------------------------
@@ -133,6 +140,31 @@ class AdaptiveController:
         self.obs.event("adapt/health_advisory",
                        buckets=sorted({e.subject for e in crit}),
                        rules=sorted({e.rule for e in crit}))
+
+    def demote(self, buckets=None):
+        """Fault demotion (DESIGN.md §12.5): a HealthMonitor FAULT verdict
+        (non-finite grads) forces the dense/exact algorithm onto the
+        offending buckets (None = every bucket — a non-finite grad cannot
+        be attributed below the leaf->bucket packing) and HOLDS them
+        there for ``demote_hold`` decision windows before the normal
+        hysteresis+patience machinery may re-promote. Returns the forced
+        plan to install at the next drain barrier, or None when the
+        targets are already dense (the hold is refreshed — a persisting
+        fault re-advises every barrier without re-forcing swaps)."""
+        cur = self.plan.algorithms()
+        names = [n for n in cur if buckets is None or n in buckets]
+        if not names:
+            return None
+        for n in names:
+            self._demoted[n] = self.cfg.demote_hold
+        if all(cur[n] == "dense" for n in names):
+            return None
+        forced = self.plan.replan(algorithms={n: "dense" for n in names})
+        self.obs.event("adapt/fault_demotion", buckets=names,
+                       hold=self.cfg.demote_hold,
+                       signature=forced.signature())
+        self.force(forced)
+        return forced
 
     # -- telemetry ingest --------------------------------------------------
     def observe_step(self, nnz_by_bucket: dict):
@@ -240,6 +272,18 @@ class AdaptiveController:
                                old=old, new=b.algorithm, nnz=nnz,
                                t_old_s=t_old, t_new_s=t_new,
                                hysteresis=self.cfg.hysteresis)
+        # Fault-demotion hold (§12.5): buckets inside their hold window
+        # stay dense whatever the cost model proposes; the hold ticks
+        # down one per decision window, and only after it expires does
+        # the normal hysteresis+patience path get to re-promote.
+        if self._demoted:
+            for n in self._demoted:
+                if n in cur_algo:
+                    keep[n] = "dense"
+            for n in list(self._demoted):
+                self._demoted[n] -= 1
+                if self._demoted[n] <= 0:
+                    del self._demoted[n]
         if keep:
             # revert ONLY the vetoed buckets; delta-forced and clear-win
             # changes keep the candidate's choice (replan defaults every
@@ -349,12 +393,14 @@ class AdaptiveRuntime:
                  cfg: AdaptConfig = AdaptConfig(),
                  staleness: int = 1, superstep: int = 1,
                  unroll: bool = False,
-                 build_fn: Optional[Callable] = None, obs=None):
+                 build_fn: Optional[Callable] = None, obs=None,
+                 guard: bool = False, inject: bool = False):
         from repro.train.train_step import dp_axes_of
 
         self.model, self.tcfg, self.mesh = model, tcfg, mesh
         self.staleness, self.superstep, self.unroll = (staleness, superstep,
                                                        unroll)
+        self.guard, self.inject = guard, inject
         self.obs = _resolve_obs(obs)
         dp_ax = dp_axes_of(mesh)
         p_pod = mesh.shape[dp_ax[0]] if len(dp_ax) > 1 else 1
@@ -379,11 +425,12 @@ class AdaptiveRuntime:
         if self.superstep > 1:
             fn, _, _ = rt_pipeline.build_superstep(
                 self.model, self.tcfg, self.mesh, staleness=self.staleness,
-                steps=self.superstep, unroll=self.unroll, plan=plan)
+                steps=self.superstep, unroll=self.unroll, plan=plan,
+                guard=self.guard, inject=self.inject)
         else:
             fn, _, _ = rt_pipeline.build_pipelined_step(
                 self.model, self.tcfg, self.mesh, staleness=self.staleness,
-                plan=plan)
+                plan=plan, guard=self.guard, inject=self.inject)
         return fn
 
     def step_fn_for(self, plan):
@@ -422,8 +469,23 @@ class AdaptiveRuntime:
 
     def advise(self, events) -> None:
         """Forward the driver's drain-barrier health advisory to the
-        controller (see AdaptiveController.advise)."""
+        controller (see AdaptiveController.advise), and act on FAULT
+        verdicts (§12.5): a critical ``nonfinite`` finding demotes the
+        offending buckets to the dense/exact algorithm — the forced plan
+        installs at the next drain barrier via maybe_swap, with the
+        controller's demote-hold gating re-promotion."""
         self.controller.advise(events)
+        crit = [e for e in events
+                if getattr(e, "severity", None) == "critical"
+                and getattr(e, "rule", None) == "nonfinite"]
+        if not crit:
+            return
+        bucket_names = {b.name for g in self.controller.plan.groups
+                        for b in g.buckets}
+        subjects = {getattr(e, "subject", None) for e in crit} & bucket_names
+        forced = self.controller.demote(subjects or None)
+        if forced is not None:
+            self._swap_to = forced
 
     def maybe_swap(self):
         """Returns (new_step_fn, new_plan) once after each accepted

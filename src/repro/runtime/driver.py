@@ -57,6 +57,12 @@ import numpy as np
 
 from repro.obs import resolve as _resolve_obs
 from repro.obs.metrics import MetricsRegistry
+from repro.runtime.faults import (
+    NonFiniteEscalation,
+    PrefetchStalled,
+    RecoveryConfig,
+    RetrySupervisor,
+)
 
 # Rolling window (in steps) of the documented step-time statistic: the
 # median over this window is THE summary of ``log.step_times`` — used by
@@ -71,6 +77,10 @@ class DriverConfig:
     depth: int = 2          # dispatched-but-unretired units (double-buffered)
     prefetch: int = 2       # units of host batches prepared ahead
     steps_per_unit: int = 1 # K of the scanned superstep fn (1 = plain step)
+    # Bound on waiting for the prefetch thread before declaring the data
+    # pipeline stalled (PrefetchStalled -> the recovery path). Generous:
+    # batch generation is milliseconds; only a hung/dead producer hits it.
+    prefetch_timeout_s: float = 60.0
 
 
 class DriverLog:
@@ -171,11 +181,34 @@ class _Prefetcher:
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
-    def take(self, step: int):
+    def take(self, step: int, timeout: float = 60.0):
+        """Bounded get: the old unbounded ``q.get()`` hung the dispatch
+        loop forever when the producer thread died without enqueueing its
+        poison pill (or never produced at all). Poll with a short get so
+        thread death is noticed within ~0.5s, and bound total waiting by
+        ``timeout`` for a live-but-stalled producer. Both paths surface
+        as :class:`PrefetchStalled` — classified 'stall' by the recovery
+        supervisor, with the producer's own exception attached as the
+        cause when one was captured."""
         assert self._q is not None, "prefetcher not started"
-        s, batch = self._q.get()
+        deadline = time.perf_counter() + timeout
+        while True:
+            try:
+                s, batch = self._q.get(timeout=0.5)
+                break
+            except queue.Empty:
+                alive = self._thread is not None and self._thread.is_alive()
+                if not alive and self._q.empty():
+                    raise PrefetchStalled(
+                        f"prefetch thread died before producing step {step}")
+                if time.perf_counter() >= deadline:
+                    raise PrefetchStalled(
+                        f"no batch for step {step} within {timeout:.1f}s "
+                        "(data pipeline stalled)")
         if s is None:  # producer died — re-raise on the driver thread
-            raise RuntimeError("prefetch batch_fn failed") from batch
+            raise PrefetchStalled(
+                f"prefetch batch_fn failed at step {step}: {batch!r}",
+                cause=batch) from batch
         assert s == step, (s, step)
         return batch
 
@@ -209,6 +242,8 @@ def run_pipelined(
     obs=None,
     phase_attr: Optional[Callable[[float], list]] = None,
     health=None,
+    recovery=None,
+    injector=None,
 ):
     """Drive ``step_fn`` from ``start_step`` to ``num_steps`` (absolute).
 
@@ -239,6 +274,25 @@ def run_pipelined(
     The flight recorder (``obs.recorder``, when attached) notes every
     retired unit and dumps ``blackbox.json`` on watchdog fire and on any
     exception — including ones the restore path survives.
+    recovery: a ``runtime.faults.RecoveryConfig`` (or a prebuilt
+    ``RetrySupervisor``) turning the bare restore-on-failure into the
+    bounded retry/backoff policy of DESIGN.md §12.3: each failure is
+    classified by fault class, charged against that class's retry
+    budget, delayed by jittered exponential backoff, then restored;
+    an exhausted budget escalates to ``RetryBudgetExhausted`` AFTER the
+    blackbox dump (clean abort). ``None`` keeps the legacy unbounded
+    restore. Independently, when the step function was built with
+    ``guard=True`` the retire path reads ``metrics["nonfinite"]``: each
+    tripped (skipped) step emits a critical ``health/nonfinite`` event,
+    and ``max_consecutive_nonfinite`` consecutive trips raise
+    ``NonFiniteEscalation`` into the same restore path (rewind to the
+    last-good checkpoint; the replayed data is clean by the injector's
+    one-shot contract, so recovery is bit-reproducible).
+    injector: a ``runtime.faults.FaultInjector`` (chaos harness). The
+    driver wraps ``batch_fn`` with its stall/nonfinite hooks — so the
+    step function MUST then be built with ``inject=True`` — and fires
+    its collective/sigterm hook before each dispatch and its straggler
+    hook inside each retire.
     Returns (final state, log).
     """
     if cfg.depth < 1 or cfg.prefetch < 1 or cfg.steps_per_unit < 1:
@@ -247,18 +301,34 @@ def run_pipelined(
     rec = getattr(obs, "recorder", None)
     if log is None:
         log = DriverLog(registry=obs.metrics if obs.metrics_on else None)
+    reg = obs.metrics if obs.metrics_on else None
+    supervisor = None
+    if recovery is not None:
+        supervisor = (recovery if isinstance(recovery, RetrySupervisor)
+                      else RetrySupervisor(recovery, registry=reg))
+    rcfg = supervisor.cfg if supervisor is not None else RecoveryConfig()
+    if injector is not None:
+        injector.bind(registry=reg)
+        batch_fn = injector.wrap_batch_fn(batch_fn)
     k_unit = cfg.steps_per_unit
     prefetcher = _Prefetcher(batch_fn, cfg.prefetch, k_unit)
     prefetcher.start(start_step, num_steps)
     window: deque = deque()  # (first_step, n_steps, metrics)
     step = start_step
     last_retire_t = time.perf_counter()
+    consec_nonfinite = 0  # consecutive guard-tripped steps (§12.2)
 
     def retire_one():
-        nonlocal last_retire_t
+        nonlocal last_retire_t, consec_nonfinite
         s0, k, metrics = window.popleft()
         with obs.span("driver/retire", step=s0, k=k):
             jax.block_until_ready(metrics["loss"])      # the ONLY sync point
+            if injector is not None:
+                # straggler hook: the delay lands inside THIS retire
+                # interval, so the watchdog sees it as a slow step
+                med0 = (median(log.step_times[-STRAGGLER_WINDOW:])
+                        if len(log.step_times) >= STRAGGLER_WARMUP else 0.0)
+                injector.after_retire(s0, k, med0)
         now = time.perf_counter()
         dt_unit = now - last_retire_t
         dt = dt_unit / k
@@ -270,6 +340,31 @@ def run_pipelined(
             record_step(log, s0 + i, dt,
                         float(losses[i] if k > 1 else losses[0]),
                         straggler_factor)
+        if "nonfinite" in metrics:
+            # guarded step (§12.2): each tripped step was a state no-op
+            # on device; here it becomes a critical health event, and N
+            # consecutive trips escalate to a rewind — skip-recovery is
+            # not converging, so replay from the last-good checkpoint.
+            trips = np.atleast_1d(np.asarray(metrics["nonfinite"]))
+            for i in range(k):
+                if float(trips[i] if k > 1 else trips[0]) > 0.5:
+                    consec_nonfinite += 1
+                    if reg is not None:
+                        reg.counter("guard/nonfinite_trips").inc()
+                    obs.event("health/nonfinite", severity="critical",
+                              subject="grads", step=s0 + i,
+                              consecutive=consec_nonfinite,
+                              message="non-finite grads: apply skipped, "
+                                      "EF/opt state preserved")
+                    if rec is not None:
+                        rec.note("guard/nonfinite", step=s0 + i,
+                                 consecutive=consec_nonfinite)
+                    if consec_nonfinite >= rcfg.max_consecutive_nonfinite:
+                        raise NonFiniteEscalation(
+                            f"{consec_nonfinite} consecutive non-finite "
+                            f"steps ending at step {s0 + i}")
+                else:
+                    consec_nonfinite = 0
         if obs.metrics_on:
             obs.metrics.histogram("driver/retire_wall_s").observe(dt_unit)
         if rec is not None:
@@ -331,12 +426,18 @@ def run_pipelined(
 
     def dispatch(state, step):
         k = min(k_unit, num_steps - step)
+        if injector is not None:
+            # collective-raise / SIGTERM hook: BEFORE the jitted call, so
+            # the donated state is never half-consumed and a restore (or
+            # the signal handler's blackbox) sees a consistent world
+            injector.before_dispatch(step, k)
         with obs.span("driver/dispatch", step=step, k=k):
+            take = lambda s: prefetcher.take(s, cfg.prefetch_timeout_s)
             if k_unit == 1:
-                batch = jax.tree.map(jnp.asarray, prefetcher.take(step))
+                batch = jax.tree.map(jnp.asarray, take(step))
                 key = key_fn(step)
             else:
-                host = [prefetcher.take(step + i) for i in range(k)]
+                host = [take(step + i) for i in range(k)]
                 batch = jax.tree.map(
                     lambda *xs: jnp.asarray(np.stack(xs)), *host)
                 key = jnp.stack([key_fn(step + i) for i in range(k)])
@@ -373,13 +474,30 @@ def run_pipelined(
                 if rec is not None:
                     # blackbox BEFORE restore or re-raise: the ring still
                     # holds the pre-failure steps a restart would erase
+                    if (isinstance(e, PrefetchStalled)
+                            and e.cause is not None):
+                        rec.note("driver/prefetch_error",
+                                 error=type(e.cause).__name__,
+                                 message=str(e.cause))
                     rec._safe_dump(f"exception:{type(e).__name__}")
                 if restore_fn is None:
                     raise
+                if supervisor is not None:
+                    # classify + charge the class budget; raises
+                    # RetryBudgetExhausted (clean abort, blackbox above)
+                    # when the class is spent, else returns the jittered
+                    # backoff delay to wait out before the restore
+                    time.sleep(supervisor.on_failure(e, step))
                 window.clear()
+                consec_nonfinite = 0
                 log.restarts += 1
                 obs.event("driver/restart", step=step,
                           error=type(e).__name__)
+                if injector is not None:
+                    # poison produced for never-dispatched steps dies
+                    # with the prefetch queue — refund it so the replay
+                    # injects it for real (`step` is still the frontier)
+                    injector.refund_undispatched(step)
                 state = restore_fn()
                 step = int(state.step)
                 prefetcher.start(step, num_steps)

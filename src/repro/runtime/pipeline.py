@@ -49,6 +49,7 @@ from repro import comm, compat
 from repro.models.model import Model
 from repro.optim.optimizers import clip_by_global_norm, opt_update
 from repro.optim.schedule import make_schedule
+from repro.runtime.faults import FAULT_KEY
 from repro.train import train_step as ts
 from repro.train.state import TrainConfig, TrainState
 
@@ -137,9 +138,20 @@ def attach_inflight(state: TrainState, plan, mesh: Mesh) -> TrainState:
 # Step-body construction (shared by single-step and superstep builders)
 # --------------------------------------------------------------------------
 
+def _pipelined_batch_specs(cfg, mesh: Mesh, inject: bool) -> dict:
+    """Batch specs for the pipelined builders: the data fields plus —
+    when the chaos harness is riding along — the replicated per-grad-leaf
+    injection vector (``faults.FAULT_KEY``, (n_leaves,) f32)."""
+    b = ts.batch_specs(cfg, mesh)
+    if inject:
+        b = {**b, FAULT_KEY: P()}
+    return b
+
+
 def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                    staleness: int, lowering: Optional[str],
-                   plan=None, telemetry: bool = True):
+                   plan=None, telemetry: bool = True,
+                   guard: bool = False, inject: bool = False):
     """Un-jitted pipelined step (state, batch, key) -> (state, metrics),
     plus (shapes, specs, plan). The body mirrors build_train_step's
     sparcml branches with the sync split at the staleness boundary —
@@ -154,7 +166,16 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
     the flag is threaded into the executor so the nnz/wire/mass counts
     (and the mass psum) are never emitted, not merely DCE'd — asserted
     at the jaxpr level in tests (the overhead A/B in
-    benchmarks/bench_adapt.py and bench_obs_health.py)."""
+    benchmarks/bench_adapt.py and bench_obs_health.py).
+
+    ``guard=True`` adds the in-graph all-finite check over the RAW grad
+    leaves (DESIGN.md §12.2): a non-finite gradient anywhere makes the
+    step a no-op on params, optimizer state, EF residuals AND in-flight
+    buffers (the step counter still advances), and ``metrics["nonfinite"]``
+    reports 1.0 for the tripped step. ``inject=True`` additionally
+    consumes a ``faults.FAULT_KEY`` leaf from the batch dict — the chaos
+    harness's per-grad-leaf NaN/Inf vector, applied by pure select before
+    the reduce half, so an all-zero vector is bit-exact with no injector."""
     cfg = model.cfg
     sched = make_schedule(tcfg.schedule)
     lowering = resolve_lowering(mesh, lowering)
@@ -177,10 +198,28 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
     # it — so both drain while step t+1's forward runs ahead.
     scattered = plan.scattered
 
+    def _guard_state(fin, new_state, old_state):
+        """Roll every stateful component back to its pre-step value on a
+        guard trip (fin 0.0); the step counter still advances so the
+        schedule/data replay stay aligned. Keeping the OLD in-flight
+        buffers means the previous step's (clean) reduction is re-applied
+        on the next clean step — nothing is lost but the poisoned grads.
+        The old VALID_KEY rides along unchanged."""
+        if fin is None:
+            return new_state
+        return TrainState(
+            ts.guard_select(fin, new_state.params, old_state.params),
+            ts.guard_select(fin, new_state.opt, old_state.opt),
+            ts.guard_select(fin, new_state.residuals, old_state.residuals),
+            new_state.step,
+            None if new_state.inflight is None else ts.guard_select(
+                fin, new_state.inflight, old_state.inflight))
+
     def _finish(state, applied, loss, lr, new_res, new_inflight, telem, *,
-                zero1_update):
+                zero1_update, fin=None):
         """Clip + optimizer update + state assembly (lowering-agnostic).
-        zero1_update: callable(params, grads, opt, lr) for this lowering."""
+        zero1_update: callable(params, grads, opt, lr) for this lowering.
+        fin: guard verdict (f32 1/0) or None when the guard is off."""
         applied, gnorm = clip_by_global_norm(applied, grad_clip)
         # Gate applies of INVALID (all-zero) in-flight buffers — first
         # step, and first step after every attach/resume — to lr 0.
@@ -193,7 +232,10 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                                         lr_eff, tcfg.optimizer)
         new_state = TrainState(new_p, new_opt, new_res, state.step + 1,
                                new_inflight)
+        new_state = _guard_state(fin, new_state, state)
         metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr_eff}
+        if fin is not None:
+            metrics["nonfinite"] = 1.0 - fin
         if telemetry:
             metrics["telemetry"] = telem
         return new_state, metrics
@@ -202,6 +244,8 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
         # ----- auto-SPMD: replica axis is a real leading axis (§4.2) -----
         def raw_step(state: TrainState, batch, key):
             lr = sched(state.step)
+            batch = dict(batch)
+            fault_vec = batch.pop(FAULT_KEY) if inject else None
 
             def split_ranks(x):
                 out = x.reshape((dp_total, x.shape[0] // dp_total)
@@ -223,6 +267,11 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                                              *(s if s is not None else ()))))
                 for g, s in zip(leaves_r, leaves_spec)
             ]
+            if fault_vec is not None:
+                leaves_r = ts.inject_nonfinite_leaves(leaves_r, fault_vec)
+            # Guard verdict on the raw (post-injection) grads: the leaves
+            # here are full global arrays, so the check covers every rank.
+            fin = ts.all_finite_leaves(leaves_r) if guard else None
             if staleness == 0:
                 # execute_plan_spmd minus the telemetry drop: same ops,
                 # same order (the staleness=0 == synchronous invariant).
@@ -248,7 +297,10 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                     state.params, applied, state.opt, lr_eff, tcfg, plan)
                 new_state = TrainState(new_p, new_opt, new_res,
                                        state.step + 1, new_inflight)
+                new_state = _guard_state(fin, new_state, state)
                 metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr_eff}
+                if fin is not None:
+                    metrics["nonfinite"] = 1.0 - fin
                 if telemetry:
                     metrics["telemetry"] = telem
                 return new_state, metrics
@@ -257,7 +309,7 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
             return _finish(
                 state, applied, loss, lr, new_res, new_inflight, telem,
                 zero1_update=lambda p, g, o, l: ts._zero1_update_spmd(
-                    p, g, o, l, tcfg, pspecs, dp_total))
+                    p, g, o, l, tcfg, pspecs, dp_total), fin=fin)
 
         return raw_step, shapes, specs, plan
 
@@ -266,6 +318,8 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
 
     def inner(state: TrainState, batch, key, rid):
         lr = sched(state.step)
+        batch = dict(batch)
+        fault_vec = batch.pop(FAULT_KEY) if inject else None
         loss, grads = ts._accumulated_grads(model, state.params, batch,
                                             n_micro)
         loss = jax.lax.pmean(loss, dp_ax[-1])
@@ -275,6 +329,18 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
         data_rank = dp_index % p_data
         pod_rank = dp_index // p_data if pod_axis else None
         leaves_g, gtree = jax.tree.flatten(grads)
+        if fault_vec is not None:
+            leaves_g = ts.inject_nonfinite_leaves(leaves_g, fault_vec)
+        if guard:
+            # Local verdict, then the cross-rank AND via pmin — a plain
+            # lax reduction, so it lowers under both the native and the
+            # psum-emulated collective paths (same as the loss pmean).
+            fin = ts.all_finite_leaves(leaves_g)
+            fin = jax.lax.pmin(fin, dp_ax[-1])
+            if len(dp_ax) > 1:
+                fin = jax.lax.pmin(fin, dp_ax[0])
+        else:
+            fin = None
         coll_kwargs = dict(
             data_axis=data_axis, p_data=p_data, pod_axis=pod_axis,
             p_pod=p_pod, native=native, data_rank=data_rank,
@@ -298,7 +364,10 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                 state.params, chunks, state.opt, lr_eff, tcfg, plan, coll)
             new_state = TrainState(new_p, new_opt, new_res, state.step + 1,
                                    new_inflight)
+            new_state = _guard_state(fin, new_state, state)
             metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr_eff}
+            if fin is not None:
+                metrics["nonfinite"] = 1.0 - fin
             if telemetry:
                 metrics["telemetry"] = telem
             return new_state, metrics
@@ -327,10 +396,11 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
                                     dp_ax, dp_index, dp_total, gather_ctxs)
 
         return _finish(state, applied, loss, lr, new_res, new_inflight,
-                       telem, zero1_update=zero1_update)
+                       telem, zero1_update=zero1_update, fin=fin)
 
     in_state_specs = ts.manual_only_tree(specs)
-    in_batch_specs = ts.manual_only_tree(ts.batch_specs(cfg, mesh))
+    in_batch_specs = ts.manual_only_tree(
+        _pipelined_batch_specs(cfg, mesh, inject))
     rid_spec = P(tuple(dp_ax))
     mapped = compat.shard_map(
         inner, mesh=mesh,
@@ -356,15 +426,17 @@ def _make_raw_step(model: Model, tcfg: TrainConfig, mesh: Mesh,
 def build_pipelined_step(model: Model, tcfg: TrainConfig, mesh: Mesh, *,
                          staleness: int = 1, lowering: Optional[str] = None,
                          donate: bool = True, plan=None,
-                         telemetry: bool = True):
+                         telemetry: bool = True, guard: bool = False,
+                         inject: bool = False):
     """Single pipelined step, jitted. Returns
     (step_fn(state, batch, key) -> (state, metrics), (shapes, specs), plan).
-    ``plan``/``telemetry``: see :func:`_make_raw_step`.
+    ``plan``/``telemetry``/``guard``/``inject``: see :func:`_make_raw_step`.
     """
     raw_step, shapes, specs, plan = _make_raw_step(model, tcfg, mesh,
                                                    staleness, lowering,
-                                                   plan, telemetry)
-    bspecs = ts.batch_specs(model.cfg, mesh)
+                                                   plan, telemetry,
+                                                   guard, inject)
+    bspecs = _pipelined_batch_specs(model.cfg, mesh, inject)
     sh = lambda t: ts.shardings_tree(mesh, t)
     jitted = jax.jit(
         raw_step,
@@ -379,7 +451,8 @@ def build_superstep(model: Model, tcfg: TrainConfig, mesh: Mesh, *,
                     staleness: int = 1, steps: int = 4,
                     lowering: Optional[str] = None, donate: bool = True,
                     unroll: bool = False, plan=None,
-                    telemetry: bool = True):
+                    telemetry: bool = True, guard: bool = False,
+                    inject: bool = False):
     """K-step superstep: one jitted K-step loop over the pipelined step.
     Returns (superstep_fn, (shapes, specs), plan) where
     ``superstep_fn(state, batches, keys) -> (state, metrics)`` takes
@@ -399,8 +472,9 @@ def build_superstep(model: Model, tcfg: TrainConfig, mesh: Mesh, *,
         raise ValueError(f"superstep needs steps >= 1, got {steps}")
     raw_step, shapes, specs, plan = _make_raw_step(model, tcfg, mesh,
                                                    staleness, lowering,
-                                                   plan, telemetry)
-    bspecs = ts.batch_specs(model.cfg, mesh)
+                                                   plan, telemetry,
+                                                   guard, inject)
+    bspecs = _pipelined_batch_specs(model.cfg, mesh, inject)
     stacked_bspecs = jax.tree.map(lambda s: P(None, *s), bspecs,
                                   is_leaf=lambda x: isinstance(x, P))
     sh = lambda t: ts.shardings_tree(mesh, t)

@@ -76,6 +76,29 @@ class ServeConfig:
     slo_tpot_p99: Optional[float] = None         # steps per output token
     slo_queue_delay_p99: Optional[float] = None  # arrival -> admission
     slo_e2e_p99: Optional[float] = None          # arrival -> retirement
+    # graceful degradation under overload (DESIGN.md §12.5): bound on
+    # ARRIVED-but-unadmitted waiters (newest shed first when crossed),
+    # and the queue-wait deadline in decode steps past which a request
+    # is shed instead of admitted. Shedding is OPT-IN: slo_* targets
+    # alone are monitoring declarations (missed targets become health
+    # verdicts, DESIGN.md §10.5), never an admission policy. Once
+    # shedding is enabled — a ``queue_limit`` or an explicit
+    # ``shed_deadline`` — the deadline falls back to ``slo_ttft_p99``:
+    # in this scheduler TTFT == queue delay, so an overdue request is
+    # provably going to miss its TTFT target.
+    queue_limit: Optional[int] = None
+    shed_deadline: Optional[float] = None
+
+    def effective_shed_deadline(self) -> Optional[float]:
+        """The queue-wait bound shedding enforces: the explicit
+        ``shed_deadline`` when set; the declared TTFT target when
+        shedding was enabled via ``queue_limit``; None (shedding off)
+        when neither degradation knob was touched."""
+        if self.shed_deadline is not None:
+            return float(self.shed_deadline)
+        if self.queue_limit is None or self.slo_ttft_p99 is None:
+            return None
+        return float(self.slo_ttft_p99)
 
     def slo_targets(self) -> dict:
         """{latency key -> target}, omitting untargeted dimensions —
@@ -113,11 +136,12 @@ class ContinuousScheduler:
         self.clock = 0.0
         self.completed: dict[int, np.ndarray] = {}
         self.retirements: list[tuple[float, int]] = []   # (clock, rid)
+        self.shed: dict[int, str] = {}                   # rid -> reason
         # rid -> {arrival, admit, prompt_len, retire, tokens} (step units)
         self.lifecycle: dict[int, dict] = {
             r.rid: {"arrival": float(r.arrival), "admit": None,
                     "prompt_len": int(r.prompt.size), "retire": None,
-                    "tokens": 0}
+                    "tokens": 0, "shed": None}
             for r in requests}
 
     # -- state queries -----------------------------------------------------
@@ -157,6 +181,50 @@ class ContinuousScheduler:
                                     max_new=req.max_new_tokens)
         self.lifecycle[req.rid]["admit"] = self.clock
         return self.record(slot_idx, int(first_token))
+
+    # -- load shedding (DESIGN.md §12.5) -----------------------------------
+    def _shed(self, req: Request, reason: str) -> None:
+        self.shed[req.rid] = reason
+        lc = self.lifecycle[req.rid]
+        lc["shed"] = self.clock
+        lc["shed_reason"] = reason
+
+    def shed_overdue(self, deadline: float) -> list[int]:
+        """Shed every arrived-but-unadmitted request whose queue wait
+        exceeds ``deadline`` steps. TTFT == queue delay here, so such a
+        request has already lost its TTFT budget — rejecting it fast is
+        strictly better than serving a guaranteed SLO miss. Returns the
+        shed rids (FIFO order)."""
+        out, keep = [], deque()
+        while self.waiting:
+            r = self.waiting.popleft()
+            if r.arrival <= self.clock and self.clock - r.arrival > deadline:
+                self._shed(r, "deadline")
+                out.append(r.rid)
+            else:
+                keep.append(r)
+        self.waiting = keep
+        return out
+
+    def shed_overflow(self, limit: int) -> list[int]:
+        """Bounded admission queue: keep the oldest ``limit`` ARRIVED
+        waiters, shed the newest beyond the bound (future arrivals in
+        the trace don't count against it). Returns the shed rids."""
+        arrived = [r for r in self.waiting if r.arrival <= self.clock]
+        excess = len(arrived) - int(limit)
+        if excess <= 0:
+            return []
+        victims = {r.rid for r in arrived[len(arrived) - excess:]}
+        out, keep = [], deque()
+        while self.waiting:
+            r = self.waiting.popleft()
+            if r.rid in victims:
+                self._shed(r, "queue_full")
+                out.append(r.rid)
+            else:
+                keep.append(r)
+        self.waiting = keep
+        return out
 
     # -- decode-step bookkeeping -------------------------------------------
     def record(self, slot_idx: int, token: int) -> bool:

@@ -37,6 +37,7 @@ from repro.models.moe import ServeDispatch
 from repro.models.specs import param_specs
 from repro.obs import resolve as _resolve_obs
 from repro.runtime.adapt import AdaptConfig, AdaptiveRuntime
+from repro.runtime.faults import FaultInjectionError
 from repro.serve.engine import _div, _logit_spec, _sh, decode_state_specs
 from repro.serve.scheduler import ContinuousScheduler, Request
 from repro.train.train_step import dp_axes_of, dp_total_of
@@ -147,8 +148,12 @@ class ServeResult:
     # (deterministic on a fixed trace) — {metric: {p50, p90, p99, mean}}
     latency: dict = field(default_factory=dict)
     # HealthEvent verdicts from the end-of-run SLO evaluation (empty
-    # without a ServeConfig carrying targets, or with metrics off)
+    # without a ServeConfig carrying targets, or with metrics off),
+    # plus the backpressure verdict whenever requests were shed
     health: list = field(default_factory=list)
+    # rid -> reason for requests load-shed instead of served
+    # (DESIGN.md §12.5); disjoint from ``outputs``
+    shed: dict = field(default_factory=dict)
 
     @property
     def tok_per_s(self) -> float:
@@ -179,12 +184,19 @@ class ContinuousServeEngine:
                  adapt: Optional[AdaptConfig] = None,
                  net: NetworkParams = DEFAULT_NET,
                  min_cap: int = 4, headroom: float = 2.0, obs=None,
-                 serve_cfg=None):
+                 serve_cfg=None, injector=None, max_tick_retries: int = 3):
         assert dispatch in ("dense", "adaptive"), dispatch
         cfg = model.cfg
         # ServeConfig (serve/scheduler.py) or None: declared SLO targets
-        # evaluated by the health engine at end of each run.
+        # evaluated by the health engine at end of each run, plus the
+        # load-shedding policy (queue_limit / shed_deadline, §12.5).
         self.serve_cfg = serve_cfg
+        # FaultInjector (runtime/faults.py) or None: chaos hook called
+        # once per decode tick BEFORE dispatch. Pre-dispatch failures
+        # are retryable (nothing donated yet); anything past dispatch
+        # aborts cleanly — the decode state buffer is donated.
+        self.injector = injector
+        self.max_tick_retries = int(max_tick_retries)
         if cfg.family == "vlm" or not cfg.is_decoder:
             raise NotImplementedError(
                 f"continuous batching: family {cfg.family!r}")
@@ -192,6 +204,9 @@ class ContinuousServeEngine:
         self.cache_len, self.batch_size = cache_len, batch_size
         self.eos_id = eos_id
         self.obs = _resolve_obs(obs)
+        if injector is not None:
+            injector.bind(
+                registry=self.obs.metrics if self.obs.metrics_on else None)
         self._state_sh = _sh(mesh)(
             decode_state_specs(model, mesh, batch_size, cache_len))
         self._param_sh = _sh(mesh)(param_specs(
@@ -306,6 +321,11 @@ class ContinuousServeEngine:
         t0 = time.perf_counter()
         obs = self.obs
         rec = getattr(obs, "recorder", None)
+        if self.injector is not None:
+            # re-bind per run: the injector (and the obs handle it counts
+            # through) may have been swapped since construction
+            self.injector.bind(
+                registry=obs.metrics if obs.metrics_on else None)
         try:
             self._run_loop(sched, state, next_tok, res, max_steps)
         except Exception as e:
@@ -315,6 +335,7 @@ class ContinuousServeEngine:
                 rec._safe_dump(f"exception:{type(e).__name__}")
             raise
         res.wall_s = time.perf_counter() - t0
+        res.shed = dict(sched.shed)
         stats = sched.latency_stats()
         res.latency = {
             name: {"p50": float(np.percentile(v, 50)),
@@ -343,25 +364,96 @@ class ContinuousServeEngine:
                 m.event("serve/slo_targets", **targets)
                 res.health = HealthMonitor(
                     m, serve_slo=targets, audit=obs.audit).evaluate()
+        if res.shed:
+            # backpressure verdict (DESIGN.md §12.5): shedding is the
+            # degradation policy WORKING, but the operator must see it —
+            # a warn-level health event rides the result and the JSONL
+            from repro.obs.health import HealthEvent, rank_events
+
+            counts: dict = {}
+            for reason in res.shed.values():
+                counts[reason] = counts.get(reason, 0) + 1
+            by = ", ".join(f"{k}={v}" for k, v in sorted(counts.items()))
+            ev = HealthEvent(
+                "warn", "serve_shed", "admission",
+                f"{len(res.shed)} of {len(res.shed) + len(res.outputs)} "
+                f"requests load-shed under backpressure ({by})",
+                float(len(res.shed)), 0.0)
+            res.health = rank_events(list(res.health) + [ev])
+            if obs.metrics_on:
+                obs.metrics.event(
+                    "health/serve_shed", severity=ev.severity,
+                    subject=ev.subject, value=ev.value,
+                    threshold=ev.threshold, message=ev.message)
         return res
+
+    def _shed_pass(self, sched, obs, *, deadline: bool = False,
+                   overflow: bool = False) -> None:
+        """Graceful degradation (DESIGN.md §12.5). ``deadline`` runs
+        BEFORE admission (an overdue request's TTFT budget is spent —
+        it must not take a slot from one that can still meet it);
+        ``overflow`` runs AFTER (free slots absorb the burst first, the
+        bounded queue only sheds what admission could not place).
+        Shedding instead of queueing keeps the served requests' outputs
+        and latencies identical to an unloaded run."""
+        scfg = self.serve_cfg
+        if scfg is None:
+            return
+        shed_now = []
+        limit = scfg.effective_shed_deadline()
+        if deadline and limit is not None:
+            shed_now += [(rid, "deadline")
+                         for rid in sched.shed_overdue(limit)]
+        if overflow and scfg.queue_limit is not None:
+            shed_now += [(rid, "queue_full")
+                         for rid in sched.shed_overflow(scfg.queue_limit)]
+        for rid, reason in shed_now:
+            obs.event("serve/shed", rid=rid, reason=reason,
+                      step=sched.clock)
+            if obs.metrics_on:
+                obs.metrics.counter("serve/shed_requests").inc()
+                obs.metrics.counter(f"serve/shed_{reason}").inc()
+
+    def _chaos_tick(self, tick: int, clock: float, obs) -> None:
+        """Pre-dispatch injection point with a bounded retry: a
+        collective fault raised here touched nothing (the donated
+        decode-state dispatch hasn't happened), so retrying is safe.
+        Injected one-shots clear on the retry; a genuinely stuck fault
+        exhausts ``max_tick_retries`` and aborts with the blackbox."""
+        for attempt in range(1, self.max_tick_retries + 1):
+            try:
+                self.injector.serve_tick(tick)
+                return
+            except FaultInjectionError as e:
+                if attempt >= self.max_tick_retries:
+                    raise
+                if obs.metrics_on:
+                    obs.metrics.counter("serve/retries").inc()
+                obs.event("recovery/serve_retry", step=clock,
+                          attempt=attempt, error=type(e).__name__,
+                          message=str(e))
 
     def _run_loop(self, sched, state, next_tok, res, max_steps: int):
         obs = self.obs
         rec = getattr(obs, "recorder", None)
         with self.mesh:
             while not sched.done and res.decode_steps < max_steps:
+                self._shed_pass(sched, obs, deadline=True)
                 for slot_idx, req in sched.admit_ready():
                     with obs.span("serve/admit", rid=req.rid, slot=slot_idx,
                                   prompt_len=int(req.prompt.size)):
                         state, first = self._admit(state, slot_idx, req)
                     sched.install(slot_idx, req, first)
                     res.tokens += 1
+                self._shed_pass(sched, obs, overflow=True)
                 active = sched.active_mask
                 n_active = int(active.sum())
                 if n_active == 0:
                     sched.skip_to_next_arrival()
                     continue
                 self._occupancy_guard(n_active, sched.clock)
+                if self.injector is not None:
+                    self._chaos_tick(res.decode_steps, sched.clock, obs)
                 for i, s in enumerate(sched.slots):
                     if s is not None:
                         next_tok[i] = s.next_token

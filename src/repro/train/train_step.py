@@ -240,6 +240,53 @@ def batch_specs(cfg: ModelConfig, mesh: Mesh) -> dict:
 
 
 # --------------------------------------------------------------------------
+# Guarded-step helpers (DESIGN.md §12): in-graph all-finite check over the
+# raw gradient leaves, plus the chaos harness's in-graph injection. Shared
+# by the pipelined step body so the guard's semantics cannot drift between
+# lowerings.
+# --------------------------------------------------------------------------
+
+def all_finite_leaves(leaves) -> jax.Array:
+    """f32 scalar: 1.0 iff every element of every leaf is finite. Checked
+    on the RAW grads (before the reduce half) — in a staleness-1 pipeline
+    a NaN entering reduce poisons residuals the same step, while the
+    grad-norm of the APPLIED (stale, clean) buffers stays finite until
+    the next step, so any later check point misses the corruption."""
+    fin = jnp.ones((), jnp.float32)
+    for g in leaves:
+        fin = fin * jnp.all(jnp.isfinite(g)).astype(jnp.float32)
+    return fin
+
+
+def inject_nonfinite_leaves(leaves, fault_vec):
+    """Overwrite grad leaf i with NaN (flag 1) or Inf (flag 2) where the
+    (n_leaves,) ``fault_vec`` is nonzero. A pure SELECT (``jnp.where``),
+    never additive — ``g + flag * nan`` would be NaN even at flag 0. With
+    an all-zero vector every where picks the clean branch, so a bound but
+    idle injector is bit-exact with no injector at all."""
+    out = []
+    for i, g in enumerate(leaves):
+        flag = fault_vec[i]
+        bad = jnp.where(flag > 1.5, jnp.inf, jnp.nan).astype(g.dtype)
+        out.append(jnp.where(flag > 0.5, bad, g))
+    return out
+
+
+def guard_select(fin, new_tree, old_tree):
+    """Elementwise select between the stepped and the pre-step tree on
+    the guard verdict: ``fin`` 1.0 keeps ``new_tree`` bit-exactly (a
+    select, so unselected NaNs never propagate), 0.0 rolls every leaf
+    back to ``old_tree`` — the EF-preservation invariant: a tripped step
+    leaves params, optimizer moments, residuals, and in-flight buffers
+    exactly as they were."""
+    if fin is None:
+        return new_tree
+    pred = fin > 0.5
+    return jax.tree.map(lambda a, b: jnp.where(pred, a, b),
+                        new_tree, old_tree)
+
+
+# --------------------------------------------------------------------------
 # Gradient computation with microbatch accumulation
 # --------------------------------------------------------------------------
 

@@ -88,10 +88,12 @@ class Trainer:
 
         dp_total = dp_total_of(self.mesh)
         my_layout = ckpt.opt_layout_of(self.tcfg)
-        meta = ckpt.load_meta(self.ckpt_dir)
+        step = self._verified_step()
+        meta = ckpt.load_meta(self.ckpt_dir, step)
         ck_layout = meta.get("opt_layout", my_layout)
         if ck_layout == my_layout:
-            return ckpt.restore(self.ckpt_dir, self.state, dp_total=dp_total)
+            return ckpt.restore(self.ckpt_dir, self.state, dp_total=dp_total,
+                                step=step, verify=True)
         other_mode = {"zero_scattered": "scattered",
                       "zero1_leaf": "replicated"}.get(ck_layout)
         if other_mode is None or my_layout == "full":
@@ -104,11 +106,30 @@ class Trainer:
         other_shapes, _, _ = ts.state_shapes(self.model, other_tcfg,
                                              self.mesh, return_plan=True)
         restored = ckpt.restore(self.ckpt_dir, other_shapes,
-                                dp_total=dp_total)
+                                dp_total=dp_total, step=step, verify=True)
         _, _, plan = ts.state_shapes(self.model, self.tcfg, self.mesh,
                                      return_plan=True)
         return ckpt.convert_opt_layout(restored, plan, source=ck_layout,
                                        target=my_layout)
+
+    def _verified_step(self) -> int:
+        """The restore target under the integrity policy (DESIGN.md
+        §12.4): the newest checkpoint that passes CRC verification.
+        Falling back past a corrupt newest checkpoint is a
+        ``recovery/ckpt_fallback`` event; nothing verifying is a clean
+        abort (CheckpointCorrupt)."""
+        newest = ckpt.latest_step(self.ckpt_dir)
+        step = ckpt.latest_valid_step(self.ckpt_dir)
+        if step is None:
+            raise ckpt.CheckpointCorrupt(
+                f"no checkpoint under {self.ckpt_dir} passes CRC "
+                "verification (retention window exhausted)")
+        if step != newest:
+            self.obs.event("recovery/ckpt_fallback", step=step,
+                           corrupt_step=newest)
+            if self.obs.metrics_on:
+                self.obs.metrics.counter("recovery/ckpt_fallbacks").inc()
+        return step
 
     def resume_elastic(self, new_mesh):
         """Elastic restart onto a different mesh (pod count change)."""
@@ -171,7 +192,8 @@ class Trainer:
     def run_pipelined(self, num_steps: int, *, staleness: int = 1,
                       superstep: int = 4, depth: int = 2,
                       prefetch: int = 2, unroll: bool = False,
-                      adapt=False) -> TrainerLog:
+                      adapt=False, guard: bool = True, injector=None,
+                      recovery=None) -> TrainerLog:
         """Train for num_steps (absolute) with the pipelined runtime:
         K-step scanned supersteps (stale-gradient overlap, ``staleness``
         in {0, 1}) dispatched ``depth`` deep by the async host driver,
@@ -185,7 +207,18 @@ class Trainer:
         densities feed the calibrated cost model, and accepted replans
         swap the compiled superstep at drain barriers. Checkpoints then
         carry the active plan signature + algorithm map, so a restart
-        resumes the ADAPTED plan."""
+        resumes the ADAPTED plan.
+
+        Fault tolerance (DESIGN.md §12): ``guard=True`` (default) builds
+        the GUARDED step — non-finite gradients skip the apply with EF
+        residuals and optimizer state preserved exactly, and escalate to
+        a checkpoint rewind after N consecutive trips. ``recovery`` (a
+        ``runtime.faults.RecoveryConfig``) bounds the driver's restore
+        loop with per-fault-class retry budgets + jittered backoff.
+        ``injector`` (a ``runtime.faults.FaultInjector``) runs the chaos
+        plan against this run: grad-leaf NaN/Inf via the batch-carried
+        fault vector, prefetch stalls, collective raises, stragglers,
+        post-save checkpoint corruption, SIGTERM."""
         from repro.data.pipeline import synthetic_batch
         from repro.runtime import adapt as rt_adapt
         from repro.runtime import driver as rt_driver
@@ -193,6 +226,12 @@ class Trainer:
 
         if self.state is None:
             self.init_or_resume()
+        inject = injector is not None
+        if inject:
+            # the injector's grad-flag vector is indexed by grad leaf
+            # (== param leaf) order — the same flatten the step body uses
+            injector.bind(
+                n_leaves=len(jax.tree_util.tree_leaves(self.state.params)))
 
         runtime = None
         plan0 = None
@@ -218,7 +257,7 @@ class Trainer:
                 self.model, self.tcfg, self.mesh, plan=plan0,
                 net=self._calibrated_net(acfg), cfg=acfg,
                 staleness=staleness, superstep=superstep, unroll=unroll,
-                obs=self.obs)
+                obs=self.obs, guard=guard, inject=inject)
             self.last_adapt_runtime = runtime
             fn, plan = runtime.current_fn(), runtime.current_plan
         else:
@@ -229,11 +268,12 @@ class Trainer:
             if superstep > 1:
                 fn, _, plan = rt_pipeline.build_superstep(
                     self.model, self.tcfg, self.mesh, staleness=staleness,
-                    steps=superstep, unroll=unroll, telemetry=telemetry)
+                    steps=superstep, unroll=unroll, telemetry=telemetry,
+                    guard=guard, inject=inject)
             else:
                 fn, _, plan = rt_pipeline.build_pipelined_step(
                     self.model, self.tcfg, self.mesh, staleness=staleness,
-                    telemetry=telemetry)
+                    telemetry=telemetry, guard=guard, inject=inject)
             if telemetry:
                 runtime = rt_adapt.TelemetryObserver(self.obs)
         state = self.state
@@ -255,12 +295,17 @@ class Trainer:
             ckpt.save(self.ckpt_dir, s._replace(inflight=None),
                       dp_total=dp_total, extra_meta=extra,
                       opt_layout=ckpt.opt_layout_of(self.tcfg))
+            if inject:
+                # chaos hook: a scheduled ckpt_corrupt spec flips bytes
+                # in the save that just landed; the CRC fallback below
+                # is what must survive it
+                injector.corrupt_checkpoint(self.ckpt_dir, int(s.step))
 
         def restore_fn():
             restored = ckpt.restore(
                 self.ckpt_dir,
                 self._abstract_like()._replace(inflight=None),
-                dp_total=dp_total)
+                dp_total=dp_total, step=self._verified_step(), verify=True)
             if staleness:
                 restored = rt_pipeline.attach_inflight(restored, plan,
                                                        self.mesh)
@@ -317,6 +362,7 @@ class Trainer:
                 adapt=runtime,
                 obs=self.obs, phase_attr=phase_attr,
                 health=health,
+                recovery=recovery, injector=injector,
             )
         self.state = state
         self.last_plan = getattr(runtime, "current_plan", None) or plan

@@ -1,0 +1,807 @@
+"""Fault-tolerant runtime (DESIGN.md §12): chaos matrix + recovery.
+
+* the chaos harness is deterministic and one-shot (a rewound replay runs
+  clean — the property every bit-equal recovery assertion leans on);
+* the guarded step skips the apply on non-finite grads with EF residuals,
+  optimizer state and in-flight buffers preserved BIT-EXACTLY;
+* the driver's retry/backoff supervisor bounds restores per fault class
+  and escalates to a clean abort (parseable blackbox) when spent;
+* recovery is bit-reproducible: after a skip or a checkpoint rewind the
+  retired losses and final state equal the uninjected run's exactly;
+* checkpoint integrity: CRC32 per array, corrupt saves are detected and
+  the restore falls back to the newest VALID step;
+* the serve engine retries pre-dispatch faults (token-identical output),
+  aborts cleanly on post-dispatch-unsafe ones, and sheds load gracefully
+  (bounded queue + TTFT deadline) with full accounting.
+"""
+import json
+import os
+import signal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs as obs_mod
+from repro.compat import make_mesh
+from repro.core.compressor import SyncConfig
+from repro.data.pipeline import DataConfig, synthetic_batch
+from repro.models.config import ModelConfig
+from repro.models.model import build_model
+from repro.obs.health import HealthMonitor
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.recorder import FlightRecorder
+from repro.optim.optimizers import OptimizerConfig
+from repro.optim.schedule import ScheduleConfig
+from repro.runtime import driver as rt_driver
+from repro.runtime import pipeline as rt_pipeline
+from repro.runtime.adapt import AdaptConfig, AdaptiveController
+from repro.runtime.faults import (
+    FAULT_KEY,
+    FaultInjectionError,
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    NonFiniteEscalation,
+    PrefetchStalled,
+    RecoveryConfig,
+    RetryBudgetExhausted,
+    RetrySupervisor,
+    classify_fault,
+)
+from repro.serve.scheduler import ContinuousScheduler, Request, ServeConfig
+from repro.serve.sparse_decode import ContinuousServeEngine
+from repro.train import checkpoint as ckpt
+from repro.train.state import TrainConfig
+from repro.train.train_step import init_state
+
+MODEL_CFG = ModelConfig(name="ft", family="dense", num_layers=2, d_model=64,
+                        num_heads=4, num_kv_heads=2, d_ff=128, vocab_size=256,
+                        dtype=jnp.float32, param_dtype=jnp.float32,
+                        max_seq_len=64)
+SYNC = SyncConfig(mode="sparcml", k_per_bucket=8, bucket_size=128,
+                  algorithm="dsar_split_allgather", min_sparse_size=1024,
+                  impl="ref", fusion_bucket_bytes=1 << 18)
+TCFG = TrainConfig(sync=SYNC, optimizer=OptimizerConfig(),
+                   schedule=ScheduleConfig(peak_lr=3e-3, warmup_steps=5,
+                                           total_steps=100),
+                   zero1=True)
+DCFG = DataConfig(global_batch=8, seq_len=32, vocab_size=256)
+KEY = jax.random.PRNGKey(0)
+N = 8          # driver-run length of every matrix entry
+CKPT_EVERY = 2
+# fast supervisor for tests: real backoff policy, negligible sleeps
+FAST_RECOVERY = RecoveryConfig(backoff_base_s=0.001, backoff_max_s=0.005)
+
+
+@pytest.fixture(scope="module")
+def mesh8x1():
+    return make_mesh((8, 1), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_model(MODEL_CFG)
+
+
+@pytest.fixture(scope="module")
+def guarded_fn(mesh8x1, model):
+    """One guarded+injectable pipelined step (staleness=0: no in-flight
+    buffers, so checkpoint rewinds are loss-free and bit-reproducible),
+    shared by the whole driver matrix."""
+    with mesh8x1:
+        fn, _, plan = rt_pipeline.build_pipelined_step(
+            model, TCFG, mesh8x1, staleness=0, guard=True, inject=True,
+            telemetry=False)
+    return fn, plan
+
+
+def _obs_with_metrics(recorder_path=None):
+    ob = obs_mod.configure(metrics=True, set_as_default=False)
+    if recorder_path is not None:
+        ob.recorder = FlightRecorder(str(recorder_path), obs=ob)
+    return ob
+
+
+def _drive(fn, mesh, model, *, injector, obs, ckpt_dir=None, recovery=None,
+           num_steps=N, timeout_s=60.0):
+    """Run the shared guarded step under the async driver with the
+    standard checkpoint wiring (CRC-verified fallback restore)."""
+    ckpt_fn = restore_fn = None
+    if ckpt_dir is not None:
+        def ckpt_fn(s):
+            ckpt.save(str(ckpt_dir), s, dp_total=8,
+                      opt_layout=ckpt.opt_layout_of(TCFG))
+
+        def restore_fn():
+            like, _ = init_state(model, TCFG, mesh)
+            return ckpt.restore(str(ckpt_dir), like, dp_total=8,
+                                step=ckpt.latest_valid_step(str(ckpt_dir)),
+                                verify=True)
+
+    with mesh:
+        state, _ = init_state(model, TCFG, mesh)
+        # the driver binds the registry; the grad-leaf count is the
+        # caller's to provide (the Trainer does the same)
+        injector.bind(n_leaves=len(jax.tree.leaves(state.params)))
+        state, log = rt_driver.run_pipelined(
+            fn, state, start_step=0, num_steps=num_steps,
+            batch_fn=lambda s: synthetic_batch(DCFG, s),
+            key_fn=lambda s: jax.random.fold_in(KEY, s),
+            cfg=rt_driver.DriverConfig(depth=1, prefetch=1,
+                                       prefetch_timeout_s=timeout_s),
+            ckpt_every=CKPT_EVERY if ckpt_dir else None,
+            ckpt_fn=ckpt_fn, restore_fn=restore_fn,
+            obs=obs, recovery=recovery, injector=injector)
+    return state, log
+
+
+def _state_leaves(state):
+    return {
+        "params": [np.asarray(x) for x in jax.tree.leaves(state.params)],
+        "opt": [np.asarray(x) for x in jax.tree.leaves(state.opt)],
+        "residuals": {k: np.asarray(v) for k, v in state.residuals.items()},
+    }
+
+
+def _assert_leaves_equal(a, b):
+    for x, y in zip(a["params"], b["params"]):
+        np.testing.assert_array_equal(x, y)
+    for x, y in zip(a["opt"], b["opt"]):
+        np.testing.assert_array_equal(x, y)
+    for k in a["residuals"]:
+        np.testing.assert_array_equal(a["residuals"][k], b["residuals"][k])
+
+
+@pytest.fixture(scope="module")
+def clean_run(guarded_fn, mesh8x1, model, tmp_path_factory):
+    """The uninjected reference: same compiled step, same checkpoint
+    wiring, an EMPTY fault plan (hooks execute, nothing fires) — every
+    bit-equality claim in the matrix compares against this."""
+    fn, _ = guarded_fn
+    state, log = _drive(fn, mesh8x1, model,
+                        injector=FaultInjector(FaultPlan()),
+                        obs=_obs_with_metrics(),
+                        ckpt_dir=tmp_path_factory.mktemp("clean_ck"))
+    return {"losses": [float(x) for x in log.losses],
+            "state": _state_leaves(state)}
+
+
+# --------------------------------------------------------------------------
+# unit: plans, classification, supervisor, scheduler shedding
+# --------------------------------------------------------------------------
+
+def test_fault_spec_and_chaos_plan_deterministic():
+    with pytest.raises(ValueError):
+        FaultSpec(kind="nope", step=1)
+    with pytest.raises(ValueError):
+        FaultSpec(kind="nonfinite", step=1, mode="weird")
+    with pytest.raises(ValueError):
+        FaultSpec(kind="stall", step=1, repeat=0)
+    a = FaultPlan.chaos(7, 64, ckpt_every=8)
+    b = FaultPlan.chaos(7, 64, ckpt_every=8)
+    assert a == b                       # same seed -> identical schedule
+    assert a != FaultPlan.chaos(8, 64, ckpt_every=8)
+    kinds = [s.kind for s in a.specs]
+    for k in ("nonfinite", "straggler", "stall", "collective"):
+        assert k in kinds
+    assert "ckpt_corrupt" in kinds      # the ckpt_every pair rode along
+    assert all(2 <= s.step <= 62 for s in a.specs)
+    assert len(a.by_kind("stall")) == 1
+
+
+def test_classify_fault_taxonomy():
+    assert classify_fault(NonFiniteEscalation("x")) == "nonfinite"
+    assert classify_fault(PrefetchStalled("x")) == "stall"
+    assert classify_fault(ckpt.CheckpointCorrupt("x")) == "ckpt_corrupt"
+    assert classify_fault(OSError("x")) == "ckpt_corrupt"
+    assert classify_fault(FaultInjectionError("x")) == "collective"
+    assert classify_fault(KeyboardInterrupt()) == "sigterm"
+    assert classify_fault(RuntimeError("?")) == "collective"  # default
+
+
+def test_retry_supervisor_budget_and_backoff():
+    reg = MetricsRegistry(enabled=True)
+    cfg = RecoveryConfig(budgets={"collective": 2, "default": 1},
+                         backoff_base_s=0.1, backoff_max_s=0.3, jitter=0.5)
+    sup = RetrySupervisor(cfg, registry=reg)
+    d1 = sup.on_failure(FaultInjectionError("a"), step=3)
+    d2 = sup.on_failure(FaultInjectionError("b"), step=4)
+    # exponential in the attempt count, jitter-bounded
+    assert 0.1 <= d1 <= 0.1 * 1.5 and 0.2 <= d2 <= 0.2 * 1.5
+    with pytest.raises(RetryBudgetExhausted) as ei:
+        sup.on_failure(FaultInjectionError("c"), step=5)
+    assert isinstance(ei.value.__cause__, FaultInjectionError)
+    # distinct classes draw on distinct budgets
+    sup.on_failure(PrefetchStalled("s"), step=6)
+    assert reg.counter("recovery/retries").value == 3
+    assert reg.counter("recovery/retries_collective").value == 2
+    assert reg.counter("recovery/retries_stall").value == 1
+    assert reg.counter("recovery/aborts").value == 1
+    assert len(reg.events_named("recovery/retry")) == 3
+    assert len(reg.events_named("recovery/abort")) == 1
+    # backoff is capped at backoff_max_s x (1 + jitter)
+    for _ in range(10):
+        sup.attempts["stall"] += 1
+    assert sup.backoff_s("stall") <= 0.3 * 1.5
+
+
+def test_injector_one_shot_and_batch_wrap():
+    reg = MetricsRegistry(enabled=True)
+    plan = FaultPlan(specs=(
+        FaultSpec(kind="nonfinite", step=2, mode="inf", leaves=(0, 2),
+                  repeat=2),
+        FaultSpec(kind="stall", step=1, duration_s=0.0),
+    ))
+    inj = FaultInjector(plan).bind(n_leaves=4, registry=reg)
+    assert inj.grad_flag(0).tolist() == [0, 0, 0, 0]
+    assert inj.grad_flag(2).tolist() == [2, 0, 2, 0]   # inf -> flag 2
+    assert inj.grad_flag(3).tolist() == [2, 0, 2, 0]   # repeat covers 3
+    assert inj.grad_flag(4).tolist() == [0, 0, 0, 0]   # exhausted
+    assert inj.grad_flag(2).tolist() == [0, 0, 0, 0]   # one-shot: spent
+    wrapped = inj.wrap_batch_fn(lambda s: {"tokens": np.zeros(2)})
+    b = wrapped(1)
+    assert FAULT_KEY in b and b[FAULT_KEY].shape == (4,)
+    assert inj.fired_total == 3        # 2 nonfinite repeats + 1 stall
+    assert reg.counter("faults/injected_nonfinite").value == 2
+    assert reg.counter("faults/injected_stall").value == 1
+
+
+def test_refund_undispatched_nonfinite_refires_after_rewind():
+    # poison consumed at PRODUCTION (prefetch) for a step that never
+    # dispatched dies with the queue on restore — refund re-arms it;
+    # poison below the frontier was dispatched and stays spent
+    plan = FaultPlan(specs=(FaultSpec(kind="nonfinite", step=6),
+                            FaultSpec(kind="nonfinite", step=2),
+                            FaultSpec(kind="stall", step=6,
+                                      duration_s=0.0)))
+    inj = FaultInjector(plan).bind(n_leaves=2)
+    for s in range(8):                       # prefetch produced 0..7
+        inj.grad_flag(s)
+        inj._take("stall", s)
+    assert inj.fired_total == 3
+    # failure while dispatch frontier was at 4: steps >= 4 undispatched
+    assert inj.refund_undispatched(4) == 1   # nonfinite@6 only, NOT stall
+    assert inj.grad_flag(2).tolist() == [0, 0]       # dispatched: spent
+    assert inj.grad_flag(6).tolist() == [1, 1]       # replay re-injects
+    assert inj.refund_undispatched(8) == 0   # all below frontier: spent
+
+
+def test_before_dispatch_covers_superstep_range():
+    # a K-step superstep dispatches ONCE for steps [s, s+K): specs at
+    # non-boundary steps (21 with K=4 dispatching at 20) must still fire
+    plan = FaultPlan(specs=(FaultSpec(kind="collective", step=21),
+                            FaultSpec(kind="collective", step=25)))
+    inj = FaultInjector(plan)
+    inj.before_dispatch(16, 4)                     # covers 16..19: clean
+    with pytest.raises(FaultInjectionError, match="step 21"):
+        inj.before_dispatch(20, 4)
+    inj.before_dispatch(20, 4)                     # one-shot: replay clean
+    with pytest.raises(FaultInjectionError, match="step 25"):
+        inj.before_dispatch(25)                    # default unit width 1
+    assert inj.fired_total == 2
+
+
+def test_scheduler_shed_accounting():
+    def reqs(n, arrival=0.0):
+        return [Request(rid=i, prompt=np.ones(3, np.int32),
+                        max_new_tokens=4, arrival=arrival) for i in range(n)]
+
+    s = ContinuousScheduler(2, reqs(6))
+    s.clock = 5.0
+    assert s.shed_overdue(3.0) == [0, 1, 2, 3, 4, 5]
+    assert all(s.lifecycle[r]["shed"] == 5.0 for r in range(6))
+    assert s.done and not s.completed
+    assert s.latency_stats()["rids"].size == 0     # shed != retired
+
+    s2 = ContinuousScheduler(2, reqs(6))
+    assert s2.shed_overflow(2) == [2, 3, 4, 5]     # newest beyond bound
+    assert [r.rid for r in s2.waiting] == [0, 1]
+    assert s2.shed == {2: "queue_full", 3: "queue_full",
+                       4: "queue_full", 5: "queue_full"}
+    # future arrivals never count against the bound
+    s3 = ContinuousScheduler(2, reqs(2) + reqs(4, arrival=99.0)[2:])
+    assert s3.shed_overflow(1) == [1]
+
+
+def test_serve_config_shed_deadline_defaults_to_ttft():
+    # slo_* alone is a MONITORING declaration, never an admission
+    # policy: shedding stays off until a degradation knob is touched
+    assert ServeConfig().effective_shed_deadline() is None
+    assert ServeConfig(slo_ttft_p99=4.0).effective_shed_deadline() is None
+    # once enabled via queue_limit, the deadline defaults to the TTFT
+    # target (TTFT == queue delay in this scheduler)
+    assert ServeConfig(slo_ttft_p99=4.0,
+                       queue_limit=8).effective_shed_deadline() == 4.0
+    assert ServeConfig(queue_limit=8).effective_shed_deadline() is None
+    # an explicit shed_deadline enables deadline shedding on its own
+    assert ServeConfig(shed_deadline=9.0).effective_shed_deadline() == 9.0
+    assert ServeConfig(slo_ttft_p99=4.0,
+                       shed_deadline=9.0).effective_shed_deadline() == 9.0
+
+
+def test_health_rule_nonfinite_fires_on_new_trips():
+    reg = MetricsRegistry(enabled=True)
+    mon = HealthMonitor(reg)
+    assert mon.evaluate() == []
+    reg.counter("guard/nonfinite_trips").inc(2)
+    evs = mon.evaluate()
+    assert [(e.severity, e.rule, e.subject) for e in evs] == \
+        [("critical", "nonfinite", "grads")]
+    assert evs[0].value == 2.0
+    assert reg.events_named("health/nonfinite")    # mirrored to registry
+    assert mon.evaluate() == []                    # no NEW trips
+    reg.counter("guard/nonfinite_trips").inc()
+    assert mon.evaluate()[0].value == 1.0
+
+
+def test_controller_fault_demotion_holds_dense(guarded_fn):
+    _, plan = guarded_fn
+    reg = MetricsRegistry(enabled=True)
+    ctrl = AdaptiveController(plan, cfg=AdaptConfig(demote_hold=2),
+                              obs=obs_mod.Observability(metrics=reg))
+    forced = ctrl.demote()
+    assert forced is not None
+    assert set(forced.algorithms().values()) == {"dense"}
+    assert forced.version > plan.version
+    assert reg.events_named("adapt/fault_demotion")
+    assert all(h == 2 for h in ctrl._demoted.values())
+    # already dense: the hold refreshes but nothing is re-forced
+    assert ctrl.demote() is None
+    assert all(h == 2 for h in ctrl._demoted.values())
+
+
+# --------------------------------------------------------------------------
+# checkpoint integrity (§12.4)
+# --------------------------------------------------------------------------
+
+def test_checkpoint_crc_detects_corruption_and_falls_back(
+        mesh8x1, model, tmp_path):
+    d = str(tmp_path / "ck")
+    with mesh8x1:
+        state, _ = init_state(model, TCFG, mesh8x1)
+    ckpt.save(d, state, dp_total=8, opt_layout=ckpt.opt_layout_of(TCFG))
+    s1 = state._replace(step=state.step + 1)
+    ckpt.save(d, s1, dp_total=8, opt_layout=ckpt.opt_layout_of(TCFG))
+    assert ckpt.verify_checkpoint(d, 0) and ckpt.verify_checkpoint(d, 1)
+    assert ckpt.latest_valid_step(d) == 1
+
+    inj = FaultInjector(FaultPlan.single("ckpt_corrupt", 1))
+    path = inj.corrupt_checkpoint(d, 1)
+    assert path is not None and path.endswith("arrays.npz")
+    assert not ckpt.verify_checkpoint(d, 1)
+    assert ckpt.verify_checkpoint(d, 0)
+    assert ckpt.latest_valid_step(d) == 0          # newest VALID wins
+    with pytest.raises(ckpt.CheckpointCorrupt):
+        ckpt.restore(d, state, dp_total=8, step=1, verify=True)
+    restored = ckpt.restore(d, state, dp_total=8, step=0, verify=True)
+    assert int(restored.step) == 0
+
+
+# --------------------------------------------------------------------------
+# driver matrix: {nonfinite, straggler, stall, collective, ckpt, sigterm}
+# --------------------------------------------------------------------------
+
+def test_driver_nonfinite_skip_preserves_prefix(guarded_fn, mesh8x1, model,
+                                                clean_run):
+    """A single poisoned step is SKIPPED: losses through the faulted step
+    are bit-equal to the clean run (the forward never sees the poison),
+    and divergence starts only where the clean run applied the gradient
+    the guard discarded."""
+    fn, _ = guarded_fn
+    obs = _obs_with_metrics()
+    inj = FaultInjector(FaultPlan.single("nonfinite", 3))
+    state, log = _drive(fn, mesh8x1, model, injector=inj, obs=obs)
+    assert int(state.step) == N
+    clean = clean_run["losses"]
+    assert list(log.losses[:4]) == clean[:4]       # bit-equal incl. step 3
+    assert list(log.losses[4:]) != clean[4:]       # skipped apply diverges
+    assert all(np.isfinite(x) for x in log.losses)
+    assert obs.metrics.counter("guard/nonfinite_trips").value == 1
+    assert obs.metrics.counter("faults/injected_nonfinite").value == 1
+    evs = obs.metrics.events_named("health/nonfinite")
+    assert len(evs) == 1 and evs[0]["step"] == 3
+
+
+def test_driver_nonfinite_escalates_to_bit_equal_rewind(
+        guarded_fn, mesh8x1, model, clean_run, tmp_path):
+    """N consecutive trips rewind to the last-good checkpoint; the
+    replay runs clean (one-shot injection), so the retired tail and the
+    FINAL STATE are bit-equal to the uninjected run."""
+    fn, _ = guarded_fn
+    obs = _obs_with_metrics()
+    inj = FaultInjector(FaultPlan(
+        specs=(FaultSpec(kind="nonfinite", step=4, repeat=2),)))
+    rec_cfg = RecoveryConfig(max_consecutive_nonfinite=2,
+                             backoff_base_s=0.001, backoff_max_s=0.005)
+    state, log = _drive(fn, mesh8x1, model, injector=inj, obs=obs,
+                        ckpt_dir=tmp_path / "ck", recovery=rec_cfg)
+    assert int(state.step) == N
+    assert log.restarts == 1
+    _assert_leaves_equal(_state_leaves(state), clean_run["state"])
+    # replayed tail (steps 4..7 after the rewind) bit-equal clean losses
+    assert list(log.losses[-4:]) == clean_run["losses"][4:]
+    assert obs.metrics.counter("guard/nonfinite_trips").value == 2
+    assert obs.metrics.counter("recovery/retries_nonfinite").value == 1
+    assert obs.metrics.events_named("recovery/retry")
+    assert obs.metrics.events_named("driver/restart")
+
+
+def test_driver_collective_retry_and_budget_abort(
+        guarded_fn, mesh8x1, model, clean_run, tmp_path):
+    fn, _ = guarded_fn
+    # recoverable: one raise, budget 3 -> restore + clean replay
+    obs = _obs_with_metrics()
+    inj = FaultInjector(FaultPlan.single("collective", 3))
+    state, log = _drive(fn, mesh8x1, model, injector=inj, obs=obs,
+                        ckpt_dir=tmp_path / "ok", recovery=FAST_RECOVERY)
+    assert int(state.step) == N and log.restarts == 1
+    _assert_leaves_equal(_state_leaves(state), clean_run["state"])
+    assert list(log.losses[-5:]) == clean_run["losses"][3:]
+    assert obs.metrics.counter("recovery/retries_collective").value == 1
+
+    # exhausted budget: clean abort AFTER the blackbox dump
+    bb = tmp_path / "bb.json"
+    obs2 = _obs_with_metrics(recorder_path=bb)
+    inj2 = FaultInjector(FaultPlan.single("collective", 3))
+    zero = RecoveryConfig(budgets={"collective": 0, "default": 0},
+                          backoff_base_s=0.001)
+    with pytest.raises(RetryBudgetExhausted) as ei:
+        _drive(fn, mesh8x1, model, injector=inj2, obs=obs2,
+               ckpt_dir=tmp_path / "abort", recovery=zero)
+    assert isinstance(ei.value.__cause__, FaultInjectionError)
+    doc = json.load(open(bb))
+    assert doc["kind"] == "blackbox"
+    assert doc["reason"] == "exception:FaultInjectionError"
+    assert obs2.metrics.counter("recovery/aborts").value == 1
+
+
+def test_driver_stall_bounded_timeout_recovers(
+        guarded_fn, mesh8x1, model, clean_run, tmp_path):
+    """A stalled data pipeline trips the bounded queue.get timeout
+    instead of hanging the dispatch loop forever; the stall budget
+    restores and the replay completes bit-equal."""
+    fn, _ = guarded_fn
+    obs = _obs_with_metrics()
+    # The stall must outlast (driver reaches take(2)) + the take timeout
+    # to be detected — real step times here are ~1s, so a short stall
+    # finishes inside the poll window and the run sails through. 6s vs a
+    # 0.4s timeout makes detection deterministic; the sleeping producer
+    # is a daemon thread, so the restart does not wait out the full nap.
+    inj = FaultInjector(FaultPlan.single("stall", 2, duration_s=6.0))
+    state, log = _drive(fn, mesh8x1, model, injector=inj, obs=obs,
+                        ckpt_dir=tmp_path / "ck", recovery=FAST_RECOVERY,
+                        timeout_s=0.4)
+    assert int(state.step) == N and log.restarts == 1
+    _assert_leaves_equal(_state_leaves(state), clean_run["state"])
+    assert obs.metrics.counter("faults/injected_stall").value == 1
+    assert obs.metrics.counter("recovery/retries_stall").value == 1
+
+
+def test_driver_prefetch_thread_exception_propagates(
+        guarded_fn, mesh8x1, model, clean_run, tmp_path):
+    """A batch_fn crash inside the prefetch thread surfaces on the
+    driver thread as PrefetchStalled (cause attached), lands in the
+    blackbox notes, and recovers on the stall budget."""
+    fn, _ = guarded_fn
+    bb = tmp_path / "bb.json"
+    obs = _obs_with_metrics(recorder_path=bb)
+    boom = {"armed": True}
+
+    def flaky_batch(s):
+        if s == 3 and boom.pop("armed", False):
+            raise ValueError("synthetic pipeline crash")
+        return synthetic_batch(DCFG, s)
+
+    inj = FaultInjector(FaultPlan())
+    with mesh8x1:
+        state, _ = init_state(model, TCFG, mesh8x1)
+        inj.bind(n_leaves=len(jax.tree.leaves(state.params)))
+
+        def restore_fn():
+            like, _ = init_state(model, TCFG, mesh8x1)
+            return ckpt.restore(str(tmp_path / "ck"), like, dp_total=8,
+                                step=ckpt.latest_valid_step(
+                                    str(tmp_path / "ck")), verify=True)
+
+        state, log = rt_driver.run_pipelined(
+            fn, state, start_step=0, num_steps=N,
+            batch_fn=flaky_batch,
+            key_fn=lambda s: jax.random.fold_in(KEY, s),
+            cfg=rt_driver.DriverConfig(depth=1, prefetch=1),
+            ckpt_every=CKPT_EVERY,
+            ckpt_fn=lambda s: ckpt.save(str(tmp_path / "ck"), s, dp_total=8,
+                                        opt_layout=ckpt.opt_layout_of(TCFG)),
+            restore_fn=restore_fn, obs=obs, recovery=FAST_RECOVERY,
+            injector=inj)
+    assert int(state.step) == N and log.restarts == 1
+    _assert_leaves_equal(_state_leaves(state), clean_run["state"])
+    assert obs.metrics.counter("recovery/retries_stall").value == 1
+    doc = json.load(open(bb))
+    notes = [n for n in doc["notes"] if n.get("note") == "driver/prefetch_error"
+             or n.get("kind") == "driver/prefetch_error"
+             or "prefetch_error" in str(n)]
+    assert notes, doc["notes"]
+    assert "ValueError" in json.dumps(notes)
+
+
+def test_driver_straggler_injection_is_wall_time_only(
+        guarded_fn, mesh8x1, model, clean_run):
+    fn, _ = guarded_fn
+    obs = _obs_with_metrics()
+    inj = FaultInjector(FaultPlan.single("straggler", 5, duration_s=0.05))
+    state, log = _drive(fn, mesh8x1, model, injector=inj, obs=obs)
+    assert int(state.step) == N
+    assert list(log.losses) == clean_run["losses"]     # numerics untouched
+    _assert_leaves_equal(_state_leaves(state), clean_run["state"])
+    assert obs.metrics.counter("faults/injected_straggler").value == 1
+    assert inj.fired_total == 1
+
+
+def test_driver_sigterm_clean_abort_with_blackbox(
+        guarded_fn, mesh8x1, model, tmp_path):
+    """SIGTERM mid-superstep: the recorder's chained handler dumps the
+    blackbox, then the previous handler aborts the run. The driver's
+    recovery path (Exception-only) must NOT swallow it."""
+    fn, _ = guarded_fn
+    bb = tmp_path / "bb.json"
+    obs = _obs_with_metrics(recorder_path=bb)
+
+    def die(signum, frame):
+        raise KeyboardInterrupt("SIGTERM")
+
+    prev = signal.signal(signal.SIGTERM, die)
+    try:
+        obs.recorder.install_signal_handlers(("SIGTERM",))
+        inj = FaultInjector(FaultPlan.single("sigterm", 2))
+        with pytest.raises(KeyboardInterrupt):
+            _drive(fn, mesh8x1, model, injector=inj, obs=obs,
+                   num_steps=4)
+        doc = json.load(open(bb))
+        assert doc["reason"] == "signal:SIGTERM"
+    finally:
+        obs.recorder.uninstall_signal_handlers()
+        signal.signal(signal.SIGTERM, prev)
+
+
+# --------------------------------------------------------------------------
+# guarded step: EF residual / optimizer / inflight preservation (§12.2)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lowering", ["manual", "spmd"])
+def test_guard_trip_preserves_state_bit_exact(mesh8x1, model, lowering):
+    """On a tripped step the apply is a no-op: params, optimizer moments,
+    EF residuals and the in-flight reduction are BIT-EQUAL to the
+    pre-step state (only the step counter advances), on both the manual
+    (cross-rank pmin) and auto-SPMD lowerings."""
+    with mesh8x1:
+        fn, _, plan = rt_pipeline.build_pipelined_step(
+            model, TCFG, mesh8x1, staleness=1, lowering=lowering,
+            guard=True, inject=True, donate=False, telemetry=False)
+        state, _ = init_state(model, TCFG, mesh8x1)
+        state = rt_pipeline.attach_inflight(state, plan, mesh8x1)
+        n_leaves = len(jax.tree.leaves(state.params))
+
+        def step(state, i, flag_val):
+            batch = jax.tree.map(jnp.asarray, synthetic_batch(DCFG, i))
+            batch[FAULT_KEY] = jnp.full((n_leaves,), flag_val, jnp.float32)
+            return fn(state, batch, jax.random.fold_in(KEY, i))
+
+        state, _ = step(state, 0, 0.0)             # warm: inflight nonzero
+        pre = _state_leaves(state)
+        pre_inflight = [np.asarray(x) for x in jax.tree.leaves(state.inflight)]
+        tripped, m = step(state, 1, 1.0)           # NaN every leaf
+        assert float(m["nonfinite"]) == 1.0
+        post = _state_leaves(tripped)
+        _assert_leaves_equal(post, pre)            # bit-exact no-op
+        for x, y in zip(jax.tree.leaves(tripped.inflight), pre_inflight):
+            np.testing.assert_array_equal(np.asarray(x), y)
+        assert int(tripped.step) == int(state.step) + 1
+        clean, m2 = step(tripped, 2, 0.0)          # recovery step applies
+        assert float(m2["nonfinite"]) == 0.0
+        assert all(np.isfinite(x).all() for x in
+                   jax.tree.leaves(jax.tree.map(np.asarray, clean.params)))
+
+
+# --------------------------------------------------------------------------
+# trainer integration: corrupt save -> CRC fallback mid-run
+# --------------------------------------------------------------------------
+
+def test_trainer_chaos_ckpt_corrupt_falls_back_and_completes(
+        mesh8x1, model, tmp_path):
+    from repro.train.trainer import Trainer
+
+    plan = FaultPlan(specs=(FaultSpec(kind="ckpt_corrupt", step=4),
+                            FaultSpec(kind="collective", step=5)))
+    inj = FaultInjector(plan)
+    obs = _obs_with_metrics()
+    tr = Trainer(model, TCFG, mesh8x1, DCFG, ckpt_dir=str(tmp_path / "ck"),
+                 ckpt_every=2, obs=obs)
+    log = tr.run_pipelined(N, staleness=0, superstep=1, depth=1, prefetch=1,
+                           guard=True, injector=inj, recovery=FAST_RECOVERY)
+    assert int(tr.state.step) == N
+    assert log.restarts == 1
+    m = obs.metrics
+    assert m.counter("faults/injected_ckpt_corrupt").value == 1
+    assert m.counter("faults/injected_collective").value == 1
+    assert m.counter("recovery/ckpt_fallbacks").value == 1
+    assert m.counter("recovery/retries_collective").value == 1
+    fb = m.events_named("recovery/ckpt_fallback")
+    assert fb and fb[0]["corrupt_step"] == 4 and fb[0]["step"] == 2
+
+
+# --------------------------------------------------------------------------
+# serve matrix: chaos ticks + graceful degradation
+# --------------------------------------------------------------------------
+
+def _serve_requests():
+    rng = np.random.default_rng(3)
+    return [Request(rid=i, prompt=rng.integers(0, 256, L),
+                    max_new_tokens=m, arrival=a)
+            for i, (L, m, a) in enumerate(
+                [(3, 6, 0), (5, 5, 0), (4, 6, 1), (6, 4, 2), (3, 5, 4)])]
+
+
+@pytest.fixture(scope="module")
+def mesh4x2():
+    return make_mesh((4, 2), ("data", "model"))
+
+
+@pytest.fixture(scope="module")
+def serve_eng(mesh4x2, model):
+    params = model.init(jax.random.PRNGKey(0))
+    return ContinuousServeEngine(model, mesh4x2, params, cache_len=32,
+                                 batch_size=4, dispatch="dense")
+
+
+@pytest.fixture(scope="module")
+def serve_clean(serve_eng):
+    res = serve_eng.run(_serve_requests())
+    return {rid: t.tolist() for rid, t in res.outputs.items()}
+
+
+def _same_outputs(got, want_lists):
+    assert set(got) == set(want_lists)
+    for rid in got:
+        assert got[rid].tolist() == want_lists[rid], rid
+
+
+def test_serve_collective_tick_retries_token_identical(serve_eng,
+                                                       serve_clean):
+    obs = _obs_with_metrics()
+    serve_eng.obs = obs
+    serve_eng.injector = FaultInjector(FaultPlan.single("collective", 2))
+    try:
+        res = serve_eng.run(_serve_requests())
+    finally:
+        serve_eng.injector = None
+    _same_outputs(res.outputs, serve_clean)        # token-identical
+    assert obs.metrics.counter("serve/retries").value == 1
+    assert obs.metrics.counter("faults/injected_collective").value == 1
+    assert obs.metrics.events_named("recovery/serve_retry")
+
+
+def test_serve_latency_faults_token_identical(serve_eng, serve_clean):
+    inj = FaultInjector(FaultPlan(specs=(
+        FaultSpec(kind="straggler", step=1, duration_s=0.03),
+        FaultSpec(kind="stall", step=3, duration_s=0.03))))
+    serve_eng.obs = obs_mod.Observability()
+    serve_eng.injector = inj
+    try:
+        res = serve_eng.run(_serve_requests())
+    finally:
+        serve_eng.injector = None
+    _same_outputs(res.outputs, serve_clean)
+    assert inj.fired_total == 2
+
+
+def test_serve_nonfinite_tick_aborts_with_blackbox(serve_eng, tmp_path):
+    """Decode state is donated: a post-dispatch-unsafe fault cannot be
+    retried in place — the engine aborts cleanly, blackbox first."""
+    bb = tmp_path / "bb.json"
+    obs = _obs_with_metrics(recorder_path=bb)
+    serve_eng.obs = obs
+    serve_eng.injector = FaultInjector(FaultPlan.single("nonfinite", 2))
+    try:
+        with pytest.raises(NonFiniteEscalation):
+            serve_eng.run(_serve_requests())
+    finally:
+        serve_eng.injector = None
+    doc = json.load(open(bb))
+    assert doc["reason"] == "exception:NonFiniteEscalation"
+
+
+def test_serve_sigterm_tick_aborts(serve_eng, tmp_path):
+    bb = tmp_path / "bb.json"
+    obs = _obs_with_metrics(recorder_path=bb)
+
+    def die(signum, frame):
+        raise KeyboardInterrupt("SIGTERM")
+
+    prev = signal.signal(signal.SIGTERM, die)
+    serve_eng.obs = obs
+    serve_eng.injector = FaultInjector(FaultPlan.single("sigterm", 1))
+    try:
+        obs.recorder.install_signal_handlers(("SIGTERM",))
+        with pytest.raises(KeyboardInterrupt):
+            serve_eng.run(_serve_requests())
+    finally:
+        serve_eng.injector = None
+        obs.recorder.uninstall_signal_handlers()
+        signal.signal(signal.SIGTERM, prev)
+    assert json.load(open(bb))["reason"] == "signal:SIGTERM"
+
+
+def test_serve_shedding_bounded_queue_and_deadline(serve_eng, serve_clean):
+    """Overload: 12 simultaneous arrivals into 4 slots with queue_limit=3
+    and a 2-step TTFT deadline. Served requests are token-identical to
+    the unloaded run; everything else is shed with full accounting."""
+    rng = np.random.default_rng(3)
+    reqs = [Request(rid=i, prompt=rng.integers(0, 256, 3 + i % 3),
+                    max_new_tokens=6, arrival=0.0) for i in range(12)]
+    obs = _obs_with_metrics()
+    serve_eng.obs = obs
+    serve_eng.serve_cfg = ServeConfig(slo_ttft_p99=2.0, queue_limit=3)
+    try:
+        res = serve_eng.run(reqs)
+        ref = serve_eng.run(reqs[:4])      # unloaded: the served four
+    finally:
+        serve_eng.serve_cfg = None
+        serve_eng.obs = obs_mod.Observability()
+    # slots absorb the first 4; queue keeps 3 more; 5 shed immediately,
+    # and the 3 queued ones outlive the 2-step TTFT deadline -> shed too
+    assert set(res.outputs) == {0, 1, 2, 3}
+    assert set(res.shed) == set(range(4, 12))
+    assert sorted(res.shed.values()).count("queue_full") == 5
+    assert sorted(res.shed.values()).count("deadline") == 3
+    assert not (set(res.outputs) & set(res.shed))
+    for rid in res.outputs:                # non-shed: token-identical
+        assert res.outputs[rid].tolist() == ref.outputs[rid].tolist()
+    m = obs.metrics
+    assert m.counter("serve/shed_requests").value == 8
+    assert m.counter("serve/shed_queue_full").value == 5
+    assert m.counter("serve/shed_deadline").value == 3
+    assert len(m.events_named("serve/shed")) == 8
+    backpressure = [e for e in res.health if e.rule == "serve_shed"]
+    assert backpressure and backpressure[0].severity == "warn"
+    assert backpressure[0].value == 8.0
+    # shed lifecycles never enter the latency distributions
+    assert sorted(res.latency) == ["e2e", "queue_delay", "tpot", "ttft"]
+
+
+# --------------------------------------------------------------------------
+# recovery-timeline report section
+# --------------------------------------------------------------------------
+
+def test_report_renders_recovery_timeline(tmp_path):
+    from repro.obs.report import load_metrics_jsonl, render
+
+    reg = MetricsRegistry(enabled=True)
+    reg.counter("faults/injected_nonfinite").inc()
+    reg.counter("guard/nonfinite_trips").inc(2)
+    reg.counter("recovery/retries_stall").inc()
+    reg.counter("serve/shed_requests").inc(3)
+    reg.event("faults/injected", fault="nonfinite", step=4)
+    reg.event("health/nonfinite", severity="critical", subject="grads",
+              step=4, message="non-finite grads: apply skipped")
+    reg.event("recovery/retry", cls="stall", step=5, attempt=1,
+              delay_s=0.01, error="PrefetchStalled")
+    reg.event("recovery/ckpt_fallback", step=2, corrupt_step=4)
+    reg.event("serve/shed", rid=7, reason="deadline", step=3.0)
+    reg.event("adapt/fault_demotion", buckets=["b0"], hold=4,
+              signature="b0=dense")
+    path = reg.dump_jsonl(str(tmp_path / "m.jsonl"))
+    out = render(path)
+    assert "-- recovery timeline --" in out
+    for needle in ("faults/injected", "health/nonfinite", "recovery/retry",
+                   "recovery/ckpt_fallback", "serve/shed",
+                   "adapt/fault_demotion", "guard/nonfinite_trips=2",
+                   "serve/shed_requests=3"):
+        assert needle in out, needle
+    # torn tail still renders (the writer crashed mid-line)
+    with open(path, "a") as f:
+        f.write('{"kind": "event", "event": "recovery/retr')
+    doc = load_metrics_jsonl(path)
+    assert len(doc["events"]) == 6
+    assert "-- recovery timeline --" in render(path)
